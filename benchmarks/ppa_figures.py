@@ -1,0 +1,100 @@
+"""PPA reproduction benchmarks — one function per paper figure/table.
+
+Each returns a list of CSV rows ``name,us_per_call,derived`` where
+``derived`` carries the normalized PPA triple the paper reports; the
+wall-clock of one full PPA evaluation is the ``us_per_call`` (this IS the
+paper's profiling framework, so its speed is the benchmark).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.pim.ppa import baseline, evaluate, normalized_ppa
+
+KB = 1024
+SYSTEMS = ("AiM-like", "Fused16", "Fused4")
+WORKLOADS = ("ResNet18_First8Layers", "ResNet18_Full")
+
+
+def _timed(system, wl, g, l):
+    t0 = time.perf_counter()
+    n = normalized_ppa(system, wl, g, l)
+    us = (time.perf_counter() - t0) * 1e6
+    return n, us
+
+
+def fig5_gbuf_sweep() -> list[str]:
+    """§V-B: GBUF 2K→64K, LBUF=0."""
+    rows = []
+    for wl in WORKLOADS:
+        for system in SYSTEMS:
+            for g in (2, 4, 8, 16, 32, 64):
+                n, us = _timed(system, wl, g * KB, 0)
+                rows.append(
+                    f"fig5/{wl}/{system}/G{g}K_L0,{us:.0f},"
+                    f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
+                    f"area={n['area']:.4f}")
+    return rows
+
+
+def fig6_lbuf_sweep() -> list[str]:
+    """§V-C: LBUF 0→1K, GBUF=2K."""
+    rows = []
+    for wl in WORKLOADS:
+        for system in SYSTEMS:
+            for l in (0, 64, 128, 256, 512, 1024):
+                n, us = _timed(system, wl, 2 * KB, l)
+                rows.append(
+                    f"fig6/{wl}/{system}/G2K_L{l},{us:.0f},"
+                    f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
+                    f"area={n['area']:.4f}")
+    return rows
+
+
+def fig7_joint_sweep() -> list[str]:
+    """§V-D: joint GBUF×LBUF, ResNet18_Full."""
+    rows = []
+    for system in SYSTEMS:
+        for g, l in ((2, 0), (8, 128), (16, 256), (32, 256), (64, 256),
+                     (64, 100 * KB)):
+            n, us = _timed(system, "ResNet18_Full", g * KB, l)
+            label = f"G{g}K_L{l if l < KB else str(l // KB) + 'K'}"
+            rows.append(
+                f"fig7/ResNet18_Full/{system}/{label},{us:.0f},"
+                f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
+                f"area={n['area']:.4f}")
+    return rows
+
+
+def headline() -> list[str]:
+    """Abstract / §V-D: Fused4 G32K_L256 vs paper 0.306/0.834/0.765."""
+    n, us = _timed("Fused4", "ResNet18_Full", 32 * KB, 256)
+    paper = {"cycles": 0.306, "energy": 0.834, "area": 0.765}
+    derived = ";".join(
+        f"{k}={n[k]:.4f}(paper {paper[k]})" for k in ("cycles", "energy",
+                                                      "area"))
+    return [f"headline/Fused4/G32K_L256,{us:.0f},{derived}"]
+
+
+def cross_bank_transfer() -> list[str]:
+    """Fig. 1 mechanism: cross-bank (GBUF-path) bytes, fused vs baseline."""
+    from repro.core.commands import cross_bank_bytes
+    from repro.pim.ppa import SYSTEMS as SYS, build_workload, trace_for
+    rows = []
+    for wl_name in WORKLOADS:
+        wl = build_workload(wl_name)
+        t0 = time.perf_counter()
+        base = cross_bank_bytes(trace_for("AiM-like", wl,
+                                          SYS["AiM-like"](2 * KB, 0)))
+        us = (time.perf_counter() - t0) * 1e6
+        for system in ("Fused16", "Fused4"):
+            b = cross_bank_bytes(trace_for(system, wl,
+                                           SYS[system](32 * KB, 256)))
+            rows.append(f"xbank/{wl_name}/{system},{us:.0f},"
+                        f"bytes={b};baseline={base};ratio={b / base:.4f}")
+    return rows
+
+
+ALL = (fig5_gbuf_sweep, fig6_lbuf_sweep, fig7_joint_sweep, headline,
+       cross_bank_transfer)

@@ -1,0 +1,52 @@
+"""Serving example: batched greedy decoding against a KV cache.
+
+Builds a reduced gemma2-style model (sliding-window + global attention,
+softcaps — the serving-relevant features), prefeeds prompts through the
+lock-step engine, decodes new tokens, and cross-checks the engine output
+against the full-sequence forward argmax.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import ServeEngine
+
+
+def main() -> None:
+    cfg = get_config("gemma2-2b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    B, plen, new = 4, 12, 16
+    prompts = [list(rng.integers(0, cfg.vocab_size, plen)) for _ in range(B)]
+
+    engine = ServeEngine(model, params, batch_slots=B, max_len=plen + new)
+    t0 = time.time()
+    outs = engine.run_lockstep(prompts, max_new=new)
+    dt = time.time() - t0
+    print(f"decoded {B}×{new} tokens in {dt:.2f}s "
+          f"({B * new / dt:.1f} tok/s on CPU interpret path)")
+    for i, o in enumerate(outs):
+        print(f"req{i}: {o}")
+
+    # cross-check: first generated token == argmax of the forward pass
+    toks = jnp.asarray(prompts, jnp.int32)
+    logits, _ = model.forward(params, {"tokens": toks})
+    expect = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+    got = np.asarray([o[0] for o in outs])
+    assert (expect == got).all(), (expect, got)
+    print("engine output matches forward argmax ✓")
+
+
+if __name__ == "__main__":
+    main()

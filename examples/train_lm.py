@@ -1,0 +1,95 @@
+"""End-to-end training driver: data pipeline → sharded train loop →
+checkpoint/restart → metrics.
+
+Default runs a ~10M-param LM for 30 steps on CPU in a couple of minutes;
+``--full`` trains the ~100M-param config for ``--steps`` steps (the
+assignment's end-to-end driver; on TPU this is the same entry point with
+the production mesh).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 30] [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import batch_for_step
+from repro.models import build_model
+from repro.models.api import param_count
+from repro.optim.adamw import AdamWConfig
+from repro.train.fault_tolerance import run_restartable
+from repro.train.trainer import (TrainStepConfig, init_train_state,
+                                 make_train_step)
+
+
+def model_config(full: bool):
+    base = get_config("minicpm-2b")          # WSD schedule showcase
+    if full:
+        # ~100M params: 12L × d512 × ff2048, 32k vocab
+        return dataclasses.replace(
+            base, name="lm-100m", num_layers=12, d_model=512, num_heads=8,
+            num_kv_heads=8, head_dim=64, d_ff=2048, vocab_size=32768,
+            dtype="float32", param_dtype="float32")
+    return dataclasses.replace(
+        base, name="lm-10m", num_layers=4, d_model=256, num_heads=4,
+        num_kv_heads=4, head_dim=64, d_ff=1024, vocab_size=8192,
+        dtype="float32", param_dtype="float32")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = model_config(args.full)
+    model = build_model(cfg)
+    ts = TrainStepConfig(opt=AdamWConfig(lr=3e-4),
+                         schedule_warmup=max(2, args.steps // 10),
+                         schedule_total_steps=args.steps,
+                         microbatch=0, remat=False)
+    step_fn = jax.jit(make_train_step(model, ts))
+
+    def init_state():
+        params = model.init(jax.random.PRNGKey(0))
+        print(f"model {cfg.name}: {param_count(params) / 1e6:.1f}M params, "
+              f"schedule={cfg.lr_schedule}")
+        return init_train_state(model, params, ts)
+
+    t0 = time.time()
+    losses = []
+
+    def step_and_log(state, batch):
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        k = len(losses)
+        if k % 5 == 0 or k == 1:
+            print(f"step {k:4d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"({(time.time() - t0) / k:.2f}s/step)")
+        return state, metrics
+
+    report = run_restartable(
+        train_step=step_and_log,
+        init_state=init_state,
+        batches=lambda s: batch_for_step(cfg, s, args.batch, args.seq),
+        ckpt_dir=args.ckpt_dir,
+        total_steps=args.steps,
+        ckpt_every=max(10, args.steps // 3),
+    )
+    print(f"\ndone: {report.steps_done} steps, {report.restarts} restarts, "
+          f"loss {losses[0]:.3f} → {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

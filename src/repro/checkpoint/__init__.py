@@ -1,0 +1,6 @@
+"""Sharded, atomic, async checkpointing with reshard-on-restore."""
+
+from repro.checkpoint.ckpt import (CheckpointManager, restore_checkpoint,
+                                   save_checkpoint)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,10 @@
+"""Architecture configs: one module per assigned architecture.
+
+``get_config(name)`` resolves an architecture id (e.g. ``qwen3-32b``) to its
+:class:`repro.configs.base.ModelConfig`; ``--smoke`` variants are reduced
+same-family configs for CPU tests.
+"""
+
+from repro.configs.base import ARCH_REGISTRY, ModelConfig, get_config, list_archs
+
+__all__ = ["ModelConfig", "get_config", "list_archs", "ARCH_REGISTRY"]

@@ -1,0 +1,13 @@
+"""ResNet18 — the paper's own benchmark (§V).  CNN config consumed by
+repro.models.resnet + the PIM PPA framework; not part of the LM cells."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="resnet18",
+    family="cnn",
+    num_layers=18,
+    vocab_size=1000,          # classifier classes
+    dtype="float32",
+    param_dtype="float32",
+)

@@ -1,0 +1,82 @@
+"""Custom PIM command IR (Table I) and aggregate command traces.
+
+The dataflow mappers emit one aggregate ``Command`` per (layer × transfer
+phase) rather than per-burst DRAM commands: each record carries total payload
+bytes, the parallelism class (sequential GBUF path vs parallel near-bank
+path), and operand-streaming byte counts for compute commands.  The timing
+and energy models consume these records; this is the same level of modelling
+fidelity as the paper's extended-Ramulator2 traces for *relative* PPA, while
+keeping end-to-end evaluation fast enough for buffer-size sweeps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class CMD(enum.Enum):
+    """Table I custom commands."""
+
+    PIMCORE_CMP = "PIMcore_CMP"    # fused ops in all PIMcores (parallel)
+    GBCORE_CMP = "GBcore_CMP"      # ops in the channel-level GBcore
+    PIM_BK2LBUF = "PIM_BK2LBUF"    # banks → LBUFs, all PIMcores parallel
+    PIM_LBUF2BK = "PIM_LBUF2BK"    # LBUFs → banks, all PIMcores parallel
+    PIM_BK2GBUF = "PIM_BK2GBUF"    # one bank at a time → GBUF (sequential)
+    PIM_GBUF2BK = "PIM_GBUF2BK"    # GBUF → one bank at a time (sequential)
+
+
+# execution flags for CMP commands (Table I note)
+PIMCORE_FLAGS = ("CONV_BN", "CONV_BN_RELU", "POOL", "ADD_RELU")
+GBCORE_FLAGS = ("POOL", "ADD_RELU")
+
+
+@dataclasses.dataclass(frozen=True)
+class Command:
+    kind: CMD
+    layer: str                      # producing layer / phase label
+    flag: str = ""                  # execution flag for CMP kinds
+    bytes_total: int = 0            # payload bytes summed over all banks
+    # compute payload (CMP kinds)
+    macs: int = 0
+    alu_ops: int = 0
+    # operand streaming during CMP, per parallelism class
+    bank_stream_bytes: int = 0      # per-core near-bank reads (parallel)
+    gbuf_stream_bytes: int = 0      # broadcast reads out of GBUF (shared)
+    lbuf_stream_bytes: int = 0      # LBUF reads/writes (per-core, parallel)
+    # portion of bytes_total / bank_stream_bytes that re-reads DRAM rows
+    # already open (row-buffer hits): same bus occupancy, cheaper energy
+    restream_bytes: int = 0
+    concurrent_cores: int = 1       # cores active for parallel commands
+    note: str = ""
+
+    def validate(self) -> None:
+        if self.kind in (CMD.PIMCORE_CMP,) and self.flag not in PIMCORE_FLAGS:
+            raise ValueError(f"bad PIMcore flag {self.flag}")
+        if self.kind is CMD.GBCORE_CMP and self.flag not in GBCORE_FLAGS:
+            raise ValueError(f"bad GBcore flag {self.flag}")
+        if self.bytes_total < 0 or self.macs < 0:
+            raise ValueError("negative payload")
+
+
+Trace = list[Command]
+
+
+def trace_summary(trace: Trace) -> dict[str, dict[str, int]]:
+    """Aggregate byte/op totals per command kind (for reports and tests)."""
+    out: dict[str, dict[str, int]] = {}
+    for c in trace:
+        d = out.setdefault(c.kind.value, {"count": 0, "bytes": 0, "macs": 0,
+                                          "alu_ops": 0})
+        d["count"] += 1
+        d["bytes"] += c.bytes_total
+        d["macs"] += c.macs
+        d["alu_ops"] += c.alu_ops
+    return out
+
+
+def cross_bank_bytes(trace: Trace) -> int:
+    """Total bytes moved over the sequential GBUF path — the paper's
+    cross-bank data transfer metric (Fig. 1)."""
+    return sum(c.bytes_total for c in trace
+               if c.kind in (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK))

@@ -1,0 +1,297 @@
+"""Dataflow mappers: CNN graph + fusion plan + PIMArch → command traces.
+
+Two mappers, mirroring §IV:
+
+* ``map_layer_by_layer`` — the conventional dataflow (Fig. 3b): PIMcores
+  compute cout-partitioned CONV layers with activations broadcast from the
+  GBUF; POOL/ADD run on the GBcore (AiM-like) or on PIMcores (PIMfused archs
+  with ``pimcore_has_pool_add``).  Every layer boundary re-gathers the
+  activation map through the sequential GBUF path — the cross-bank transfer
+  the paper targets.
+
+* ``map_fused_group`` — the fused-layer dataflow (Fig. 3c): PIMcores own
+  (ox,oy) tiles, intermediates stay in LBUF/local banks, weights broadcast
+  through the GBUF, with a boundary reorganisation at group edges.
+
+Modelled cost mechanisms (each mirrors a paper observation; constants live
+in :class:`repro.pim.arch.PIMArch` and are identical across systems):
+
+* **Accumulation depth** — a PIMcore keeps ``positions-in-flight`` partial
+  sums: ``max(accum_regs, lbuf/(2·dtype))`` (the LBUF doubles as partial-sum
+  store).  A conv layer is processed in ``passes = ceil(positions/flight)``
+  weight passes; every pass re-streams the layer's weights.
+* **Layer-by-layer weight streaming** — weights stream from each core's own
+  bank; an LBUF additionally captures the per-tap cin-vector working set
+  (``tap_ws = cin·dtype·2``), so tiny LBUFs already cut re-streaming
+  (AiM-like improves with LBUF — §V-C).
+* **Fused-layer weight broadcast** — weights stream from the GBUF; the GBUF
+  *retains* ``min(gbuf, W_layer)`` bytes between passes, so only the
+  remainder is re-fetched over the sequential bank→GBUF path.  Larger GBUF ⇒
+  fewer cross-bank bytes (fused curves fall with GBUF — §V-B), saturating
+  once the GBUF holds a whole layer's weights.
+* **Activation locality (fused)** — intermediates live in the LBUF when the
+  tile working set fits, else the overflow spills to the core's local bank
+  (parallel near-bank path: cheap cycles, extra DRAM energy).
+* **Activation broadcast (layer-by-layer)** — each input element enters the
+  GBUF once provided gbuf ≥ a 2 KB streaming strip (AiM's design point,
+  §V-B obs. 1); smaller GBUFs pay proportional re-fill.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.commands import CMD, Command, Trace
+from repro.core.fusion import FusedGroup, FusionPlan
+from repro.core.graph import Graph, Layer, OpKind
+from repro.core.tiling import tile_group
+from repro.pim.arch import PIMArch
+
+# GBUF streaming strip that suffices for layer-by-layer activation reuse
+# (AiM design point: 2 KB GBUF "already suffices", §V-B obs. 1).
+ACT_STRIP_BYTES = 2 * 1024
+
+
+def _w_bytes(layer: Layer, arch: PIMArch) -> int:
+    return layer.weight_elems * arch.dtype_bytes
+
+
+def _positions_in_flight(arch: PIMArch) -> int:
+    """Partial sums a PIMcore can keep live (accumulators + LBUF)."""
+    return max(arch.accum_regs, arch.lbuf_bytes // (2 * arch.dtype_bytes))
+
+
+def _act_stream_factor(arch: PIMArch) -> float:
+    """GBUF fill multiplier for layer-by-layer activation broadcast."""
+    return max(1.0, ACT_STRIP_BYTES / max(arch.gbuf_bytes, 1))
+
+
+# ---------------------------------------------------------------------------
+# Layer-by-layer dataflow (Fig. 3b)
+# ---------------------------------------------------------------------------
+
+def map_layer_by_layer(graph: Graph, arch: PIMArch,
+                       start: int = 0, stop: int | None = None) -> Trace:
+    trace: Trace = []
+    stop = len(graph) if stop is None else stop
+    cores = arch.num_pimcores
+    dt = arch.dtype_bytes
+    flight = _positions_in_flight(arch)
+
+    for i in range(start, stop):
+        l = graph[i]
+        in_bytes = l.in_elems * dt
+        out_bytes = l.out_elems * dt
+
+        if l.kind.is_conv or l.kind is OpKind.FC:
+            # (1) gather + broadcast input activations through GBUF
+            fill = int(in_bytes * _act_stream_factor(arch))
+            trace.append(Command(CMD.PIM_BK2GBUF, l.name, bytes_total=fill,
+                                 note="activation gather"))
+            # (2) MAC on PIMcores: weights stream from local banks; the
+            # LBUF captures the per-tap cin-vector between positions.
+            positions = l.oy * l.ox
+            passes = max(1, math.ceil(positions / flight))
+            wpc = _w_bytes(l, arch) / cores              # per-core slice
+            tap_ws = l.cin * dt * 2
+            capture = min(1.0, arch.lbuf_bytes / tap_ws) if tap_ws else 1.0
+            w_stream = int(wpc * (1.0 + (passes - 1) * (1.0 - capture)))
+            trace.append(Command(
+                CMD.PIMCORE_CMP, l.name,
+                flag="CONV_BN_RELU" if l.kind is OpKind.CONV_BN_RELU else "CONV_BN",
+                macs=l.macs, bank_stream_bytes=w_stream,
+                restream_bytes=max(0, w_stream - int(wpc)),  # row-buffer hits
+                gbuf_stream_bytes=int(in_bytes * l.kh * l.kw
+                                      / max(l.stride, 1) ** 2),
+                concurrent_cores=cores, note="cout-partitioned conv"))
+            # (3) outputs written to local banks (parallel near-bank path)
+            trace.append(Command(CMD.PIM_LBUF2BK, l.name, bytes_total=out_bytes,
+                                 concurrent_cores=cores, note="writeback"))
+        elif l.kind.is_pool or l.kind is OpKind.ADD_RELU:
+            flag = l.kind.pimcore_flag or "POOL"
+            res_bytes = out_bytes if l.residual_of else 0
+            if arch.pimcore_has_pool_add and l.kind is OpKind.ADD_RELU:
+                # PIMfused: ADD_RELU runs near-bank (operands co-located
+                # under cout partitioning)
+                trace.append(Command(CMD.PIM_BK2LBUF, l.name,
+                                     bytes_total=in_bytes + res_bytes,
+                                     concurrent_cores=cores, note="operands"))
+                trace.append(Command(CMD.PIMCORE_CMP, l.name, flag=flag,
+                                     alu_ops=l.alu_ops,
+                                     lbuf_stream_bytes=(in_bytes + res_bytes
+                                                        + out_bytes) // cores,
+                                     concurrent_cores=cores))
+                trace.append(Command(CMD.PIM_LBUF2BK, l.name,
+                                     bytes_total=out_bytes,
+                                     concurrent_cores=cores))
+            else:
+                # AiM-like: POOL/ADD on the GBcore via sequential GBUF hops
+                trace.append(Command(CMD.PIM_BK2GBUF, l.name,
+                                     bytes_total=in_bytes + res_bytes,
+                                     note="GBcore operands"))
+                trace.append(Command(CMD.GBCORE_CMP, l.name,
+                                     flag=l.kind.gbcore_flag or "POOL",
+                                     alu_ops=l.alu_ops,
+                                     gbuf_stream_bytes=in_bytes + res_bytes
+                                     + out_bytes))
+                trace.append(Command(CMD.PIM_GBUF2BK, l.name,
+                                     bytes_total=out_bytes,
+                                     note="GBcore writeback"))
+        else:  # pragma: no cover - exhaustive over OpKind
+            raise ValueError(f"unmapped layer kind {l.kind}")
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# Fused-layer dataflow (Fig. 3c)
+# ---------------------------------------------------------------------------
+
+def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch) -> Trace:
+    group = graph.slice(g.start, g.stop)
+    dt = arch.dtype_bytes
+    cores = arch.num_pimcores
+    if g.num_tiles != cores:
+        raise ValueError(f"fused group tile count {g.num_tiles} != cores {cores}")
+    t = tile_group(group, g.tiles_y, g.tiles_x)
+    flight = _positions_in_flight(arch)
+    trace: Trace = []
+
+    # (1) spatial partitioning of the group input: each core fetches its
+    # exact region from its local banks (parallel); halo rows live in
+    # neighbouring banks → cross-bank via GBUF.
+    first = group[0]
+    exact_in = first.cin * first.iy * first.ix * dt
+    halo_in = sum(t.tile_input_elems(i) for i in range(t.num_tiles)) * dt \
+        - exact_in
+    trace.append(Command(CMD.PIM_BK2LBUF, f"{group.name}:input",
+                         bytes_total=exact_in, concurrent_cores=cores,
+                         note="tile-local input fetch"))
+    if halo_in > 0:
+        trace.append(Command(CMD.PIM_BK2GBUF, f"{group.name}:halo",
+                             bytes_total=halo_in, note="input halo exchange"))
+
+    # (2+3) per-layer: weight broadcast via GBUF, compute over each core's
+    # tile, intermediates in LBUF else local-bank spill.  For each conv the
+    # mapper picks the cheaper of two loop orders (a software decision the
+    # trace generator makes offline, like the paper's mapping step):
+    #
+    #   mode A (cout-blocked): weights enter the GBUF once, in blocks of at
+    #     most gbuf bytes; each block sweeps the core's whole input tile, so
+    #     the input patch is RE-READ once per block from LBUF/local bank
+    #     (parallel path).  Bigger GBUF ⇒ fewer blocks (Fig. 5 fused trend).
+    #   mode B (position-blocked): the core holds partial sums for
+    #     ``flight`` positions (registers + LBUF) and the layer's weights
+    #     re-fill the GBUF once per position pass, minus what the GBUF
+    #     retains (sequential path).  Bigger LBUF ⇒ fewer passes (Fig. 6
+    #     fused trend, saturating once flight ≈ tile positions).
+    peak = max(t.tile_peak_live_elems(i) * dt for i in range(t.num_tiles))
+    spill_frac = max(0.0, 1.0 - arch.lbuf_bytes / max(peak, 1))
+    for l in group:
+        tile_positions = max(t.computed[i][l.name].elems_hw
+                             for i in range(t.num_tiles))
+        w_l = _w_bytes(l, arch)
+        macs = sum(l.cout * l.cin * l.kh * l.kw
+                   * t.computed[i][l.name].elems_hw
+                   for i in range(t.num_tiles)) if l.kind.is_conv else 0
+        alu = 0
+        if l.kind.is_pool:
+            alu = sum(l.cout * l.kh * l.kw * t.computed[i][l.name].elems_hw
+                      for i in range(t.num_tiles))
+        elif l.kind is OpKind.ADD_RELU:
+            alu = sum(2 * l.cout * t.computed[i][l.name].elems_hw
+                      for i in range(t.num_tiles))
+        out_b = sum(l.cout * t.computed[i][l.name].elems_hw
+                    for i in range(t.num_tiles)) * dt
+        in_b = sum(l.cin * t.computed[i][l.name].elems_hw
+                   for i in range(t.num_tiles)) * dt
+
+        if l.kind.is_conv and w_l > 0:
+            # ---- mode A: cout-blocked, input re-read per weight block ----
+            blocks = max(1, math.ceil(w_l / max(arch.gbuf_bytes, 1)))
+            patch = l.cin * l.kh * l.kw * dt          # im2col window
+            cap_a = min(1.0, arch.lbuf_bytes / patch) if patch else 1.0
+            reread_a = int(in_b * (blocks - 1) * (1.0 - cap_a))
+            seq_a, par_a = w_l, reread_a
+            # ---- mode B: position-blocked, weight refill per pass ----
+            passes = max(1, math.ceil(tile_positions / flight))
+            retention = min(1.0, arch.gbuf_bytes / w_l)
+            fill_b = int(w_l * (1.0 + (passes - 1) * (1.0 - retention)))
+            seq_b, par_b = fill_b, 0
+            # pick by estimated memory cycles
+            est_a = seq_a / arch.bus_bytes_per_cycle \
+                + par_a / cores / arch.core_bank_bytes_per_cycle
+            est_b = seq_b / arch.bus_bytes_per_cycle
+            if est_a <= est_b:
+                mode, seq_fill, par_reread = "A", seq_a, par_a
+                seq_restream = 0
+            else:
+                mode, seq_fill, par_reread = "B", seq_b, 0
+                seq_restream = max(0, fill_b - w_l)
+            trace.append(Command(CMD.PIM_BK2GBUF, f"{group.name}:{l.name}:w",
+                                 bytes_total=seq_fill,
+                                 restream_bytes=seq_restream,
+                                 note=f"weight broadcast mode={mode}"))
+            if par_reread:
+                trace.append(Command(CMD.PIM_BK2LBUF,
+                                     f"{group.name}:{l.name}:reread",
+                                     bytes_total=par_reread,
+                                     restream_bytes=par_reread,
+                                     concurrent_cores=cores,
+                                     note="input re-read per weight block"))
+        else:
+            mode = "-"
+
+        # activation traffic: LBUF-resident share vs local-bank spill
+        spill_b = int((out_b + in_b) * spill_frac)
+        trace.append(Command(
+            CMD.PIMCORE_CMP, f"{group.name}:{l.name}",
+            flag=l.kind.pimcore_flag or "CONV_BN",
+            macs=macs, alu_ops=alu,
+            bank_stream_bytes=spill_b // cores,
+            gbuf_stream_bytes=w_l,                   # broadcast (overlapped)
+            lbuf_stream_bytes=int((out_b + in_b) * (1 - spill_frac)) // cores,
+            concurrent_cores=cores, note=f"fused mode={mode}"))
+
+    # (4) final outputs to local banks (exact partition, no overlap)
+    last = group[len(group) - 1]
+    trace.append(Command(CMD.PIM_LBUF2BK, f"{group.name}:output",
+                         bytes_total=last.out_elems * dt,
+                         concurrent_cores=cores))
+    return trace
+
+
+def map_boundary_reorg(graph: Graph, prev_stop: int, arch: PIMArch,
+                       next_fused: bool) -> Trace:
+    """Fused-kernel boundary: reorganise intermediate data for the next
+    kernel (orange boxes, Fig. 3c).  Spatial→spatial needs only the halo
+    rows crossing tile edges; spatial→cout (fused → layer-by-layer)
+    re-distributes the full map through the GBUF."""
+    l = graph[prev_stop - 1]
+    dt = arch.dtype_bytes
+    fmap = l.out_elems * dt
+    moved = fmap // 4 if next_fused else fmap
+    return [
+        Command(CMD.PIM_BK2GBUF, f"{l.name}:reorg_in", bytes_total=moved,
+                note="boundary reorganisation"),
+        Command(CMD.PIM_GBUF2BK, f"{l.name}:reorg_out", bytes_total=moved,
+                note="boundary reorganisation"),
+    ]
+
+
+def map_pimfused(plan: FusionPlan, arch: PIMArch) -> Trace:
+    """End-to-end PIMfused hybrid dataflow (§IV, Fig. 3c)."""
+    g = plan.graph
+    trace: Trace = []
+    for gi, grp in enumerate(plan.groups):
+        trace += map_fused_group(g, grp, arch)
+        next_fused = gi + 1 < len(plan.groups)
+        if next_fused or plan.tail_start < len(g):
+            trace += map_boundary_reorg(g, grp.stop, arch, next_fused)
+    if plan.tail_start < len(g):
+        trace += map_layer_by_layer(g, arch, start=plan.tail_start)
+    return trace
+
+
+def map_baseline(graph: Graph, arch: PIMArch) -> Trace:
+    """AiM-like end-to-end layer-by-layer dataflow (Fig. 3b)."""
+    return map_layer_by_layer(graph, arch)

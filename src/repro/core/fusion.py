@@ -1,0 +1,139 @@
+"""Fusion planner: partition a CNN graph into fused kernels + layer-by-layer tail.
+
+Implements the paper's hybrid strategy (§IV): fused-layer execution for
+shallow layers (large spatial extents), layer-by-layer for deep layers.  The
+divisibility rule reproduces the paper's ResNet18 splits exactly:
+
+* Fused16 (4×4 tile grid):  fused kernels = layers [0:8), [8:15); stage 3's
+  14×14 output does not divide by 4 → layer-by-layer from L15.
+* Fused4 (2×2 tile grid):   fused kernels = [0:8), [8:15), [15:22); stage 4's
+  7×7 output does not divide by 2 → layer-by-layer from L22.
+
+A fused group must also end at a "clean" tensor: no later layer may consume a
+tensor produced strictly inside the group (residual edges must not cross the
+boundary), which is why groups align with ResNet stage boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.graph import Graph, OpKind
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedGroup:
+    start: int                    # inclusive layer index
+    stop: int                     # exclusive
+    tiles_y: int
+    tiles_x: int
+
+    @property
+    def num_tiles(self) -> int:
+        return self.tiles_y * self.tiles_x
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionPlan:
+    """Fused groups (in order) + the layer-by-layer tail [tail_start, len)."""
+
+    graph: Graph
+    groups: tuple[FusedGroup, ...]
+    tail_start: int
+
+    def describe(self) -> str:
+        parts = [
+            f"group[{g.start}:{g.stop}) tiles={g.tiles_y}x{g.tiles_x}"
+            for g in self.groups
+        ]
+        parts.append(f"layer-by-layer[{self.tail_start}:{len(self.graph)})")
+        return " | ".join(parts)
+
+
+def _residual_crossings(g: Graph, start: int, stop: int) -> bool:
+    """True if any layer outside [start, stop) consumes a tensor inside it,
+    or a layer inside consumes a tensor strictly before ``start`` other than
+    the group input (output of layer start-1)."""
+    names_in = {g[i].name for i in range(start, stop)}
+    group_input = g[start - 1].name if start > 0 else None
+    for i, l in enumerate(g):
+        srcs = []
+        if l.input_of is not None:
+            srcs.append(l.input_of)
+        elif i > 0:
+            srcs.append(g[i - 1].name)
+        if l.residual_of is not None:
+            srcs.append(l.residual_of)
+        for s in srcs:
+            inside_src = s in names_in
+            inside_consumer = start <= i < stop
+            if inside_src and not inside_consumer:
+                # the last layer's output is the group output; allowed
+                if s != g[stop - 1].name:
+                    return True
+            if inside_consumer and not inside_src:
+                if s != group_input and i != start:
+                    # reading a remote earlier tensor from inside the group
+                    if s != group_input:
+                        return True
+    return False
+
+
+def plan_fused(graph: Graph, tiles_y: int, tiles_x: int,
+               min_group_len: int = 2, stage_aligned: bool = True) -> FusionPlan:
+    """Greedy planner: grow fused groups from the front of the graph while
+    (a) the group's final output extent divides the tile grid evenly,
+    (b) every spatial layer keeps an output extent ≥ the tile grid,
+    (c) no residual edge crosses the group boundary, and
+    (d) the layer is PIMcore-executable (everything except FC/global pools).
+
+    With ``stage_aligned`` (default), a group also closes before a strided
+    conv once the group already contains a residual ADD — i.e. groups align
+    with ResNet stage boundaries, which keeps the receptive-field halo of a
+    group bounded by one stage's downsampling.  This reproduces the paper's
+    ResNet18 splits exactly: 8+7 fused layers for Fused16 (4×4 tiles) and
+    8+7+7 for Fused4 (2×2 tiles), with the remainder layer-by-layer (§V-3).
+
+    Falls back to layer-by-layer for the rest (the paper's hybrid, §IV).
+    """
+    groups: list[FusedGroup] = []
+    i = 0
+    n = len(graph)
+    while i < n:
+        # hard boundary from the stage-alignment rule
+        limit = n
+        if stage_aligned:
+            seen_add = False
+            for j in range(i, n):
+                l = graph[j]
+                if l.kind is OpKind.ADD_RELU:
+                    seen_add = True
+                if j > i and seen_add and l.kind.is_conv and l.stride > 1:
+                    limit = j
+                    break
+        # find the largest valid stop > i
+        best_stop = None
+        for stop in range(limit, i + min_group_len - 1, -1):
+            seg_ok = True
+            for j in range(i, stop):
+                l = graph[j]
+                if l.kind is OpKind.FC or (l.kind.is_pool and l.oy == 1):
+                    seg_ok = False  # classifier head: never fused
+                    break
+                if l.oy < tiles_y or l.ox < tiles_x:
+                    seg_ok = False
+                    break
+            if not seg_ok:
+                continue
+            last = graph[stop - 1]
+            if last.oy % tiles_y or last.ox % tiles_x:
+                continue
+            if _residual_crossings(graph, i, stop):
+                continue
+            best_stop = stop
+            break
+        if best_stop is None:
+            break
+        groups.append(FusedGroup(i, best_stop, tiles_y, tiles_x))
+        i = best_stop
+    return FusionPlan(graph=graph, groups=tuple(groups), tail_start=i)

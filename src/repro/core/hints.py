@@ -1,0 +1,84 @@
+"""Sharding hints: perf-pass `with_sharding_constraint` injection points.
+
+The §Perf hillclimb showed GSPMD propagation alone mis-shards specific
+regions (involuntary full rematerialisation around the GQA head reshape +
+qk-norm, residual-stream re-sharding under sequence sharding).  Models call
+``hint(tag, x)`` at those points; by default it is the identity, and a
+policy's perf mode installs a tag→PartitionSpec table via
+``sharding_hints(...)`` so the constraint lands without threading policy
+objects through every layer.
+
+Tags used by the model zoo:
+    qkv        — (B, S, heads, head_dim) right after the head reshape
+    attn_out   — (B, S, heads, head_dim) attention output pre-merge
+    residual   — (B, S, d_model) the residual stream between blocks
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable
+
+import jax
+
+_HINTS: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "sharding_hints", default=None)
+
+
+def _sharded_axes(spec) -> int:
+    return sum(1 for p in spec if p is not None)
+
+
+def hint(tag: str, x):
+    table = _HINTS.get()
+    if not table:
+        return x
+    cand = table.get(tag)
+    if cand is None:
+        return x
+    from repro.core.policies import repair_spec
+    mesh = jax.sharding.get_abstract_mesh()
+    if not mesh.shape:                      # no mesh context → no-op
+        return x
+    # cascade: candidates in preference order; pick the survivor that keeps
+    # the most sharded axes after divisibility repair (e.g. head-sharding
+    # falls back to head-DIM sharding when heads < mesh axis)
+    specs = cand if isinstance(cand, (list, tuple)) else [cand]
+    best = None
+    for s in specs:
+        r = repair_spec(s, x.shape, mesh)
+        if best is None or _sharded_axes(r) > _sharded_axes(best):
+            best = r
+    return jax.lax.with_sharding_constraint(x, best)
+
+
+@contextlib.contextmanager
+def sharding_hints(table: dict):
+    tok = _HINTS.set(table)
+    try:
+        yield
+    finally:
+        _HINTS.reset(tok)
+
+
+def tp_hints(dp) -> dict:
+    """Perf hints for the layerwise_tp policy (head-sharded activations,
+    falling back to head-DIM sharding for few-head archs)."""
+    from jax.sharding import PartitionSpec as P
+    return {
+        "qkv": [P(dp, None, "model", None), P(dp, None, None, "model")],
+        "attn_out": [P(dp, None, "model", None),
+                     P(dp, None, None, "model")],
+        "residual": P(dp, None, None),
+    }
+
+
+def fused_seq_hints(dp) -> dict:
+    """Perf hints for fused_seq (sequence-sharded residual stream)."""
+    from jax.sharding import PartitionSpec as P
+    return {
+        "qkv": P(dp, "model", None, None),
+        "attn_out": P(dp, "model", None, None),
+        "residual": P(dp, "model", None),
+    }

@@ -1,0 +1,286 @@
+"""Sharding policies: the paper's dataflow dichotomy on a TPU mesh.
+
+Two first-class policies (DESIGN.md §2.2):
+
+* ``layerwise_tp`` — the LAYER-BY-LAYER analogue: parameters are
+  operand-partitioned over the ``model`` axis (attention heads / FFN
+  columns ↔ the paper's cout partitioning).  Activations are replicated
+  over ``model``, so every layer boundary re-gathers activations — the
+  all-gather/reduce-scatter pairs GSPMD inserts are this policy's
+  "cross-bank transfers".
+
+* ``fused_seq`` — the FUSED-LAYER analogue: the residual stream stays
+  SEQUENCE-sharded over ``model`` across consecutive layers (sequence ↔ the
+  paper's (ox,oy) spatial tiling).  Weights are broadcast (replicated ↔ the
+  GBUF weight broadcast); token-local ops (norms, MLPs, element-wise, SSM
+  chunk scans) run with zero collectives; only the mixing boundary op
+  (attention K/V, MoE dispatch) communicates.
+
+Specs are produced by NAME-BASED rules over the parameter pytree; leading
+layer-stack dimensions are inferred from rank (ndim − canonical rank), so
+the same rules cover flat, L-stacked and (U, I)-unit-stacked parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# canonical (unstacked) matmul leaves: (in, out)
+_MAT2 = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_i", "w_f",
+         "w_o", "w_z", "in_proj", "out_proj", "lm_head", "router", "fc_w"}
+_TP_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_i", "w_f", "w_o", "w_z",
+           "lm_head", "in_proj"}
+_TP_ROW = {"wo", "w_down", "out_proj"}
+_EXPERT3 = {"w_gate", "w_up", "w_down"}          # MoE: (E, d, f) canonical
+_KV_LEAVES = {"k", "v", "xk", "xv"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+    return names
+
+
+def _lead(x, canonical: int) -> list[None]:
+    return [None] * max(0, x.ndim - canonical)
+
+
+def _pad(spec_parts: list, ndim: int) -> P:
+    parts = spec_parts + [None] * (ndim - len(spec_parts))
+    return P(*parts[:ndim])
+
+
+def _axes_size(mesh: Mesh, part) -> int:
+    if part is None:
+        return 1
+    names = (part,) if isinstance(part, str) else tuple(part)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def repair_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop (partially, if a tuple) any axis assignment whose mesh size does
+    not divide the tensor dim — e.g. batch=1 cells can't take the data
+    axes, odd vocabs can't take the model axis."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            out.append(None)
+            continue
+        names = (part,) if isinstance(part, str) else tuple(part)
+        kept: list[str] = []
+        size = 1
+        for n in names:
+            if dim % (size * mesh.shape[n]) == 0:
+                kept.append(n)
+                size *= mesh.shape[n]
+        out.append(tuple(kept) if len(kept) > 1 else
+                   (kept[0] if kept else None))
+    return P(*out)
+
+
+
+
+
+def _is_expert_leaf(names: list[str]) -> bool:
+    return "moe" in names and names[-1] in _EXPERT3 and "shared" not in names
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Produces PartitionSpecs for params / batch / cache / logits."""
+
+    name: str
+    mesh: Mesh
+    cfg: ModelConfig
+
+    def _dp(self):
+        axes = tuple(a for a in self.mesh.axis_names if a in ("pod", "data"))
+        return axes if len(axes) != 1 else axes[0]
+
+    def param_spec(self, params: Any) -> Any:
+        raise NotImplementedError
+
+    def batch_spec(self, batch: Any) -> Any:
+        dp = self._dp()
+
+        def rule(path, x):
+            names = _path_names(path)
+            if names and names[-1] in ("tokens", "labels") and x.ndim >= 2 \
+                    and self.shard_sequence:
+                return _pad([dp, "model"], x.ndim)
+            return _pad([dp], x.ndim)
+
+        return self._map_rules(rule, batch)
+
+    def cache_spec(self, cache: Any) -> Any:
+        raise NotImplementedError
+
+    def logits_spec(self) -> P:
+        raise NotImplementedError
+
+    shard_sequence: bool = False
+
+    def _map_rules(self, rule, tree: Any) -> Any:
+        """tree_map a (path, leaf)->P rule with shape-divisibility repair."""
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: repair_spec(rule(p, x), x.shape, self.mesh), tree)
+
+    def shard(self, tree: Any, spec_tree: Any) -> Any:
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+            tree, spec_tree)
+
+
+class LayerwiseTP(Policy):
+    """Megatron-style tensor parallelism (layer-by-layer analogue)."""
+
+    def __init__(self, mesh: Mesh, cfg: ModelConfig):
+        super().__init__("layerwise_tp", mesh, cfg)
+
+    def param_spec(self, params: Any) -> Any:
+        def rule(path, x):
+            names = _path_names(path)
+            leaf = names[-1]
+            if _is_expert_leaf(names):
+                return _pad(_lead(x, 3) + ["model", None, None], x.ndim)
+            if leaf in _MAT2 and leaf != "router":
+                if leaf in _TP_COL:
+                    return _pad(_lead(x, 2) + [None, "model"], x.ndim)
+                if leaf in _TP_ROW:
+                    return _pad(_lead(x, 2) + ["model", None], x.ndim)
+            if leaf == "embed":
+                return P("model", None)
+            return _pad([], x.ndim)
+
+        return self._map_rules(rule, params)
+
+    def cache_spec(self, cache: Any) -> Any:
+        dp = self._dp()
+        msize = self.mesh.shape["model"]
+
+        def rule(path, x):
+            names = _path_names(path)
+            if names[-1] in _KV_LEAVES:
+                # canonical (B, T, KV, hd): batch→data, kv heads→model;
+                # FALL BACK to head-DIM sharding when kv % model ≠ 0
+                # (minicpm kv=36, whisper kv=20 on a 16-way model axis)
+                if x.shape[-2] % msize == 0:
+                    return _pad(_lead(x, 4) + [dp, None, "model", None],
+                                x.ndim)
+                return _pad(_lead(x, 4) + [dp, None, None, "model"], x.ndim)
+            canon, spec = _state_canon(names, dp, head_axis="model")
+            return _pad(_lead(x, canon) + spec, x.ndim)
+
+        return self._map_rules(rule, cache)
+
+    def logits_spec(self) -> P:
+        return P(self._dp(), None, "model")
+
+
+class FusedSeq(Policy):
+    """Sequence-sharded fused dataflow (the paper's technique analogue)."""
+
+    shard_sequence = True
+
+    def __init__(self, mesh: Mesh, cfg: ModelConfig):
+        super().__init__("fused_seq", mesh, cfg)
+
+    def param_spec(self, params: Any) -> Any:
+        # weights broadcast (replicated over model) — the GBUF analogue;
+        # MoE experts stay expert-sharded (dispatch is a boundary op).
+        def rule(path, x):
+            names = _path_names(path)
+            if _is_expert_leaf(names):
+                return _pad(_lead(x, 3) + ["model", None, None], x.ndim)
+            return _pad([], x.ndim)
+
+        return self._map_rules(rule, params)
+
+    def cache_spec(self, cache: Any) -> Any:
+        dp = self._dp()
+
+        def rule(path, x):
+            names = _path_names(path)
+            if names[-1] in _KV_LEAVES:
+                # KV cache SEQUENCE-sharded over model (ring-attention style)
+                return _pad(_lead(x, 4) + [dp, "model", None, None], x.ndim)
+            canon, spec = _state_canon(names, dp, head_axis="model")
+            return _pad(_lead(x, canon) + spec, x.ndim)
+
+        return self._map_rules(rule, cache)
+
+    def logits_spec(self) -> P:
+        return P(self._dp(), "model", None)
+
+
+def _state_canon(names: list[str], dp, head_axis: str):
+    """(canonical_rank, canonical_spec) for recurrent-state cache leaves.
+
+    Disambiguates name collisions by subtree: mLSTM ``n`` is (B,H,P) while
+    sLSTM ``n`` is (B,d).  Head/feature dims shard over ``model``; the batch
+    dim shards over data axes."""
+    leaf = names[-1]
+    in_mlstm = "mlstm" in names
+    in_slstm = "slstm" in names
+    in_mamba = "mamba" in names
+    if in_mamba and leaf == "ssm":           # (B, H, P, N)
+        return 4, [dp, head_axis, None, None]
+    if in_mamba and leaf == "conv":          # (B, W, C)
+        return 3, [dp, None, None]
+    if in_mlstm and leaf == "C":             # (B, H, P, P)
+        return 4, [dp, head_axis, None, None]
+    if in_mlstm and leaf == "n":             # (B, H, P)
+        return 3, [dp, head_axis, None]
+    if in_mlstm and leaf == "m":             # (B, H)
+        return 2, [dp, head_axis]
+    if in_slstm:                             # c/n/m/h: (B, d)
+        return 2, [dp, head_axis]
+    return 2, [dp]
+
+
+class FusedSeqZero3(FusedSeq):
+    """fused_seq + ZeRO-3-style weight sharding: parameters shard their
+    first divisible non-stack dim over ``data`` and are re-gathered at use
+    (GSPMD inserts the per-layer-slice all-gather inside the scan).  This
+    is the paper's GBUF-capacity story at mesh scale: the fused dataflow
+    broadcasts weights, and when they don't fit locally they stream in
+    shards — trading collective bytes for the 1/N_data memory footprint
+    that lets 32B-param models fit HBM under weight broadcast."""
+
+    def __init__(self, mesh: Mesh, cfg: ModelConfig):
+        Policy.__init__(self, "fused_seq_zero3", mesh, cfg)
+
+    def param_spec(self, params: Any) -> Any:
+        def rule(path, x):
+            names = _path_names(path)
+            if _is_expert_leaf(names):
+                return _pad(_lead(x, 3) + ["model", "data", None], x.ndim)
+            if names[-1] in _MAT2 or names[-1] in ("embed",):
+                lead = _lead(x, 2)
+                return _pad(lead + ["data", None], x.ndim)
+            return _pad([], x.ndim)
+
+        return self._map_rules(rule, params)
+
+
+POLICIES = {
+    "layerwise_tp": LayerwiseTP,
+    "fused_seq": FusedSeq,
+    "fused_seq_zero3": FusedSeqZero3,
+}
+
+
+def get_policy(name: str, mesh: Mesh, cfg: ModelConfig) -> Policy:
+    return POLICIES[name](mesh, cfg)

@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic synthetic corpora, host-sharded, prefetched."""
+
+from repro.data.pipeline import make_batch_specs, synthetic_batches
+
+__all__ = ["synthetic_batches", "make_batch_specs"]

@@ -1,0 +1,124 @@
+"""Flash attention Pallas TPU kernel (online softmax, GQA, sliding window,
+logit softcap).
+
+TPU mapping: grid = (batch·heads, q_blocks, k_blocks) with the k dimension
+ARBITRARY (sequential) so the (m, l, acc) running statistics live in VMEM
+scratch across k-block visits.  Q/K/V blocks are VMEM tiles via BlockSpec;
+the MXU consumes (block_q × head_dim) · (head_dim × block_k) matmuls —
+block sizes default to 128 to align with the 128×128 systolic array.
+
+GQA is handled in the K/V BlockSpec index_map (query head h reads kv head
+h // group) — KV tensors are never materialised per-query-head.
+
+Validated in interpret mode against ``ref.py``; on real TPU the same call
+runs compiled (``interpret=False``).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            block_q: int, block_k: int, k_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # skip blocks entirely above the diagonal
+        pl.when(ki * block_k <= qi * block_q + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (BH, S, D); k/v: (BKV, T, D) with BH = BKV·group.
+    Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    BKV, T, _ = k.shape
+    group = BH // BKV
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    k_blocks = T // block_k
+    grid = (BH, S // block_q, k_blocks)
+
+    kern = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(D), causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, k_blocks=k_blocks)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda h, qi, ki, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda h, qi, ki, g=group: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

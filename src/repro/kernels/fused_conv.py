@@ -1,0 +1,131 @@
+"""Fused CONV + BN + [ADD] + [RELU] Pallas TPU kernel — the PIMcore fused
+op (paper Table I: CONV_BN / CONV_BN_RELU / ADD_RELU flags) re-tiled for
+the TPU memory hierarchy.
+
+PIM→TPU mapping (DESIGN.md §3): the paper's LBUF-resident spatial tile
+becomes a VMEM-resident output tile; the paper's GBUF weight broadcast
+becomes the weight BlockSpec (same weights revisited by every spatial grid
+step — XLA keeps them VMEM-resident); halo rows that cross PIM banks are
+here rows of the padded input loaded from ANY/HBM memory with dynamic
+slices.
+
+Grid: (batch, H-tiles, W-tiles, Cout-blocks).  Inner loop: kh × kw static
+unroll of (tile_pixels × Cin) · (Cin × Cout_blk) MXU matmuls accumulated in
+f32, then the BN/residual/ReLU epilogue — one HBM round-trip per tile for
+the whole fused layer group member.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, scale_ref, shift_ref, *rest, stride: int,
+            kh: int, kw: int, th: int, tw: int, relu: bool,
+            has_residual: bool):
+    if has_residual:
+        res_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+    b = pl.program_id(0)
+    hi = pl.program_id(1)
+    wi = pl.program_id(2)
+
+    ih = hi * th * stride
+    iw = wi * tw * stride
+    in_h = (th - 1) * stride + kh
+    in_w = (tw - 1) * stride + kw
+    cin = x_ref.shape[-1]
+    x_tile = pl.load(x_ref, (b, pl.dslice(ih, in_h), pl.dslice(iw, in_w),
+                             slice(None))).astype(jnp.float32)
+
+    cout_blk = w_ref.shape[-1]
+    acc = jnp.zeros((th * tw, cout_blk), jnp.float32)
+    for r in range(kh):
+        for c in range(kw):
+            patch = jax.lax.slice(
+                x_tile, (r, c, 0),
+                (r + (th - 1) * stride + 1, c + (tw - 1) * stride + 1, cin),
+                (stride, stride, 1))                        # (th, tw, cin)
+            acc += jax.lax.dot_general(
+                patch.reshape(th * tw, cin),
+                w_ref[r, c].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+    y = acc * scale_ref[...].astype(jnp.float32) \
+        + shift_ref[...].astype(jnp.float32)
+    y = y.reshape(th, tw, cout_blk)
+    if has_residual:
+        y = y + res_ref[0].astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def fused_conv_kernel(x: jnp.ndarray, w: jnp.ndarray, scale: jnp.ndarray,
+                      shift: jnp.ndarray, *, stride: int = 1,
+                      padding: int = 1, relu: bool = True,
+                      residual: jnp.ndarray | None = None,
+                      tile_h: int = 8, tile_w: int = 8,
+                      cout_block: int = 128,
+                      interpret: bool = True) -> jnp.ndarray:
+    """x: (B, H, W, Cin) NHWC; w: (kh, kw, Cin, Cout).
+    Returns (B, OH, OW, Cout) with OH = (H + 2p - kh)//s + 1."""
+    B, H, W, Cin = x.shape
+    kh, kw, _, Cout = w.shape
+    OH = (H + 2 * padding - kh) // stride + 1
+    OW = (W + 2 * padding - kw) // stride + 1
+
+    th = min(tile_h, OH)
+    tw = min(tile_w, OW)
+    # pad output extent up to tile multiples; pad input accordingly
+    oh_pad = (-OH) % th
+    ow_pad = (-OW) % tw
+    cb = min(cout_block, Cout)
+    assert Cout % cb == 0, f"cout {Cout} % block {cb}"
+
+    in_h_need = ((OH + oh_pad) - 1) * stride + kh
+    in_w_need = ((OW + ow_pad) - 1) * stride + kw
+    # with stride > kh the needed extent can be smaller than H: clamp pads
+    xp = jnp.pad(x, ((0, 0),
+                     (padding, max(0, in_h_need - H - padding)),
+                     (padding, max(0, in_w_need - W - padding)), (0, 0)))
+    res = residual
+    if res is not None and (oh_pad or ow_pad):
+        res = jnp.pad(res, ((0, 0), (0, oh_pad), (0, ow_pad), (0, 0)))
+
+    grid = (B, (OH + oh_pad) // th, (OW + ow_pad) // tw, Cout // cb)
+    kern = functools.partial(_kernel, stride=stride, kh=kh, kw=kw, th=th,
+                             tw=tw, relu=relu,
+                             has_residual=res is not None)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),               # x: HBM + dslice
+        pl.BlockSpec((kh, kw, Cin, cb), lambda b, h, w_, co: (0, 0, 0, co)),
+        pl.BlockSpec((cb,), lambda b, h, w_, co: (co,)),
+        pl.BlockSpec((cb,), lambda b, h, w_, co: (co,)),
+    ]
+    args = [xp, w, scale, shift]
+    if res is not None:
+        in_specs.append(pl.BlockSpec((1, th, tw, cb),
+                                     lambda b, h, w_, co: (b, h, w_, co)))
+        args.append(res)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, th, tw, cb),
+                               lambda b, h, w_, co: (b, h, w_, co)),
+        out_shape=jax.ShapeDtypeStruct((B, OH + oh_pad, OW + ow_pad, Cout),
+                                       x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",) * 4),
+        interpret=interpret,
+    )(*args)
+    return out[:, :OH, :OW]

@@ -1,0 +1,88 @@
+"""Mamba2/SSD chunked-scan Pallas TPU kernel.
+
+Grid: (batch, heads, chunks) with the chunk dimension ARBITRARY so the
+(P × N) SSM state persists in VMEM scratch across chunk visits — the
+"fused-layer" structure of the SSD operator: one constant-size state halo
+crosses chunk (and under sequence sharding, device) boundaries.
+
+Per chunk (length Q): an intra-chunk attention-like term via a (Q × Q)
+lower-triangular decay matrix on the MXU, plus the inter-chunk term from
+the carried state.  Matches ``ref.mamba_scan_ref`` (sequential recurrence)
+to float tolerance.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dtx_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *, Q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    dtx = dtx_ref[0, :, 0].astype(jnp.float32)              # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)                  # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)                       # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                       # (Q, N)
+
+    cum = jnp.cumsum(a)                                     # (Q,)
+    diff = cum[:, None] - cum[None, :]                      # (Q, Q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    # mask BEFORE exp (future entries overflow and poison gradients)
+    decay = jnp.exp(jnp.where(tri, diff, -1e30))
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    y_intra = jax.lax.dot_general(cb * decay, dtx,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                                  # (P, N)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (Q, P)
+
+    # carry: S' = e^{cum[-1]} S + Σ_s e^{cum[-1]-cum[s]} dtx_s ⊗ B_s
+    w = jnp.exp(cum[-1] - cum)[:, None]                     # (Q, 1)
+    state_scr[...] = jnp.exp(cum[-1]) * state + jax.lax.dot_general(
+        dtx * w, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+def mamba_scan_kernel(dtx: jnp.ndarray, a_log: jnp.ndarray, Bm: jnp.ndarray,
+                      Cm: jnp.ndarray, *, chunk: int = 128,
+                      interpret: bool = True) -> jnp.ndarray:
+    """dtx: (b, S, H, P); a_log: (b, S, H); Bm/Cm: (b, S, N).
+    Returns y: (b, S, H, P) = the SSD recurrence output."""
+    b, S, H, P = dtx.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    grid = (b, H, S // Q)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bi, h, ci: (bi, ci, h)),
+            pl.BlockSpec((1, Q, N), lambda bi, h, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda bi, h, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, S, H, P), dtx.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(dtx, a_log, Bm, Cm)

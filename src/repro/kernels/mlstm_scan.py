@@ -1,0 +1,96 @@
+"""mLSTM streaming Pallas TPU kernel.
+
+The mLSTM matrix memory (P × P per head) is large — for xlstm-1.3b,
+P = 512 ⇒ 1 MB f32 — so the TPU-native structure is a STREAMING kernel:
+the state (C, n, m) lives in VMEM scratch across chunk grid steps and each
+chunk is consumed token-by-token with a ``fori_loop`` of rank-1 updates
+(VPU) + mat-vec reads (MXU).  This avoids any HBM state round-trip, which
+is the whole cost of the operator at decode/long-context time; the
+grid's (batch·heads) dimension provides the parallelism.
+
+Matches ``ref.mlstm_ref`` exactly (same stabilized recurrence order).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
+            c_scr, n_scr, m_scr, *, Q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+
+    q = q_ref[0].astype(jnp.float32)                        # (Q, P)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    i_pre = i_ref[0].astype(jnp.float32)                    # (Q, 1)
+    f_pre = f_ref[0].astype(jnp.float32)
+
+    def step(t, hs):
+        qt, kt, vt = q[t], k[t], v[t]                       # (P,)
+        it = i_pre[t, 0]
+        log_f = jax.nn.log_sigmoid(f_pre[t, 0])
+        m_prev = m_scr[0, 0]
+        m_new = jnp.maximum(log_f + m_prev, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(log_f + m_prev - m_new)
+        c_new = f_s * c_scr[...] + i_s * vt[:, None] * kt[None, :]
+        n_new = f_s * n_scr[0] + i_s * kt
+        c_scr[...] = c_new
+        n_scr[0] = n_new
+        m_scr[0, 0] = m_new
+        num = c_new @ qt                                    # (P,)
+        den = jnp.maximum(jnp.abs(jnp.sum(n_new * qt)), 1.0)
+        return hs.at[t].set(num / den)
+
+    hs = jax.lax.fori_loop(0, Q, step, jnp.zeros((Q, q.shape[1]),
+                                                 jnp.float32))
+    h_ref[0] = hs.astype(h_ref.dtype)
+
+
+def mlstm_scan_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      i_pre: jnp.ndarray, f_pre: jnp.ndarray, *,
+                      chunk: int = 64,
+                      interpret: bool = True) -> jnp.ndarray:
+    """q/k/v: (b, S, H, P); i_pre/f_pre: (b, S, H) → h: (b, S, H, P)."""
+    b, S, H, P = q.shape
+    Q = min(chunk, S)
+    assert S % Q == 0
+    grid = (b * H, S // Q)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * H, S, P)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * H, S, P)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * H, S, P)
+    i_f = i_pre.transpose(0, 2, 1).reshape(b * H, S, 1)
+    f_f = f_pre.transpose(0, 2, 1).reshape(b * H, S, 1)
+
+    spec3 = pl.BlockSpec((1, Q, P), lambda bh, ci: (bh, ci, 0))
+    spec1 = pl.BlockSpec((1, Q, 1), lambda bh, ci: (bh, ci, 0))
+
+    h = pl.pallas_call(
+        functools.partial(_kernel, Q=Q),
+        grid=grid,
+        in_specs=[spec3, spec3, spec3, spec1, spec1],
+        out_specs=spec3,
+        out_shape=jax.ShapeDtypeStruct((b * H, S, P), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((P, P), jnp.float32),
+            pltpu.VMEM((1, P), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf, i_f, f_f)
+    return h.reshape(b, H, S, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jnp.ndarray:
+    """q: (BH, S, D); k/v: (BKV, T, D), BH = BKV·group — same layout as the
+    flash kernel."""
+    BH, S, D = q.shape
+    BKV, T, _ = k.shape
+    group = BH // BKV
+    kf = jnp.repeat(k, group, axis=0).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=0).astype(jnp.float32)
+    s = jnp.einsum("hsd,htd->hst", q.astype(jnp.float32), kf) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hst,htd->hsd", p, vf).astype(q.dtype)
+
+
+def fused_conv_ref(x: jnp.ndarray, w: jnp.ndarray, scale: jnp.ndarray,
+                   shift: jnp.ndarray, *, stride: int = 1, padding: int = 1,
+                   relu: bool = True,
+                   residual: jnp.ndarray | None = None) -> jnp.ndarray:
+    """CONV + BN(folded scale/shift) [+ADD] [+RELU] — the paper's fused
+    PIMcore op.  x: (B, H, W, Cin), w: (kh, kw, Cin, Cout)."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y * scale.astype(jnp.float32) + shift.astype(jnp.float32)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def mamba_scan_ref(dtx: jnp.ndarray, a_log: jnp.ndarray, B: jnp.ndarray,
+                   C: jnp.ndarray) -> jnp.ndarray:
+    """Sequential SSD recurrence oracle.
+    dtx: (b, S, H, P)  a_log: (b, S, H)  B/C: (b, S, N) → y: (b, S, H, P)."""
+    b, S, H, P = dtx.shape
+    N = B.shape[-1]
+
+    def step(state, t_in):
+        dtx_t, a_t, b_t, c_t = t_in
+        state = state * jnp.exp(a_t)[..., None, None] \
+            + jnp.einsum("bhp,bn->bhpn", dtx_t, b_t)
+        y = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y
+
+    s0 = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(dtx, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(a_log, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def mlstm_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              i_pre: jnp.ndarray, f_pre: jnp.ndarray) -> jnp.ndarray:
+    """Stabilized mLSTM oracle.  q/k/v: (b, S, H, P); i/f: (b, S, H)."""
+    b, S, H, P = q.shape
+
+    def step(carry, t_in):
+        C, n, m = carry
+        qt, kt, vt, it, ft = t_in
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        C = f_s[..., None, None] * C \
+            + i_s[..., None, None] * jnp.einsum("bhp,bhq->bhpq", vt, kt)
+        n = f_s[..., None] * n + i_s[..., None] * kt
+        num = jnp.einsum("bhpq,bhq->bhp", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", n, qt)), 1.0)
+        return (C, n, m_new), num / den[..., None]
+
+    C0 = jnp.zeros((b, H, P, P), jnp.float32)
+    n0 = jnp.zeros((b, H, P), jnp.float32)
+    m0 = jnp.full((b, H), -1e30, jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+               for t in (q, k, v, i_pre, f_pre))
+    _, ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(ys, 0, 1)

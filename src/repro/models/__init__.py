@@ -1,0 +1,10 @@
+"""Pure-JAX model zoo: parameter pytrees + functional forwards.
+
+``build_model(cfg)`` returns a :class:`repro.models.api.Model` bundle with
+``init``, ``forward`` (full-sequence), ``init_cache`` and ``decode_step``
+(single-token with KV/state cache) for every assigned architecture family.
+"""
+
+from repro.models.api import Model, build_model
+
+__all__ = ["Model", "build_model"]

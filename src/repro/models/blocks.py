@@ -1,0 +1,186 @@
+"""Residual blocks: per-layer init / forward / decode for every block kind.
+
+Block kinds: ``attn`` (GQA attention + gated-MLP or MoE), ``mamba``
+(Mamba2), ``mlstm`` / ``slstm`` (xLSTM), ``enc_attn`` (bidirectional), and
+``xattn`` (decoder self+cross for enc-dec models).  All are pre-norm
+residual; gemma2-style post-norms are applied when the config asks.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# attention (+MLP / +MoE) block
+# ---------------------------------------------------------------------------
+
+def init_attn_block(key, cfg, dtype, *, use_moe: bool, cross: bool = False,
+                    d_ff: int | None = None) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cross:
+        p["ln_x"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["xattn"] = L.init_attention(ks[3], cfg, dtype)
+    if use_moe:
+        p["moe"] = MOE.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, d_ff or cfg.d_ff, dtype)
+    if cfg.post_attn_norm:
+        p["ln1_post"] = L.init_rmsnorm(cfg.d_model, dtype)
+    if cfg.post_mlp_norm:
+        p["ln2_post"] = L.init_rmsnorm(cfg.d_model, dtype)
+    return p
+
+
+def _ffn(p: Params, x, cfg):
+    if "moe" in p:
+        return MOE.moe_ffn(p["moe"], x, cfg)
+    return L.mlp(p["mlp"], x, cfg.mlp_activation), jnp.float32(0.0)
+
+
+def attn_block(p: Params, x: jnp.ndarray, cfg, *, positions, mask,
+               enc_out=None, enc_mask=None):
+    """Full-sequence attention block.  Returns (x, aux_loss)."""
+    from repro.core.hints import hint
+    x = hint("residual", x)
+    h = L.attention(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                    positions=positions, mask=mask)
+    if "ln1_post" in p:
+        h = L.rmsnorm(p["ln1_post"], h, cfg.norm_eps)
+    x = x + hint("residual", h)
+    if enc_out is not None:
+        hx = L.attention(p["xattn"], L.rmsnorm(p["ln_x"], x, cfg.norm_eps),
+                         cfg, positions=positions, mask=enc_mask,
+                         kv_override=enc_out)
+        x = x + hx
+    h, aux = _ffn(p, L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    if "ln2_post" in p:
+        h = L.rmsnorm(p["ln2_post"], h, cfg.norm_eps)
+    return x + h, aux
+
+
+# ---- decode with KV cache ----
+
+def init_attn_cache(cfg, batch: int, max_len: int, dtype,
+                    cross_len: int = 0) -> Params:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    c: Params = {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+    if cross_len:
+        c["xk"] = jnp.zeros((batch, cross_len, kv, hd), dtype)
+        c["xv"] = jnp.zeros((batch, cross_len, kv, hd), dtype)
+    return c
+
+
+def attn_block_decode(p: Params, cache: Params, x: jnp.ndarray, cfg, *,
+                      index, window: int | jnp.ndarray = 0):
+    """One-token decode.  x: (B, 1, d); ``index`` scalar position.
+    Returns (x_out, new_cache, aux)."""
+    B = x.shape[0]
+    kv, hd, h_ = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_heads
+    xin = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q = (xin @ p["attn"]["wq"]).reshape(B, 1, h_, hd)
+    k = (xin @ p["attn"]["wk"]).reshape(B, 1, kv, hd)
+    v = (xin @ p["attn"]["wv"]).reshape(B, 1, kv, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["attn"]["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["attn"]["k_norm"], k, cfg.norm_eps)
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q = L.apply_rope(q, pos, cfg.rope_theta)
+    k = L.apply_rope(k, pos, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, index, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, index, 0, 0))
+    T = ck.shape[1]
+    kpos = jnp.arange(T)
+    m = kpos <= index
+    m = jnp.where(jnp.asarray(window) > 0, m & (kpos > index - window), m)
+    attn_out = L.attention_scores(q, ck, cv, m[None, None, :], cfg.attn_softcap)
+    h = attn_out.reshape(B, 1, h_ * hd) @ p["attn"]["wo"]
+    if "ln1_post" in p:
+        h = L.rmsnorm(p["ln1_post"], h, cfg.norm_eps)
+    x = x + h
+    new_cache = dict(cache)
+    new_cache.update(k=ck, v=cv)
+    if "xk" in cache:  # cross attention against precomputed encoder k/v
+        xq = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        qx = (xq @ p["xattn"]["wq"]).reshape(B, 1, h_, hd)
+        xm = jnp.ones((1, 1, cache["xk"].shape[1]), bool)
+        hx = L.attention_scores(qx, cache["xk"], cache["xv"], xm,
+                                cfg.attn_softcap)
+        x = x + hx.reshape(B, 1, h_ * hd) @ p["xattn"]["wo"]
+    h, aux = _ffn(p, L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    if "ln2_post" in p:
+        h = L.rmsnorm(p["ln2_post"], h, cfg.norm_eps)
+    return x + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# mamba / xlstm blocks (pre-norm residual around the cells)
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg, dtype) -> Params:
+    return {"ln": L.init_rmsnorm(cfg.d_model, dtype),
+            "cell": SSM.init_mamba2(key, cfg, dtype)}
+
+
+def mamba_block(p: Params, x, cfg):
+    return x + SSM.mamba2_forward(p["cell"], L.rmsnorm(p["ln"], x,
+                                                       cfg.norm_eps), cfg)
+
+
+def mamba_block_decode(p: Params, cache, x, cfg):
+    y, c = SSM.mamba2_decode_step(p["cell"],
+                                  cache, L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                                  cfg)
+    return x + y, c
+
+
+def init_mlstm_block(key, cfg, dtype) -> Params:
+    return {"ln": L.init_rmsnorm(cfg.d_model, dtype),
+            "cell": XL.init_mlstm(key, cfg, dtype)}
+
+
+def mlstm_block(p: Params, x, cfg):
+    return x + XL.mlstm_forward(p["cell"], L.rmsnorm(p["ln"], x,
+                                                     cfg.norm_eps), cfg)
+
+
+def mlstm_block_decode(p: Params, cache, x, cfg):
+    y, c = XL.mlstm_decode_step(p["cell"], cache,
+                                L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg)
+    return x + y, c
+
+
+def init_slstm_block(key, cfg, dtype) -> Params:
+    return {"ln": L.init_rmsnorm(cfg.d_model, dtype),
+            "cell": XL.init_slstm(key, cfg, dtype)}
+
+
+def slstm_block(p: Params, x, cfg):
+    return x + XL.slstm_forward(p["cell"], L.rmsnorm(p["ln"], x,
+                                                     cfg.norm_eps), cfg)
+
+
+def slstm_block_decode(p: Params, cache, x, cfg):
+    y, c = XL.slstm_decode_step(p["cell"], cache,
+                                L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg)
+    return x + y, c

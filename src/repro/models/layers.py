@@ -1,0 +1,228 @@
+"""Core NN layers in pure JAX: norms, RoPE, GQA attention, gated MLPs,
+embeddings, and the conv/bn/pool set for ResNet.
+
+Conventions:
+* parameters are plain nested dicts of ``jnp.ndarray``;
+* every layer is an ``init_*(key, ...) -> params`` / ``apply(params, x)``
+  pair of pure functions;
+* activations follow the config compute dtype; matmuls accumulate in f32
+  via ``preferred_element_type`` where it matters.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype) -> jnp.ndarray:
+    return jnp.ones((dim,), dtype)
+
+
+def rmsnorm(w: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def init_layernorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    if theta <= 0:
+        return x
+    freqs = rope_frequencies(x.shape[-1], theta)          # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]                # (.., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, sliding window, softcap, qk-norm)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def attention_scores(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     mask: jnp.ndarray, softcap: float = 0.0) -> jnp.ndarray:
+    """q: (B,S,H,hd)  k/v: (B,T,KV,hd) with H = KV*G.  mask: broadcastable
+    to (B,H,S,T), True = attend."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    logits = _softcap(logits, softcap)
+    m = mask.reshape(B, KV, G, S, T) if mask.ndim == 4 and mask.shape[1] == H \
+        else mask[:, None, None, :, :] if mask.ndim == 3 else mask
+    logits = jnp.where(m, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def causal_mask(S: int, T: int, q_offset: jnp.ndarray | int = 0,
+                window: int = 0) -> jnp.ndarray:
+    """(1, S, T) boolean mask: query i (global pos q_offset+i) attends to
+    keys ≤ its position, within ``window`` if nonzero."""
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m[None]
+
+
+def attention(p: Params, x: jnp.ndarray, cfg, *, positions: jnp.ndarray,
+              mask: jnp.ndarray, kv_override=None) -> jnp.ndarray:
+    """Full attention block (projections + scores).  ``kv_override`` feeds
+    cross-attention (keys/values from encoder states)."""
+    from repro.core.hints import hint
+    B, S, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = hint("qkv", (x @ p["wq"]).reshape(B, S, h, hd))
+    if kv_override is None:
+        k = hint("qkv", (x @ p["wk"]).reshape(B, S, kv, hd))
+        v = hint("qkv", (x @ p["wv"]).reshape(B, S, kv, hd))
+    else:
+        src = kv_override
+        k = (src @ p["wk"]).reshape(B, src.shape[1], kv, hd)
+        v = (src @ p["wv"]).reshape(B, src.shape[1], kv, hd)
+    if cfg.qk_norm:
+        q = hint("qkv", rmsnorm(p["q_norm"], q, cfg.norm_eps))
+        k = hint("qkv", rmsnorm(p["k_norm"], k, cfg.norm_eps))
+    if kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = hint("attn_out", attention_scores(q, k, v, mask, cfg.attn_softcap))
+    return out.reshape(B, S, h * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray, activation: str = "silu") -> jnp.ndarray:
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# conv/bn/pool for ResNet
+# ---------------------------------------------------------------------------
+
+def init_conv(key, kh: int, kw: int, cin: int, cout: int, dtype) -> jnp.ndarray:
+    fan_in = kh * kw * cin
+    return (jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+            * math.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def conv2d(w: jnp.ndarray, x: jnp.ndarray, stride: int = 1,
+           padding: int = 0) -> jnp.ndarray:
+    """x: NHWC, w: HWIO."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def init_bn(cout: int, dtype) -> Params:
+    return {"scale": jnp.ones((cout,), dtype), "bias": jnp.zeros((cout,), dtype),
+            "mean": jnp.zeros((cout,), jnp.float32),
+            "var": jnp.ones((cout,), jnp.float32)}
+
+
+def batchnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Inference-mode BN (folded running stats) — matches the PIM model's
+    CONV_BN epilogue semantics."""
+    inv = jax.lax.rsqrt(p["var"] + eps)
+    return ((x.astype(jnp.float32) - p["mean"]) * inv).astype(x.dtype) \
+        * p["scale"] + p["bias"]
+
+
+def maxpool2d(x: jnp.ndarray, k: int, stride: int, padding: int) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1),
+        [(0, 0), (padding, padding), (padding, padding), (0, 0)])
+
+
+def avgpool_global(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(x, axis=(1, 2))

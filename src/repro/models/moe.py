@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN: top-k router, capacity-based dropless-ish
+dispatch, optional shared experts (DeepSeekMoE) and load-balance aux loss.
+
+Dispatch uses the scatter/cumsum formulation (no host-side sort): expanded
+(token, k) assignments get a position-within-expert via a cumulative one-hot
+sum, tokens beyond ``capacity`` are dropped (capacity_factor-controlled,
+standard Switch/GShard semantics).  Under expert-parallel sharding the
+``(E, C, d)`` buffers are what the mesh all-to-alls move — exactly the MoE
+boundary discussed in DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = dict[str, Any]
+
+
+def init_moe(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    E, ff = cfg.moe_num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff), jnp.float32)
+                   / math.sqrt(d)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, ff), jnp.float32)
+                 / math.sqrt(d)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, ff, d), jnp.float32)
+                   / math.sqrt(ff)).astype(dtype),
+    }
+    if cfg.moe_num_shared_experts:
+        sff = cfg.moe_d_ff * cfg.moe_num_shared_experts
+        sks = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sks[0], d, sff, dtype),
+            "w_up": dense_init(sks[1], d, sff, dtype),
+            "w_down": dense_init(sks[2], sff, d, dtype),
+        }
+    return p
+
+
+def capacity_for(tokens: int, cfg) -> int:
+    cap = int(math.ceil(tokens * cfg.moe_top_k / cfg.moe_num_experts
+                        * cfg.moe_capacity_factor))
+    return max(cap, cfg.moe_top_k)
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) → (out, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    C = capacity_for(T, cfg)
+    xt = x.reshape(T, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, sel = jax.lax.top_k(probs, K)                    # (T, K)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch): E * Σ_e f_e · p̄_e
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(sel, E), axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * p_e) * cfg.moe_aux_loss_coef
+
+    # positions within experts via cumulative one-hot over (T*K)
+    flat_e = sel.reshape(T * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (TK, E)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1)  # 1-based
+    keep = pos <= C
+    slot = jnp.where(keep, pos - 1, C)                       # overflow → C
+
+    # scatter tokens into (E, C+1, d); slot C is the drop bin
+    xk = jnp.repeat(xt, K, axis=0)                           # (TK, d)
+    buf = jnp.zeros((E, C + 1, d), x.dtype).at[flat_e, slot].add(
+        xk * keep[:, None].astype(x.dtype))
+    buf = buf[:, :C]                                         # (E, C, d)
+
+    act = jax.nn.silu if cfg.mlp_activation == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])     # (E, C, d)
+
+    # gather back + combine with gate weights
+    gathered = out_buf[flat_e, jnp.minimum(slot, C - 1)]     # (TK, d)
+    gathered = gathered * keep[:, None].astype(x.dtype)
+    y = (gathered.reshape(T, K, d)
+         * gate_w[..., None].astype(x.dtype)).sum(axis=1)
+
+    if "shared" in p:
+        sp = p["shared"]
+        y = y + (act(xt @ sp["w_gate"]) * (xt @ sp["w_up"])) @ sp["w_down"]
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) blocks for the zamba2 hybrid — chunked parallel scan.
+
+The state-space duality form: per head h with head_dim P and state N,
+
+    a_t = exp(-Δ_t · exp(A_log_h))                 (scalar decay)
+    S_t = a_t · S_{t-1} + (Δ_t · x_t) ⊗ B_t        (P × N state)
+    y_t = S_t · C_t + D_h · x_t
+
+computed chunk-parallel: intra-chunk attention-like term + inter-chunk
+state carry via ``lax.scan`` over chunks.  This is the *fused-layer-friendly*
+operator of DESIGN.md: the only cross-chunk (and cross-device, under
+sequence sharding) dependency is the (P, N) boundary state — a 1-element
+"halo", exactly analogous to the paper's conv halo rows.
+
+Decode is O(1): one state update per token.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = dict[str, Any]
+
+
+def ssm_dims(cfg) -> tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state_dim
+    return d_inner, H, P, N
+
+
+def init_mamba2(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, H, P, N = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * N              # x, B, C share the causal conv
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj → [z (gate), x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv over time.  x: (B,S,C), w: (W,C).
+    Returns (y, new_state) where state is the trailing W-1 inputs."""
+    Wd = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], Wd - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+W-1, C)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(Wd)[None, :]
+    windows = xp[:, idx]                                    # (B, S, W, C)
+    y = jnp.einsum("bswc,wc->bsc", windows, w) + b
+    new_state = xp[:, -(Wd - 1):] if Wd > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype)
+    return y, new_state
+
+
+def _split_proj(proj: jnp.ndarray, cfg):
+    d_inner, H, P, N = ssm_dims(cfg)
+    z, rest = proj[..., :d_inner], proj[..., d_inner:]
+    xbc, dt = rest[..., : d_inner + 2 * N], rest[..., d_inner + 2 * N:]
+    return z, xbc, dt
+
+
+def mamba2_forward(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Full-sequence forward.  x: (B, S, d) → (B, S, d)."""
+    B, S, d = x.shape
+    d_inner, H, P, N = ssm_dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q:
+        raise ValueError(f"seq {S} not divisible by ssm chunk {Q}")
+
+    proj = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xh = xbc[..., :d_inner].reshape(B, S, H, P)
+    Bm = xbc[..., d_inner:d_inner + N]                      # (B,S,N) 1 group
+    Cm = xbc[..., d_inner + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_log = -dt * jnp.exp(p["A_log"])                       # (B,S,H) log decay
+    dtx = (xh.astype(jnp.float32)
+           * dt[..., None])                                 # (B,S,H,P)
+
+    # chunk
+    nC = S // Q
+    a_log_c = a_log.reshape(B, nC, Q, H)
+    dtx_c = dtx.reshape(B, nC, Q, H, P)
+    B_c = Bm.reshape(B, nC, Q, N).astype(jnp.float32)
+    C_c = Cm.reshape(B, nC, Q, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(a_log_c, axis=2)                       # (B,nC,Q,H)
+    # intra-chunk: scores[t,s] = exp(cum_t - cum_s) for s ≤ t.
+    # mask BEFORE exp: masked (future) entries have cum_t - cum_s > 0 and
+    # would overflow, poisoning gradients through the where.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nC,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    cb = jnp.einsum("bcqn,bcsn->bcqs", C_c, B_c)            # (B,nC,Q,Q)
+    y_intra = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp",
+                         cb, decay, dtx_c)
+
+    # inter-chunk carry
+    chunk_decay = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nC,Q,H)
+    S_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                         chunk_decay, B_c, dtx_c)           # (B,nC,H,P,N)
+    a_total = jnp.exp(cum[:, :, -1, :])                     # (B,nC,H)
+
+    def carry_fn(S_prev, inp):
+        s_chunk, a_tot = inp
+        S_new = S_prev * a_tot[..., None, None] + s_chunk
+        return S_new, S_prev
+
+    S0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, S_before = jax.lax.scan(
+        carry_fn, S0,
+        (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(a_total, 1, 0)))
+    S_before = jnp.moveaxis(S_before, 0, 1)                 # (B,nC,H,P,N)
+
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp",
+                         jnp.exp(cum), C_c, S_before)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2 epilogue)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         ).astype(x.dtype) * p["norm_w"]
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) per token)
+# ---------------------------------------------------------------------------
+
+def mamba2_init_cache(cfg, batch: int, dtype) -> Params:
+    d_inner, H, P, N = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode_step(p: Params, cache: Params, x: jnp.ndarray, cfg):
+    """x: (B, 1, d) → (y, new_cache)."""
+    B = x.shape[0]
+    d_inner, H, P, N = ssm_dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state=cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    xh = xbc[..., :d_inner].reshape(B, H, P)
+    Bm = xbc[:, 0, d_inner:d_inner + N].astype(jnp.float32)
+    Cm = xbc[:, 0, d_inner + N:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))                  # (B,H)
+    dtx = xh.astype(jnp.float32) * dt[..., None]            # (B,H,P)
+    S_new = cache["ssm"] * a[..., None, None] \
+        + jnp.einsum("bhp,bn->bhpn", dtx, Bm)
+    y = jnp.einsum("bhpn,bn->bhp", S_new, Cm) \
+        + xh.astype(jnp.float32) * p["D"][None, :, None]
+
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         ).astype(x.dtype) * p["norm_w"]
+    return y @ p["out_proj"], {"ssm": S_new, "conv": conv_state}
+
+
+def mamba2_ref_scan(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Naive per-token recurrence — oracle for the chunked form."""
+    B, S, d = x.shape
+    cache = mamba2_init_cache(cfg, B, x.dtype)
+    ys = []
+    for t in range(S):
+        y, cache = mamba2_decode_step(p, cache, x[:, t:t + 1], cfg)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)

@@ -1,0 +1,222 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, strictly recurrent) — arXiv:2405.04517.
+
+mLSTM per head (head_dim P):
+    C_t = f_t · C_{t-1} + i_t · v_t k_tᵀ          (P × P matrix memory)
+    n_t = f_t · n_{t-1} + i_t · k_t
+    h_t = o_t ⊙ (C_t q_t) / max(|n_tᵀ q_t|, 1)
+with log-space gate stabilisation (m_t running max).  The cross-chunk
+dependency is (C, n, m) — a constant-size state halo, so mLSTM is
+fused-dataflow-friendly under sequence sharding (DESIGN.md).
+
+sLSTM keeps per-unit scalar memories with a block-diagonal recurrent
+connection — a true serial scan (`lax.scan` over time).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = dict[str, Any]
+
+
+def _heads(cfg) -> tuple[int, int]:
+    H = cfg.num_heads
+    P = cfg.d_model // H
+    return H, P
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    H, P = _heads(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "w_i": dense_init(ks[3], d, H, jnp.float32),   # input gate (pre-exp)
+        "w_f": dense_init(ks[4], d, H, jnp.float32),   # forget gate
+        "w_o": dense_init(ks[5], d, d, dtype),         # output gate
+        "out_proj": dense_init(ks[6], d, d, dtype),
+        "norm_w": jnp.ones((d,), dtype),
+    }
+
+
+def mlstm_forward(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Sequential (scan-over-time) stabilized mLSTM.  x: (B,S,d)."""
+    B, S, d = x.shape
+    H, P = _heads(cfg)
+    q = (x @ p["wq"]).reshape(B, S, H, P).astype(jnp.float32) / (P ** 0.5)
+    k = (x @ p["wk"]).reshape(B, S, H, P).astype(jnp.float32)
+    v = (x @ p["wv"]).reshape(B, S, H, P).astype(jnp.float32)
+    i_pre = (x.astype(jnp.float32) @ p["w_i"])             # (B,S,H)
+    f_pre = (x.astype(jnp.float32) @ p["w_f"])
+    o = jax.nn.sigmoid(x @ p["w_o"]).reshape(B, S, H, P)
+
+    def step(carry, t_in):
+        C, n, m = carry
+        qt, kt, vt, it, ft = t_in
+        log_f = jax.nn.log_sigmoid(ft)                     # (B,H)
+        m_new = jnp.maximum(log_f + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        C = f_s[..., None, None] * C \
+            + i_s[..., None, None] * jnp.einsum("bhp,bhq->bhpq", vt, kt)
+        n = f_s[..., None] * n + i_s[..., None] * kt
+        num = jnp.einsum("bhpq,bhq->bhp", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", n, qt)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((B, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B, H, P), jnp.float32)
+    m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(i_pre, 1, 0),
+          jnp.moveaxis(f_pre, 1, 0))
+    _, hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)             # (B,S,H,P)
+    h = (h * o).reshape(B, S, d)
+    var = jnp.mean(jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True)
+    h = (h.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         ).astype(x.dtype) * p["norm_w"]
+    return h @ p["out_proj"]
+
+
+def mlstm_init_cache(cfg, batch: int) -> Params:
+    H, P = _heads(cfg)
+    return {
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_step(p: Params, cache: Params, x: jnp.ndarray, cfg):
+    B = x.shape[0]
+    H, P = _heads(cfg)
+    d = cfg.d_model
+    qt = (x @ p["wq"]).reshape(B, H, P).astype(jnp.float32) / (P ** 0.5)
+    kt = (x @ p["wk"]).reshape(B, H, P).astype(jnp.float32)
+    vt = (x @ p["wv"]).reshape(B, H, P).astype(jnp.float32)
+    it = (x[:, 0].astype(jnp.float32) @ p["w_i"])
+    ft = (x[:, 0].astype(jnp.float32) @ p["w_f"])
+    o = jax.nn.sigmoid(x @ p["w_o"]).reshape(B, 1, H, P)
+
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + cache["m"], it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(log_f + cache["m"] - m_new)
+    C = f_s[..., None, None] * cache["C"] \
+        + i_s[..., None, None] * jnp.einsum("bhp,bhq->bhpq", vt, kt)
+    n = f_s[..., None] * cache["n"] + i_s[..., None] * kt
+    num = jnp.einsum("bhpq,bhq->bhp", C, qt)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", n, qt)), 1.0)
+    h = (num / den[..., None]).astype(x.dtype).reshape(B, 1, H, P)
+    h = (h * o).reshape(B, 1, d)
+    var = jnp.mean(jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True)
+    h = (h.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         ).astype(x.dtype) * p["norm_w"]
+    return h @ p["out_proj"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    H, P = _heads(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_z": dense_init(ks[0], d, d, dtype),
+        "w_i": dense_init(ks[1], d, d, jnp.float32),
+        "w_f": dense_init(ks[2], d, d, jnp.float32),
+        "w_o": dense_init(ks[3], d, d, dtype),
+        # block-diagonal recurrent weights, per head: (H, P, P)
+        "r_z": (jax.random.normal(ks[4], (H, P, P), jnp.float32)
+                / (P ** 0.5)).astype(jnp.float32),
+        "out_proj": dense_init(ks[5], d, d, dtype),
+        "norm_w": jnp.ones((d,), dtype),
+    }
+
+
+def slstm_forward(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    B, S, d = x.shape
+    H, P = _heads(cfg)
+    z_in = (x @ p["w_z"]).astype(jnp.float32)
+    i_in = x.astype(jnp.float32) @ p["w_i"]
+    f_in = x.astype(jnp.float32) @ p["w_f"]
+    o_in = jax.nn.sigmoid(x @ p["w_o"]).astype(jnp.float32)
+
+    def step(carry, t_in):
+        c, n, m, h_prev = carry
+        zt, it, ft, ot = t_in
+        # recurrent contribution (block-diagonal per head)
+        hr = jnp.einsum("bhp,hpq->bhq", h_prev.reshape(B, H, P),
+                        p["r_z"]).reshape(B, d)
+        z = jnp.tanh(zt + hr)
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c = f_s * c + i_s * z
+        n = f_s * n + i_s
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h), h
+
+    zeros = jnp.zeros((B, d), jnp.float32)
+    m0 = jnp.full((B, d), -1e30, jnp.float32)
+    xs = (jnp.moveaxis(z_in, 1, 0), jnp.moveaxis(i_in, 1, 0),
+          jnp.moveaxis(f_in, 1, 0), jnp.moveaxis(o_in, 1, 0))
+    _, hs = jax.lax.scan(step, (zeros, zeros, m0, zeros), xs)
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    var = jnp.mean(jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True)
+    h = (h.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         ).astype(x.dtype) * p["norm_w"]
+    return h @ p["out_proj"]
+
+
+def slstm_init_cache(cfg, batch: int) -> Params:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_decode_step(p: Params, cache: Params, x: jnp.ndarray, cfg):
+    B = x.shape[0]
+    H, P = _heads(cfg)
+    d = cfg.d_model
+    zt = (x[:, 0] @ p["w_z"]).astype(jnp.float32)
+    it = x[:, 0].astype(jnp.float32) @ p["w_i"]
+    ft = x[:, 0].astype(jnp.float32) @ p["w_f"]
+    ot = jax.nn.sigmoid(x[:, 0] @ p["w_o"]).astype(jnp.float32)
+    hr = jnp.einsum("bhp,hpq->bhq", cache["h"].reshape(B, H, P),
+                    p["r_z"]).reshape(B, d)
+    z = jnp.tanh(zt + hr)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + cache["m"], it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(log_f + cache["m"] - m_new)
+    c = f_s * cache["c"] + i_s * z
+    n = f_s * cache["n"] + i_s
+    h = ot * c / jnp.maximum(n, 1.0)
+    y = h.astype(x.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         ).astype(x.dtype) * p["norm_w"]
+    return (y @ p["out_proj"])[:, None, :], \
+        {"c": c, "n": n, "m": m_new, "h": h}

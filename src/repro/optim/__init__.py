@@ -1,0 +1,6 @@
+"""Optimizers, LR schedules and distributed-optimization tricks."""
+
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import make_schedule
+
+__all__ = ["adamw_init", "adamw_update", "make_schedule"]

@@ -1,0 +1,75 @@
+"""AdamW with decoupled weight decay and global-norm clipping — pure JAX.
+
+Optimizer state mirrors the parameter pytree (m, v in f32 regardless of
+param dtype — mixed-precision training keeps a f32 master copy implicitly
+through the f32 moments + f32 update path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+
+def adamw_init(params: Params) -> dict[str, Any]:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params: Params, grads: Params,
+                 state: dict[str, Any], lr_scale: jnp.ndarray | float = 1.0):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    step = state["step"] + 1
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_new / b1t
+        vhat = v_new / b2t
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

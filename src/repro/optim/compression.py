@@ -1,0 +1,69 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 block-quantization with ERROR FEEDBACK: each host quantizes its local
+gradient (per-block absmax scaling), all-reduces the int8 payload (here:
+mean of dequantized values — on a real fabric the int8 tensors are what
+crosses the wire, cutting DP all-reduce bytes 4× vs f32 / 2× vs bf16), and
+the quantization residual is carried into the next step so the compression
+is unbiased over time (Seide et al. 1-bit SGD / EF-SGD lineage).
+
+Exposed as a pair (compress, decompress) plus an error-feedback wrapper the
+trainer applies per-leaf before the pmean.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, pad
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+    """→ (int8 codes, f32 per-block scales, pad)."""
+    flat, pad = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return codes, scale, pad
+
+
+def dequantize_int8(codes: jnp.ndarray, scale: jnp.ndarray, pad: int,
+                    shape) -> jnp.ndarray:
+    flat = (codes.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compress_leaf(g: jnp.ndarray, err: jnp.ndarray):
+    """Error-feedback compression of one gradient leaf.
+    Returns (g_compressed, new_err) with g_compressed ≈ g + err."""
+    target = g.astype(jnp.float32) + err
+    codes, scale, pad = quantize_int8(target)
+    g_hat = dequantize_int8(codes, scale, pad, g.shape)
+    return g_hat, target - g_hat
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Any, err_state: Any):
+    out = jax.tree.map(compress_leaf, grads, err_state)
+    g_hat = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return g_hat, new_err

@@ -1,0 +1,37 @@
+"""LR schedules: cosine and WSD (Warmup-Stable-Decay, MiniCPM arXiv:2404.06395).
+
+Schedules return a multiplicative factor on the base LR as a traced
+function of the (int32) step, so they live inside the jitted train step.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, warmup: int, total: int, min_ratio: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, warmup: int, total: int, decay_frac: float = 0.1,
+                 min_ratio: float = 0.1):
+    """Warmup → Stable (flat) → Decay (last ``decay_frac`` of training).
+    MiniCPM's schedule: the stable phase runs at full LR; decay is a fast
+    linear/exponential tail."""
+    s = step.astype(jnp.float32)
+    decay_steps = jnp.maximum(total * decay_frac, 1)
+    decay_start = total - decay_steps
+    warm = s / jnp.maximum(warmup, 1)
+    tail = jnp.clip((s - decay_start) / decay_steps, 0.0, 1.0)
+    decay = 1.0 - (1.0 - min_ratio) * tail
+    return jnp.where(s < warmup, warm, jnp.where(s < decay_start, 1.0, decay))
+
+
+def make_schedule(kind: str, *, warmup: int = 100, total: int = 10000):
+    if kind == "wsd":
+        return lambda step: wsd_schedule(step, warmup=warmup, total=total)
+    return lambda step: cosine_schedule(step, warmup=warmup, total=total)

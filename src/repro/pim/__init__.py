@@ -1,0 +1,1 @@
+"""PPA profiling framework for PIMfused (Ramulator2 + Accelergy analogue)."""

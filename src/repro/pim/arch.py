@@ -1,0 +1,116 @@
+"""PIMfused / GDDR6-AiM-like architecture description.
+
+All timing/width constants model a 16-bank GDDR6 channel following the
+paper's setup (§V-1) and the GDDR6-AiM ISSCC/JSSC disclosures [4]:
+
+* each bank exposes a 256-bit (32 B) internal I/O per memory-controller
+  cycle to its near-bank processing unit,
+* an AiM-style PIMcore multiplies a 16-lane bf16 vector per cycle
+  (16 MACs/cycle/core) — bank bandwidth and MAC width are co-designed so
+  weight streaming from the bank exactly feeds the MAC array,
+* bank↔GBUF transfers are SEQUENTIAL (one bank at a time over the shared
+  internal bus), bank↔LBUF transfers are PARALLEL across PIMcores (§III-B),
+* row activation adds overhead per DRAM row crossed.
+
+The free parameters that the paper leaves unspecified (accumulator depth,
+GBcore width, row overhead) are documented here and held constant across all
+evaluated systems, so *normalized* PPA (everything the paper reports) is
+insensitive to their absolute values to first order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PIMArch:
+    """One DRAM-PIM channel configuration."""
+
+    name: str
+    num_banks: int = 16
+    banks_per_pimcore: int = 1        # 1 → 16 PIMcores; 4 → 4 PIMcores (§III-A)
+    gbuf_bytes: int = 2 * 1024        # channel-level global buffer (AiM: 2 KB)
+    lbuf_bytes: int = 0               # per-PIMcore local buffer (new in PIMfused)
+    dtype_bytes: int = 2              # bf16 operands, as GDDR6-AiM
+
+    # --- micro-architecture constants (held fixed across systems) ---
+    bank_io_bytes_per_cycle: int = 32     # 256-bit near-bank I/O
+    # Effective bank↔GBUF throughput: the shared internal bus carries a
+    # bank-read phase then a GBUF-write phase per beat (§III-B sequential
+    # protocol), halving the 32 B/cycle raw bus width.
+    bus_bytes_per_cycle: int = 16
+    macs_per_core_per_cycle: int = 16     # AiM 16-lane bf16 MAC
+    alu_ops_per_core_per_cycle: int = 16  # pool/add/relu vector width
+    gbcore_ops_per_cycle: int = 32        # channel-level GBcore is wider
+    accum_regs: int = 8                   # output partial sums in flight / core
+    row_bytes: int = 2 * 1024             # GDDR6 row (per bank)
+    row_overhead_cycles: int = 24         # tRP+tRCD-ish per row activation
+    bank_switch_cycles: int = 8           # GBUF path: re-target to next bank
+    cmd_issue_cycles: int = 4             # controller issue per PIM CMD
+
+    # whether PIMcores support POOL/ADD_RELU locally (PIMfused yes, AiM no)
+    pimcore_has_pool_add: bool = True
+
+    @property
+    def num_pimcores(self) -> int:
+        return self.num_banks // self.banks_per_pimcore
+
+    @property
+    def core_bank_bytes_per_cycle(self) -> int:
+        """Per-PIMcore aggregate near-bank STREAMING bandwidth: a
+        multi-bank PIMcore fronts all of its banks' independent I/O ports
+        (what its extra muxing area pays for), so per-channel streaming
+        bandwidth is bank-count-invariant.  Fused4's "lower PIMcore
+        parallelism" penalty (§V-B obs. 4) instead shows up in the
+        position-blocked weight-refill passes: 4× larger spatial tiles per
+        core ⇒ 4× more sequential GBUF re-fills in mode B (dataflow.py)."""
+        return self.bank_io_bytes_per_cycle * self.banks_per_pimcore
+
+    @property
+    def total_mac_width(self) -> int:
+        return self.num_pimcores * self.macs_per_core_per_cycle
+
+    def with_buffers(self, gbuf_bytes: int, lbuf_bytes: int) -> "PIMArch":
+        return dataclasses.replace(self, gbuf_bytes=gbuf_bytes,
+                                   lbuf_bytes=lbuf_bytes)
+
+
+# ---------------------------------------------------------------------------
+# The three systems evaluated in §V-3.
+# ---------------------------------------------------------------------------
+
+def aim_like(gbuf_bytes: int = 2 * 1024, lbuf_bytes: int = 0) -> PIMArch:
+    """GDDR6-AiM-like baseline: 16 1-bank PIMcores (MAC/BN/RELU only) +
+    GBcore, layer-by-layer dataflow."""
+    return PIMArch(name="AiM-like", banks_per_pimcore=1,
+                   gbuf_bytes=gbuf_bytes, lbuf_bytes=lbuf_bytes,
+                   pimcore_has_pool_add=False)
+
+
+def fused16(gbuf_bytes: int = 2 * 1024, lbuf_bytes: int = 0) -> PIMArch:
+    """PIMfused with 16 1-bank PIMcores (4×4 tile grid)."""
+    return PIMArch(name="Fused16", banks_per_pimcore=1,
+                   gbuf_bytes=gbuf_bytes, lbuf_bytes=lbuf_bytes,
+                   pimcore_has_pool_add=True)
+
+
+def fused4(gbuf_bytes: int = 2 * 1024, lbuf_bytes: int = 0) -> PIMArch:
+    """PIMfused with 4 4-bank PIMcores (2×2 tile grid).
+
+    A 4-bank PIMcore keeps the single 16-lane MAC datapath but multiplexes
+    four banks behind one port — total channel MAC width is 4× lower than
+    Fused16 ("lower PIMcore parallelism", §V-B obs. 4), while logic area is
+    ~4× lower.
+    """
+    return PIMArch(name="Fused4", banks_per_pimcore=4,
+                   gbuf_bytes=gbuf_bytes, lbuf_bytes=lbuf_bytes,
+                   pimcore_has_pool_add=True)
+
+
+def config_label(gbuf_bytes: int, lbuf_bytes: int) -> str:
+    """Paper-style buffer label, e.g. G32K_L256 (§V-3)."""
+    g = f"G{gbuf_bytes // 1024}K"
+    l = f"L{lbuf_bytes // 1024}K" if lbuf_bytes >= 1024 and lbuf_bytes % 1024 == 0 \
+        else f"L{lbuf_bytes}"
+    return f"{g}_{l}"

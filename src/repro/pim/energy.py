@@ -1,0 +1,154 @@
+"""Energy & area model (Accelergy analogue, 22 nm).
+
+Component library constants follow the paper's methodology (§V-1):
+
+* DRAM near-bank access = 40 % of a full GDDR6 access (bypasses I/O pads);
+  full-access energy scaled from published GDDR5 numbers (~7 pJ/bit full,
+  2.8 pJ/bit near-bank).
+* SRAM buffers (GBUF/LBUF): CACTI-like curves at 22 nm — access energy and
+  area grow with capacity, with a peripheral-circuitry floor that dominates
+  below ~1 KB (the paper's §V-C observation that small LBUFs are nearly
+  free in area).
+* PIMcore / GBcore: compound components from primitive units (multipliers,
+  adder trees, comparators) with post-synthesis-style per-op energies.
+* Internal bus (bank↔GBUF): wire model, energy ∝ bits × traversal length.
+
+Absolute values are model outputs, not silicon claims; every reported result
+is NORMALISED to the AiM-like G2K_L0 baseline exactly as the paper reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.commands import CMD, Command, Trace
+from repro.pim.arch import PIMArch
+
+# ---------------------------------------------------------------------------
+# Component library (22 nm)
+# ---------------------------------------------------------------------------
+
+PJ_PER_BIT_DRAM_FULL = 7.0          # full GDDR6 access incl. I/O (scaled GDDR5)
+NEAR_BANK_FRACTION = 0.40           # paper's assumption
+PJ_PER_BIT_DRAM_NEAR = PJ_PER_BIT_DRAM_FULL * NEAR_BANK_FRACTION
+# re-reads of an already-open DRAM row (row-buffer hits): column access only
+PJ_PER_BIT_DRAM_HIT = 1.0
+
+PJ_PER_MAC_BF16 = 3.0               # 16b MAC incl. reg/control @22nm (post-synthesis-style)
+PJ_PER_ALU_OP = 0.15                # compare/add/relu lane
+PJ_PER_BIT_WIRE_MM = 0.08           # internal bus wire energy
+BUS_LENGTH_MM = 5.0                 # average bank↔GBUF traversal
+
+# SRAM: CACTI-like fit  E(pJ/bit) = e0 + e1 * sqrt(bytes)
+SRAM_E0_PJ_BIT = 0.05
+SRAM_E1_PJ_BIT = 0.0008
+
+# SRAM area (mm²): peripheral floor + linear bit-cell term
+SRAM_AREA_FLOOR_MM2 = 0.0016        # decoder/sense-amp floor (<1 KB dominated)
+SRAM_AREA_PER_KB_MM2 = 0.0044
+
+# Logic area (mm²)
+AREA_PIMCORE_AIM_MM2 = 0.050        # 16-lane bf16 MAC + BN/RELU (AiM-like)
+AREA_PIMCORE_FUSED_FACTOR = 1.18    # + pooling/residual datapaths (§III-A)
+AREA_PIMCORE_4BANK_FACTOR = 2.0     # 4-bank muxing/ports on the shared core
+AREA_GBCORE_MM2 = 0.110             # wider channel-level core (div for avgpool)
+AREA_CTRL_PER_CORE_MM2 = 0.004      # per-core command sequencing
+
+
+def sram_pj_per_bit(capacity_bytes: int) -> float:
+    if capacity_bytes <= 0:
+        return 0.0
+    return SRAM_E0_PJ_BIT + SRAM_E1_PJ_BIT * math.sqrt(capacity_bytes)
+
+
+def sram_area_mm2(capacity_bytes: int) -> float:
+    if capacity_bytes <= 0:
+        return 0.0
+    return SRAM_AREA_FLOOR_MM2 + SRAM_AREA_PER_KB_MM2 * capacity_bytes / 1024.0
+
+
+# ---------------------------------------------------------------------------
+# Energy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EnergyReport:
+    total_nj: float
+    by_component: dict[str, float]   # nJ
+
+
+def _dram_pj(total_bits: int, restream_bits: int) -> float:
+    """Near-bank DRAM energy with row-buffer-hit discount for re-streams."""
+    unique = max(0, total_bits - restream_bits)
+    return (unique * PJ_PER_BIT_DRAM_NEAR
+            + min(restream_bits, total_bits) * PJ_PER_BIT_DRAM_HIT)
+
+
+def command_energy_nj(c: Command, arch: PIMArch) -> dict[str, float]:
+    out: dict[str, float] = {}
+    bits = c.bytes_total * 8
+    re_bits = c.restream_bytes * 8
+    gb_bits = c.gbuf_stream_bytes * 8
+    lb_bits = c.lbuf_stream_bytes * 8 * max(c.concurrent_cores, 1)
+    bank_bits = c.bank_stream_bytes * 8 * max(c.concurrent_cores, 1)
+
+    if c.kind in (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK):
+        out["dram_near"] = _dram_pj(bits, re_bits)
+        out["bus"] = bits * PJ_PER_BIT_WIRE_MM * BUS_LENGTH_MM
+        out["gbuf"] = bits * sram_pj_per_bit(arch.gbuf_bytes)
+    elif c.kind in (CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK):
+        out["dram_near"] = _dram_pj(bits, re_bits)
+        if arch.lbuf_bytes > 0:
+            out["lbuf"] = bits * sram_pj_per_bit(arch.lbuf_bytes)
+    elif c.kind is CMD.PIMCORE_CMP:
+        out["pimcore_mac"] = c.macs * PJ_PER_MAC_BF16
+        out["pimcore_alu"] = c.alu_ops * PJ_PER_ALU_OP
+        # restream_bytes is per-core in CMP context, like bank_stream_bytes
+        out["dram_near"] = _dram_pj(bank_bits,
+                                    re_bits * max(c.concurrent_cores, 1))
+        # broadcast: one GBUF read fans out to all cores over the bus
+        out["gbuf"] = gb_bits * sram_pj_per_bit(arch.gbuf_bytes)
+        out["bus"] = gb_bits * PJ_PER_BIT_WIRE_MM * BUS_LENGTH_MM
+        if arch.lbuf_bytes > 0:
+            out["lbuf"] = lb_bits * sram_pj_per_bit(arch.lbuf_bytes)
+    elif c.kind is CMD.GBCORE_CMP:
+        out["gbcore_alu"] = c.alu_ops * PJ_PER_ALU_OP
+        out["gbuf"] = gb_bits * sram_pj_per_bit(arch.gbuf_bytes)
+    return {k: v / 1000.0 for k, v in out.items()}  # pJ → nJ
+
+
+def simulate_energy(trace: Trace, arch: PIMArch) -> EnergyReport:
+    by_component: dict[str, float] = {}
+    for c in trace:
+        for k, v in command_energy_nj(c, arch).items():
+            by_component[k] = by_component.get(k, 0.0) + v
+    return EnergyReport(total_nj=sum(by_component.values()),
+                        by_component=by_component)
+
+
+# ---------------------------------------------------------------------------
+# Area
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AreaReport:
+    total_mm2: float
+    by_component: dict[str, float]
+
+
+def system_area(arch: PIMArch) -> AreaReport:
+    cores = arch.num_pimcores
+    core = AREA_PIMCORE_AIM_MM2
+    if arch.pimcore_has_pool_add:
+        core *= AREA_PIMCORE_FUSED_FACTOR
+    if arch.banks_per_pimcore > 1:
+        core *= AREA_PIMCORE_4BANK_FACTOR
+    by = {
+        "pimcores": cores * core,
+        "pimcore_ctrl": cores * AREA_CTRL_PER_CORE_MM2,
+        "gbcore": AREA_GBCORE_MM2,
+        "gbuf": sram_area_mm2(arch.gbuf_bytes),
+        "lbufs": cores * sram_area_mm2(arch.lbuf_bytes),
+    }
+    return AreaReport(total_mm2=sum(by.values()), by_component=by)

@@ -1,0 +1,91 @@
+"""End-to-end PPA evaluation: workload × system → {cycles, energy, area}.
+
+Drives the full reproduction of §V: the three systems (AiM-like, Fused16,
+Fused4), the two workloads (ResNet18_First8Layers, ResNet18_Full), and
+arbitrary (GBUF, LBUF) buffer configurations, all normalised to the
+AiM-like G2K_L0 baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core import dataflow
+from repro.core.commands import Trace, cross_bank_bytes
+from repro.core.fusion import FusionPlan, plan_fused
+from repro.core.graph import Graph, build_resnet18, first_n_layers
+from repro.pim import arch as pim_arch
+from repro.pim.arch import PIMArch, config_label
+from repro.pim.energy import AreaReport, EnergyReport, simulate_energy, system_area
+from repro.pim.timing import CycleReport, simulate_cycles
+
+SYSTEMS: dict[str, Callable[..., PIMArch]] = {
+    "AiM-like": pim_arch.aim_like,
+    "Fused16": pim_arch.fused16,
+    "Fused4": pim_arch.fused4,
+}
+
+# tile grid per PIMfused system (§V-3)
+TILE_GRID = {"Fused16": (4, 4), "Fused4": (2, 2)}
+
+
+@dataclasses.dataclass
+class PPAResult:
+    system: str
+    workload: str
+    config: str
+    cycles: CycleReport
+    energy: EnergyReport
+    area: AreaReport
+    cross_bank_bytes: int
+
+    def normalized(self, base: "PPAResult") -> dict[str, float]:
+        return {
+            "cycles": self.cycles.total / base.cycles.total,
+            "energy": self.energy.total_nj / base.energy.total_nj,
+            "area": self.area.total_mm2 / base.area.total_mm2,
+        }
+
+
+def build_workload(name: str) -> Graph:
+    g = build_resnet18()
+    if name == "ResNet18_Full":
+        return g
+    if name == "ResNet18_First8Layers":
+        return first_n_layers(g, 8)
+    raise ValueError(f"unknown workload {name}")
+
+
+def trace_for(system: str, workload: Graph, a: PIMArch) -> Trace:
+    if system == "AiM-like":
+        return dataflow.map_baseline(workload, a)
+    ty, tx = TILE_GRID[system]
+    plan = plan_fused(workload, ty, tx)
+    return dataflow.map_pimfused(plan, a)
+
+
+def evaluate(system: str, workload_name: str, gbuf_bytes: int,
+             lbuf_bytes: int) -> PPAResult:
+    a = SYSTEMS[system](gbuf_bytes=gbuf_bytes, lbuf_bytes=lbuf_bytes)
+    wl = build_workload(workload_name)
+    trace = trace_for(system, wl, a)
+    return PPAResult(
+        system=system, workload=workload_name,
+        config=config_label(gbuf_bytes, lbuf_bytes),
+        cycles=simulate_cycles(trace, a),
+        energy=simulate_energy(trace, a),
+        area=system_area(a),
+        cross_bank_bytes=cross_bank_bytes(trace),
+    )
+
+
+def baseline(workload_name: str) -> PPAResult:
+    """AiM-like with the default AiM buffers (G2K_L0) — the paper's 1.0."""
+    return evaluate("AiM-like", workload_name, 2 * 1024, 0)
+
+
+def normalized_ppa(system: str, workload_name: str, gbuf_bytes: int,
+                   lbuf_bytes: int) -> dict[str, float]:
+    return evaluate(system, workload_name, gbuf_bytes, lbuf_bytes).normalized(
+        baseline(workload_name))

@@ -1,0 +1,5 @@
+"""Serving runtime: batched KV-cache decode engine."""
+
+from repro.serve.engine import ServeEngine
+
+__all__ = ["ServeEngine"]

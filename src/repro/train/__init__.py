@@ -1,0 +1,1 @@
+"""Training runtime: step construction, fault tolerance, straggler watch."""

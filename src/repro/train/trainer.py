@@ -1,0 +1,200 @@
+"""Train/serve step construction: loss, grads, optimizer, sharding.
+
+``make_train_step`` builds the jit-able step a launcher (or the dry-run)
+lowers:
+
+* next-token cross-entropy + MoE aux loss,
+* optional MICROBATCHING (gradient accumulation via ``lax.scan``),
+* optional REMAT (activation checkpointing through the layer scans),
+* optional int8 gradient COMPRESSION with error feedback on the DP axis,
+* AdamW with WSD/cosine schedule,
+* ZeRO-1 optimizer-state sharding: moments take the parameter sharding
+  PLUS every free data axis (``opt_spec``), so optimizer memory scales
+  1/N_chips — required to fit the 32B-param cells.
+
+All functions are policy-aware: in/out shardings come from the
+:class:`repro.core.policies.Policy` so the same step lowers under the
+layer-by-layer (TP) and fused (sequence-sharded) dataflows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.policies import Policy
+from repro.models.api import Model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import compress_grads, init_error_feedback
+from repro.optim.schedule import make_schedule
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        return cross_entropy(logits, batch["labels"]) + aux, aux
+
+    return loss_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatch: int = 0          # 0 → no accumulation
+    remat: bool = False
+    compress_grads: bool = False
+    schedule_total_steps: int = 10000
+    schedule_warmup: int = 100
+    # chunked head+CE over sequence slices: avoids materialising the full
+    # (B, S, vocab) logits — the §Perf memory-term lever for ≥100k vocabs
+    loss_chunk: int = 0
+
+
+def init_train_state(model: Model, params, ts_cfg: TrainStepConfig):
+    state = {"params": params, "opt": adamw_init(params)}
+    if ts_cfg.compress_grads:
+        state["ef"] = init_error_feedback(params)
+    return state
+
+
+def make_train_step(model: Model, ts_cfg: TrainStepConfig
+                    ) -> Callable[[Any, Any], tuple[Any, Any]]:
+    cfg = model.cfg
+    schedule = make_schedule(cfg.lr_schedule,
+                             warmup=ts_cfg.schedule_warmup,
+                             total=ts_cfg.schedule_total_steps)
+
+    def loss_fn(params, batch):
+        if ts_cfg.loss_chunk:
+            from repro.models.api import _head
+            hidden, aux = model.forward(params, batch, remat=ts_cfg.remat,
+                                        return_hidden=True)
+            C = ts_cfg.loss_chunk
+            S = hidden.shape[1]
+            n = max(1, S // C)
+            h_c = hidden.reshape(hidden.shape[0], n, S // n,
+                                 hidden.shape[-1]).transpose(1, 0, 2, 3)
+            l_c = batch["labels"].reshape(hidden.shape[0], n,
+                                          S // n).transpose(1, 0, 2)
+
+            def body(acc, xs):
+                hc, lc = xs
+                logits = _head(params, cfg, hc)
+                return acc + cross_entropy(logits, lc) / n, None
+
+            ce, _ = jax.lax.scan(body, jnp.float32(0.0), (h_c, l_c))
+            return ce + aux, aux
+        logits, aux = model.forward(params, batch, remat=ts_cfg.remat)
+        return cross_entropy(logits, batch["labels"]) + aux, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if not ts_cfg.microbatch:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, grads
+        mb = ts_cfg.microbatch
+        gb = batch["tokens"].shape[0]
+        n = gb // mb
+        split = jax.tree.map(
+            lambda x: x.reshape((n, mb) + x.shape[1:]), batch)
+
+        def body(carry, micro):
+            acc, loss_a, aux_a = carry
+            (loss, aux), g = grad_fn(params, micro)
+            acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / n, acc, g)
+            return (acc, loss_a + loss / n, aux_a + aux / n), None
+
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                             params)
+        (grads, loss, aux), _ = jax.lax.scan(
+            body, (zeros, jnp.float32(0.0), jnp.float32(0.0)), split)
+        return loss, aux, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        loss, aux, grads = compute_grads(params, batch)
+        new_state = dict(state)
+        if ts_cfg.compress_grads:
+            grads, new_state["ef"] = compress_grads(grads, state["ef"])
+        # schedule sees the 1-based step the update commits (step 0 of a
+        # fresh run must already take a warmup-scaled, NONZERO step)
+        lr_scale = schedule(state["opt"]["step"] + 1)
+        new_params, new_opt, metrics = adamw_update(
+            ts_cfg.opt, params, grads, state["opt"], lr_scale)
+        new_state.update(params=new_params, opt=new_opt)
+        metrics.update(loss=loss, aux_loss=aux)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model, *, sample: bool = False):
+    """One batched decode step: greedy token (or logits) + updated cache."""
+
+    def serve_step(params, cache, tokens, index):
+        logits, cache = model.decode_step(params, cache, tokens, index)
+        if sample:
+            out = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return out[:, None], cache
+        return logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def opt_spec_from_param_spec(policy: Policy, param_spec, params_shape):
+    """ZeRO-1: moments = param sharding + every free mesh axis slotted into
+    the first divisible unsharded dim."""
+    mesh = policy.mesh
+    free_axes = [a for a in mesh.axis_names]
+
+    def rule(spec: P, shp):
+        used = {a for part in spec for a in
+                ((part,) if isinstance(part, str) else (part or ()))}
+        parts = list(spec) + [None] * (len(shp.shape) - len(spec))
+        for ax in mesh.axis_names:
+            if ax in used:
+                continue
+            size = mesh.shape[ax]
+            for d in range(len(parts)):
+                dim_ok = parts[d] is None and shp.shape[d] % size == 0 \
+                    and shp.shape[d] >= size
+                if dim_ok:
+                    parts[d] = ax
+                    used.add(ax)
+                    break
+        return P(*parts)
+
+    return jax.tree.map(rule, param_spec, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_spec(policy: Policy, params_shapes) -> dict:
+    """PartitionSpec tree for the full train state given param SHAPES
+    (ShapeDtypeStructs ok — no allocation)."""
+    pspec = policy.param_spec(params_shapes)
+    ospec = opt_spec_from_param_spec(policy, pspec, params_shapes)
+    out = {"params": pspec,
+           "opt": {"m": ospec, "v": ospec, "step": P()}}
+    return out
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward +
+one train step + one decode step on CPU, asserting shapes and finiteness.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_REGISTRY, get_config
+from repro.data.pipeline import batch_for_step
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import (TrainStepConfig, init_train_state,
+                                 make_train_step)
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(cfg):
+    return batch_for_step(cfg, 0, B, S)
+
+
+@pytest.mark.parametrize("arch", ARCH_REGISTRY)
+def test_forward_shapes_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    logits, aux = model.forward(params, _batch(cfg))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_REGISTRY)
+def test_one_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    ts = TrainStepConfig(opt=AdamWConfig(lr=1e-3), schedule_warmup=1)
+    state = init_train_state(model, params, ts)
+    step = jax.jit(make_train_step(model, ts))
+    state, metrics = step(state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    before = jax.tree.leaves(params)[0]
+    after = jax.tree.leaves(state["params"])[0]
+    assert not np.allclose(np.asarray(before, np.float32),
+                           np.asarray(after, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCH_REGISTRY)
+def test_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    cache = model.init_cache(B, 32)
+    if cfg.is_encoder_decoder:
+        frames = jax.random.normal(
+            KEY, (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        cache = model.fill_cross_cache(params, cache, frames)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, new_cache = model.decode_step(params, cache, tok, 0)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache must change somewhere
+    changed = any(
+        not np.array_equal(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(new_cache)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "zamba2-2.7b", "xlstm-1.3b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the full-sequence forward."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (B, 8), 0, cfg.vocab_size)
+    full, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(B, 8)
+    outs = []
+    for t in range(8):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1], t)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_full_configs_match_assignment():
+    """Exact dims from the assignment table."""
+    expect = {
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert cfg.num_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.num_heads == h, arch
+        assert cfg.num_kv_heads == kv, arch
+        ff_actual = cfg.moe_d_ff if cfg.moe_num_experts else cfg.d_ff
+        assert ff_actual == ff, arch
+        assert cfg.vocab_size == v, arch
+    # family-specific details
+    assert get_config("gemma2-2b").local_global_pattern
+    assert get_config("gemma2-2b").sliding_window == 4096
+    assert get_config("qwen3-32b").qk_norm
+    assert get_config("zamba2-2.7b").ssm_state_dim == 64
+    assert get_config("granite-moe-1b-a400m").moe_num_experts == 32
+    assert get_config("granite-moe-1b-a400m").moe_top_k == 8
+    assert get_config("deepseek-moe-16b").moe_num_experts == 64
+    assert get_config("deepseek-moe-16b").moe_top_k == 6
+    assert get_config("deepseek-moe-16b").moe_num_shared_experts == 2
+    assert get_config("minicpm-2b").lr_schedule == "wsd"
+    assert get_config("whisper-large-v3").is_encoder_decoder
+
+
+def test_resnet18_smoke():
+    from repro.models.resnet import (forward, forward_fused_groups,
+                                     init_resnet18)
+    p = init_resnet18(KEY, 10)
+    x = jax.random.normal(KEY, (2, 64, 64, 3))
+    y = forward(p, x)
+    assert y.shape == (2, 10)
+    assert np.isfinite(np.asarray(y)).all()
+    yf = forward_fused_groups(p, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yf), atol=1e-4)

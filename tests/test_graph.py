@@ -1,0 +1,69 @@
+"""Unit tests for the CNN macro-layer graph IR."""
+
+import pytest
+
+from repro.core.graph import Graph, Layer, OpKind, build_resnet18, first_n_layers
+
+
+def test_resnet18_structure():
+    g = build_resnet18()
+    # 2 stem + 4 stages × (2 blocks) with down convs in stages 2-4 + head
+    # = 2 + (3+3) + (4+3)*3 + 2 = 31 macro layers
+    assert len(g) == 31
+    assert g[0].name == "conv1" and g[0].kh == 7 and g[0].stride == 2
+    assert g[1].kind is OpKind.POOL_MAX
+    assert g[30].kind is OpKind.FC and g[30].cout == 1000
+    # paper's layer counts: first 8 = stem + stage 1, next 7 = stage 2
+    assert g[7].name == "s1b2_add"
+    assert g[14].name == "s2b2_add"
+    assert g[21].name == "s3b2_add"
+
+
+def test_resnet18_shapes_chain():
+    g = build_resnet18()
+    for i, l in enumerate(g):
+        oy, ox = l.out_extent_for(l.iy, l.ix)
+        assert (oy, ox) == (l.oy, l.ox), l.name
+        # chained input extents must match the producing layer
+        if i > 0 and l.input_of is None and l.kind is not OpKind.FC:
+            prev = g[i - 1]
+            assert (l.iy, l.ix) == (prev.oy, prev.ox), l.name
+
+
+def test_total_macs_resnet18():
+    g = build_resnet18()
+    # ResNet18 @224 is ~1.82 GMACs; our macro graph counts convs + FC
+    assert 1.7e9 < g.total_macs < 1.9e9
+
+
+def test_weight_elems_count():
+    g = build_resnet18()
+    # ~11.7M params (incl. BN folded as 2/cout)
+    total = g.total_weight_elems
+    assert 10.5e6 < total < 12.5e6
+
+
+def test_receptive_field_inverse():
+    l = build_resnet18()[0]  # conv7x7 s2 p3
+    ry, rx = l.in_extent_for(1, 1)
+    assert (ry, rx) == (7, 7)
+    ry, rx = l.in_extent_for(2, 2)
+    assert (ry, rx) == (9, 9)
+
+
+def test_first_n_layers():
+    f8 = first_n_layers(build_resnet18(), 8)
+    assert len(f8) == 8
+    assert f8[7].name == "s1b2_add"
+
+
+def test_duplicate_names_rejected():
+    l = Layer("a", OpKind.CONV_BN, 1, 1, 4, 4, 4, 4)
+    with pytest.raises(ValueError):
+        Graph("bad", [l, l])
+
+
+def test_external_refs_tracked():
+    g = build_resnet18()
+    grp = g.slice(8, 15)  # stage 2: down conv refs s1b2_add (external)
+    assert "s1b2_add" in grp.external_refs

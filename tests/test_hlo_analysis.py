@@ -1,0 +1,82 @@
+"""HLO analyzer: trip-count correction must be exact on known programs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, split_computations
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_correction():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    c = analyze_hlo(_compile_text(f, x, w))
+    assert c.flops == pytest.approx(2 * 128 ** 3 * 8, rel=1e-6)
+    assert 8 in c.while_trip_counts
+
+
+def test_nested_scan_correction():
+    def f(x, w):
+        def outer(c, wu):
+            def inner(cc, wi):
+                return jnp.tanh(cc @ wi), None
+            c2, _ = jax.lax.scan(inner, c, wu)
+            return c2, None
+        c, _ = jax.lax.scan(outer, x, w)
+        return c
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((4, 3, 64, 64), jnp.float32)
+    c = analyze_hlo(_compile_text(f, x, w))
+    assert c.flops == pytest.approx(2 * 64 ** 3 * 12, rel=1e-6)
+    assert sorted(c.while_trip_counts) == [3, 4]
+
+
+def test_unrolled_matches_scanned():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+
+    def f_scan(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    def f_unroll(x, w):
+        c = x
+        for i in range(6):
+            c = jnp.tanh(c @ w[i])
+        return c
+
+    cs = analyze_hlo(_compile_text(f_scan, x, w))
+    cu = analyze_hlo(_compile_text(f_unroll, x, w))
+    assert cs.flops == pytest.approx(cu.flops, rel=1e-6)
+
+
+def test_hbm_proxy_counts_dot_operands():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    c = analyze_hlo(_compile_text(f, a, b))
+    expect = 4 * (128 * 256 + 256 * 64 + 128 * 64)
+    assert c.hbm_bytes == pytest.approx(expect, rel=0.3)
+
+
+def test_split_computations_finds_entry():
+    def f(x):
+        return jnp.sin(x) @ x
+
+    txt = _compile_text(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    comps = split_computations(txt)
+    assert any(c.is_entry for c in comps.values())

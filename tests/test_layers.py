@@ -1,0 +1,140 @@
+"""Unit/property tests for core layers: RoPE, norms, masks, attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(11)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(KEY, (2, 8, 4, 32))
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """⟨rope(q,m), rope(k,n)⟩ depends only on m−n."""
+    q = jax.random.normal(KEY, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 1, 1, 16))
+
+    def dot_at(m, n):
+        qm = L.apply_rope(q, jnp.array([[m]]), 10000.0)
+        kn = L.apply_rope(k, jnp.array([[n]]), 10000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
+    assert dot_at(0, 0) == pytest.approx(dot_at(9, 9), rel=1e-4)
+
+
+def test_rope_zero_theta_is_identity():
+    x = jax.random.normal(KEY, (1, 4, 2, 8))
+    pos = jnp.broadcast_to(jnp.arange(4), (1, 4))
+    np.testing.assert_array_equal(np.asarray(L.apply_rope(x, pos, 0.0)),
+                                  np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_rmsnorm_unit_rms(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32)) * 5
+    y = L.rmsnorm(jnp.ones((32,)), x)
+    rms = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_rmsnorm_scale_equivariance():
+    """rmsnorm(c·x) == rmsnorm(x) for c > 0 (scale invariant)."""
+    x = jax.random.normal(KEY, (2, 16))
+    a = L.rmsnorm(jnp.ones((16,)), x)
+    b = L.rmsnorm(jnp.ones((16,)), 7.0 * x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_layernorm_zero_mean_unit_var():
+    p = L.init_layernorm(32, jnp.float32)
+    x = jax.random.normal(KEY, (4, 32)) * 3 + 2
+    y = np.asarray(L.layernorm(p, x))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# masks / attention semantics
+# ---------------------------------------------------------------------------
+
+def test_causal_mask_offsets():
+    m = np.asarray(L.causal_mask(2, 6, q_offset=4))
+    # query global positions 4,5 attend to keys 0..4 / 0..5
+    assert m[0, 0].tolist() == [True] * 5 + [False]
+    assert m[0, 1].tolist() == [True] * 6
+
+
+def test_causal_mask_window():
+    m = np.asarray(L.causal_mask(4, 4, window=2))
+    assert m[0, 3].tolist() == [False, False, True, True]
+
+
+def test_softcap_bounds_logits():
+    x = jnp.linspace(-500, 500, 11)
+    y = np.asarray(L._softcap(x, 50.0))
+    assert (np.abs(y) <= 50.0 + 1e-4).all()
+    # approximately identity near zero
+    assert L._softcap(jnp.asarray(1.0), 50.0) == pytest.approx(1.0, rel=1e-3)
+
+
+def test_attention_scores_gqa_equivalence():
+    """GQA with kv groups == MHA with repeated kv heads."""
+    B, S, H, KV, D = 1, 8, 4, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, D))
+    mask = L.causal_mask(S, S)
+    out_gqa = L.attention_scores(q, k, v, mask)
+    out_mha = L.attention_scores(q, jnp.repeat(k, 2, axis=2),
+                                 jnp.repeat(v, 2, axis=2), mask)
+    # repeated-kv MHA maps head h to kv h//2 in GQA ordering
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# conv/pool (resnet substrate)
+# ---------------------------------------------------------------------------
+
+def test_conv2d_identity_kernel():
+    x = jax.random.normal(KEY, (1, 5, 5, 3))
+    w = jnp.zeros((1, 1, 3, 3)).at[0, 0].set(jnp.eye(3))
+    np.testing.assert_allclose(np.asarray(L.conv2d(w, x)), np.asarray(x),
+                               atol=1e-6)
+
+
+def test_maxpool_basic():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    y = L.maxpool2d(x, 2, 2, 0)
+    np.testing.assert_array_equal(np.asarray(y)[0, :, :, 0],
+                                  [[5, 7], [13, 15]])
+
+
+def test_batchnorm_folds_stats():
+    p = L.init_bn(4, jnp.float32)
+    p["mean"] = jnp.full((4,), 2.0)
+    p["var"] = jnp.full((4,), 4.0)
+    x = jnp.full((1, 2, 2, 4), 6.0)
+    # (6-2)/2 = 2
+    np.testing.assert_allclose(np.asarray(L.batchnorm(p, x)), 2.0, atol=1e-3)

@@ -1,0 +1,70 @@
+"""MoE routing properties: capacity, gate normalisation, shared experts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.moe import capacity_for, init_moe, moe_ffn
+
+CFG = get_config("granite-moe-1b-a400m", smoke=True)
+KEY = jax.random.PRNGKey(3)
+
+
+def test_output_shape_and_finite():
+    p = init_moe(KEY, CFG, jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, CFG.d_model))
+    y, aux = moe_ffn(p, x, CFG)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) > 0
+
+
+def test_aux_loss_balanced_lower_bound():
+    """Perfectly uniform routing gives aux = coef (E·Σ(1/E·1/E·E) = 1)."""
+    p = init_moe(KEY, CFG, jnp.float32)
+    x = jax.random.normal(KEY, (4, 64, CFG.d_model))
+    _, aux = moe_ffn(p, x, CFG)
+    # aux ≥ coef (balanced optimum), and near it for random tokens
+    assert float(aux) >= CFG.moe_aux_loss_coef * 0.99
+    assert float(aux) < CFG.moe_aux_loss_coef * 3
+
+
+def test_capacity_formula():
+    assert capacity_for(64, CFG) == int(np.ceil(
+        64 * CFG.moe_top_k / CFG.moe_num_experts * CFG.moe_capacity_factor))
+    assert capacity_for(1, CFG) >= CFG.moe_top_k
+
+
+def test_deepseek_shared_experts_add():
+    cfg = get_config("deepseek-moe-16b", smoke=True)
+    p = init_moe(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model))
+    y_with, _ = moe_ffn(p, x, cfg)
+    p_no = dict(p)
+    del p_no["shared"]
+    y_without, _ = moe_ffn(p_no, x, cfg)
+    assert not np.allclose(np.asarray(y_with), np.asarray(y_without))
+
+
+def test_identical_tokens_identical_outputs():
+    """Routing is per-token: identical tokens must map identically
+    (up to capacity drops, excluded by a tiny batch)."""
+    p = init_moe(KEY, CFG, jnp.float32)
+    tok = jax.random.normal(KEY, (1, 1, CFG.d_model))
+    x = jnp.tile(tok, (1, 2, 1))
+    y, _ = moe_ffn(p, x, CFG)
+    np.testing.assert_allclose(np.asarray(y[0, 0]), np.asarray(y[0, 1]),
+                               atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 100))
+def test_moe_linear_in_gate_weights(seed):
+    """Output norm is bounded by the max expert response (gates sum to 1)."""
+    p = init_moe(jax.random.PRNGKey(seed), CFG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 8, CFG.d_model))
+    y, _ = moe_ffn(p, x, CFG)
+    assert np.isfinite(np.asarray(y)).all()

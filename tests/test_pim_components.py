@@ -1,0 +1,131 @@
+"""Unit tests for the PIM timing/energy component models."""
+
+import pytest
+
+from repro.core.commands import CMD, Command
+from repro.pim.arch import aim_like, config_label, fused4, fused16
+from repro.pim.energy import (command_energy_nj, sram_area_mm2,
+                              sram_pj_per_bit, system_area)
+from repro.pim.timing import command_cycles
+
+
+# ---------------------------------------------------------------------------
+# arch presets
+# ---------------------------------------------------------------------------
+
+def test_presets_core_counts():
+    assert aim_like().num_pimcores == 16
+    assert fused16().num_pimcores == 16
+    assert fused4().num_pimcores == 4
+    assert not aim_like().pimcore_has_pool_add
+    assert fused4().pimcore_has_pool_add
+
+
+def test_config_label():
+    assert config_label(32 * 1024, 256) == "G32K_L256"
+    assert config_label(2 * 1024, 0) == "G2K_L0"
+    assert config_label(64 * 1024, 100 * 1024) == "G64K_L100K"
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+
+def test_gbuf_path_is_sequential_lbuf_parallel():
+    """Same payload: the GBUF (cross-bank) path must cost ≫ the parallel
+    near-bank path — the asymmetry the whole paper rests on (§III-B)."""
+    a = aim_like()
+    payload = 1 << 20
+    seq = command_cycles(Command(CMD.PIM_BK2GBUF, "x", bytes_total=payload), a)
+    par = command_cycles(Command(CMD.PIM_BK2LBUF, "x", bytes_total=payload,
+                                 concurrent_cores=16), a)
+    assert seq > 10 * par
+
+
+def test_zero_byte_commands_free():
+    a = aim_like()
+    assert command_cycles(Command(CMD.PIM_BK2GBUF, "x", bytes_total=0), a) == 0
+    assert command_cycles(Command(CMD.PIM_LBUF2BK, "x", bytes_total=0), a) == 0
+
+
+def test_cycles_scale_linearly():
+    a = aim_like()
+    c1 = command_cycles(Command(CMD.PIM_BK2GBUF, "x", bytes_total=1 << 16), a)
+    c2 = command_cycles(Command(CMD.PIM_BK2GBUF, "x", bytes_total=1 << 17), a)
+    assert c2 == pytest.approx(2 * c1, rel=0.1)
+
+
+def test_fused4_matches_fused16_parallel_bandwidth():
+    """Aggregate per-core streaming: channel bandwidth is core-count
+    invariant (see PIMArch.core_bank_bytes_per_cycle)."""
+    payload = 1 << 20
+    c16 = command_cycles(Command(CMD.PIM_BK2LBUF, "x", bytes_total=payload,
+                                 concurrent_cores=16), fused16())
+    c4 = command_cycles(Command(CMD.PIM_BK2LBUF, "x", bytes_total=payload,
+                                concurrent_cores=4), fused4())
+    assert c4 == pytest.approx(c16, rel=0.05)
+
+
+def test_cmp_bills_streaming_not_macs():
+    """memory-cycles semantics: MAC count must not change CMP cycles."""
+    a = aim_like()
+    lo = command_cycles(Command(CMD.PIMCORE_CMP, "x", flag="CONV_BN",
+                                macs=1, bank_stream_bytes=4096,
+                                concurrent_cores=16), a)
+    hi = command_cycles(Command(CMD.PIMCORE_CMP, "x", flag="CONV_BN",
+                                macs=10 ** 9, bank_stream_bytes=4096,
+                                concurrent_cores=16), a)
+    assert lo == hi
+
+
+# ---------------------------------------------------------------------------
+# energy / area
+# ---------------------------------------------------------------------------
+
+def test_sram_curves_monotone():
+    sizes = [256, 1024, 4096, 32 * 1024]
+    es = [sram_pj_per_bit(s) for s in sizes]
+    ars = [sram_area_mm2(s) for s in sizes]
+    assert es == sorted(es) and ars == sorted(ars)
+
+
+def test_small_sram_area_peripheral_dominated():
+    """<1 KB: doubling capacity adds <40 % area (paper §V-C)."""
+    a256, a512 = sram_area_mm2(256), sram_area_mm2(512)
+    assert (a512 - a256) / a256 < 0.5
+
+
+def test_macs_dominate_cmp_energy():
+    a = fused16()
+    e = command_energy_nj(Command(CMD.PIMCORE_CMP, "x", flag="CONV_BN_RELU",
+                                  macs=10 ** 7, bank_stream_bytes=1024,
+                                  concurrent_cores=16), a)
+    assert e["pimcore_mac"] > 10 * sum(v for k, v in e.items()
+                                       if k != "pimcore_mac")
+
+
+def test_restream_discount():
+    a = aim_like()
+    full = command_energy_nj(Command(CMD.PIM_BK2GBUF, "x",
+                                     bytes_total=1 << 20), a)
+    disc = command_energy_nj(Command(CMD.PIM_BK2GBUF, "x",
+                                     bytes_total=1 << 20,
+                                     restream_bytes=1 << 20), a)
+    assert disc["dram_near"] < full["dram_near"]
+
+
+def test_area_ordering():
+    """Fused4 < AiM-like < Fused16 at identical buffers (§V-D Pareto)."""
+    kw = dict(gbuf_bytes=32 * 1024, lbuf_bytes=256)
+    a_f4 = system_area(fused4(**kw)).total_mm2
+    a_aim = system_area(aim_like(**kw)).total_mm2
+    a_f16 = system_area(fused16(**kw)).total_mm2
+    assert a_f4 < a_aim < a_f16
+
+
+def test_command_validation():
+    Command(CMD.PIMCORE_CMP, "x", flag="POOL").validate()
+    with pytest.raises(ValueError):
+        Command(CMD.PIMCORE_CMP, "x", flag="NOT_A_FLAG").validate()
+    with pytest.raises(ValueError):
+        Command(CMD.GBCORE_CMP, "x", flag="CONV_BN").validate()

@@ -1,0 +1,214 @@
+"""Reproduction tests for §V: the three takeaways + headline PPA bands.
+
+Exact constants of the paper's Ramulator2/Accelergy setup are not public
+(in-house post-synthesis data), so quantitative assertions use tolerance
+bands around the paper's reported normalized values; every qualitative
+claim (trend directions, orderings, saturations, Pareto) is asserted
+strictly.  See EXPERIMENTS.md for the full model-vs-paper tables.
+"""
+
+import pytest
+
+from repro.core.commands import CMD, cross_bank_bytes
+from repro.core.fusion import plan_fused
+from repro.core.graph import build_resnet18
+from repro.pim.ppa import SYSTEMS, baseline, evaluate, normalized_ppa
+
+KB = 1024
+
+
+# ---------------------------------------------------------------------------
+# fusion plan reproduces the paper's splits (§V-3)
+# ---------------------------------------------------------------------------
+
+def test_fused16_plan_matches_paper():
+    plan = plan_fused(build_resnet18(), 4, 4)
+    spans = [(g.start, g.stop) for g in plan.groups]
+    assert spans == [(0, 8), (8, 15)]
+    assert plan.tail_start == 15
+
+
+def test_fused4_plan_matches_paper():
+    plan = plan_fused(build_resnet18(), 2, 2)
+    spans = [(g.start, g.stop) for g in plan.groups]
+    assert spans == [(0, 8), (8, 15), (15, 22)]
+    assert plan.tail_start == 22
+
+
+# ---------------------------------------------------------------------------
+# core mechanism: fused dataflow cuts cross-bank (GBUF-path) bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", ["Fused16", "Fused4"])
+def test_fused_reduces_cross_bank_bytes(system):
+    from repro.pim.ppa import build_workload, trace_for
+    wl = build_workload("ResNet18_First8Layers")
+    base_arch = SYSTEMS["AiM-like"](2 * KB, 0)
+    sys_arch = SYSTEMS[system](32 * KB, 256)
+    base_bytes = cross_bank_bytes(trace_for("AiM-like", wl, base_arch))
+    fused_bytes = cross_bank_bytes(trace_for(system, wl, sys_arch))
+    assert fused_bytes < 0.5 * base_bytes
+
+
+# ---------------------------------------------------------------------------
+# Takeaway 1 (§V-B): GBUF=2KB suffices for layer-by-layer; PIMfused needs
+# a larger GBUF for weight reuse.
+# ---------------------------------------------------------------------------
+
+def test_takeaway1_aim_flat_with_gbuf():
+    c2 = normalized_ppa("AiM-like", "ResNet18_Full", 2 * KB, 0)["cycles"]
+    c32 = normalized_ppa("AiM-like", "ResNet18_Full", 32 * KB, 0)["cycles"]
+    assert c2 == pytest.approx(1.0)
+    assert abs(c32 - c2) < 0.02  # flat
+
+
+@pytest.mark.parametrize("system", ["Fused16", "Fused4"])
+@pytest.mark.parametrize("workload",
+                         ["ResNet18_First8Layers", "ResNet18_Full"])
+def test_takeaway1_fused_benefits_from_gbuf(system, workload):
+    cycles = [normalized_ppa(system, workload, g * KB, 0)["cycles"]
+              for g in (2, 8, 32)]
+    assert cycles[0] > cycles[1] > cycles[2]  # monotone improvement
+    # ≥25% cut from 2K→32K (paper shows large gains)
+    assert cycles[2] < 0.75 * cycles[0]
+
+
+def test_fused16_first8_g32k_band():
+    """§V-B obs. 3: Fused16 cuts First8 memory cycles to 6.5 % @ G32K."""
+    c = normalized_ppa("Fused16", "ResNet18_First8Layers", 32 * KB, 0)["cycles"]
+    assert c < 0.20
+
+
+def test_fused16_full_g32k_band():
+    """§V-B obs. 3: 57.7 % for the full model (hybrid tail dilutes)."""
+    c = normalized_ppa("Fused16", "ResNet18_Full", 32 * KB, 0)["cycles"]
+    assert 0.30 < c < 0.75
+    # and the full-model benefit is SMALLER than first8 (obs. 3 reasoning)
+    c8 = normalized_ppa("Fused16", "ResNet18_First8Layers", 32 * KB, 0)["cycles"]
+    assert c > c8
+
+
+# ---------------------------------------------------------------------------
+# Takeaway 2 (§V-C): small LBUF (128–256 B) already effective; saturates.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", ["AiM-like", "Fused16"])
+def test_takeaway2_lbuf_helps_then_saturates(system):
+    c = {l: normalized_ppa(system, "ResNet18_First8Layers", 2 * KB, l)["cycles"]
+         for l in (0, 256, 512, 1024)}
+    assert c[256] < 0.8 * c[0]                   # small LBUF helps a lot
+    # saturation: 512→1024 gains much smaller than 0→256 gains
+    gain_small = c[0] - c[256]
+    gain_late = c[512] - c[1024]
+    assert gain_late < 0.25 * gain_small
+
+
+def test_takeaway2_fused4_saturates_later():
+    """Fused4's 4× larger spatial tiles need ~4× the partial-sum space, so
+    its LBUF benefit saturates past 256 B (×4 the 16-core systems') —
+    consistent with the paper reporting Fused4 as the cycle laggard at
+    small LBUF (§V-C)."""
+    c = {l: normalized_ppa("Fused4", "ResNet18_First8Layers",
+                           2 * KB, l)["cycles"]
+         for l in (0, 256, 1024, 4096, 8192)}
+    assert c[256] < c[0]                          # monotone improvement
+    assert c[1024] < c[256]
+    gain_early = c[0] - c[1024]
+    gain_late = c[4096] - c[8192]
+    assert gain_late < 0.25 * gain_early          # saturated by ~4 KB
+
+
+def test_takeaway2_full_model_weaker():
+    """§V-C: full-model LBUF gains are weaker than first8 (deep layers)."""
+    first8 = normalized_ppa("AiM-like", "ResNet18_First8Layers", 2 * KB, 256)
+    full = normalized_ppa("AiM-like", "ResNet18_Full", 2 * KB, 256)
+    assert first8["cycles"] < full["cycles"] + 0.15
+
+
+def test_lbuf_area_nearly_free():
+    """§V-C: 64B→512B LBUF adds little area (peripheral-dominated)."""
+    a64 = normalized_ppa("Fused16", "ResNet18_Full", 2 * KB, 64)["area"]
+    a512 = normalized_ppa("Fused16", "ResNet18_Full", 2 * KB, 512)["area"]
+    assert (a512 - a64) / a64 < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Takeaway 3 (§V-D): joint sizing beats either alone; huge LBUF unnecessary.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", ["Fused16", "Fused4"])
+def test_takeaway3_joint_beats_single(system):
+    joint = normalized_ppa(system, "ResNet18_Full", 32 * KB, 256)["cycles"]
+    only_g = normalized_ppa(system, "ResNet18_Full", 32 * KB, 0)["cycles"]
+    only_l = normalized_ppa(system, "ResNet18_Full", 2 * KB, 256)["cycles"]
+    assert joint < only_g
+    assert joint < only_l
+
+
+def test_takeaway3_huge_lbuf_unnecessary():
+    """G64K_L100K ≈ G64K_L256 in cycles but much worse energy+area."""
+    big = normalized_ppa("Fused16", "ResNet18_Full", 64 * KB, 100 * KB)
+    small = normalized_ppa("Fused16", "ResNet18_Full", 64 * KB, 256)
+    assert abs(big["cycles"] - small["cycles"]) < 0.10
+    assert big["area"] > 2.0 * small["area"]
+    assert big["energy"] > small["energy"] - 0.05
+
+
+# ---------------------------------------------------------------------------
+# Headline (abstract / §V-D): Fused4 @ G32K_L256 beats baseline on all PPA.
+# ---------------------------------------------------------------------------
+
+def test_headline_fused4_all_ppa_win():
+    n = normalized_ppa("Fused4", "ResNet18_Full", 32 * KB, 256)
+    # paper: cycles 30.6 %, energy 83.4 %, area 76.5 %
+    assert n["cycles"] < 0.65, n
+    assert n["energy"] < 1.0, n
+    assert n["area"] < 1.0, n
+    # bands around the paper's values (model calibration documented)
+    assert 0.25 <= n["cycles"] <= 0.60
+    assert 0.65 <= n["energy"] <= 0.95
+    assert 0.65 <= n["area"] <= 0.85
+
+
+def test_pareto_fused16_vs_fused4():
+    """§V-D: Fused16 fastest at higher area; Fused4 best area efficiency."""
+    f16 = normalized_ppa("Fused16", "ResNet18_Full", 32 * KB, 256)
+    f4 = normalized_ppa("Fused4", "ResNet18_Full", 32 * KB, 256)
+    assert f16["cycles"] < f4["cycles"]
+    assert f4["area"] < f16["area"]
+    assert f4["area"] < 1.0 < f16["area"]
+
+
+def test_fused4_energy_slightly_better_than_fused16():
+    """§V-D: fewer tiles ⇒ less duplication ⇒ Fused4 a bit more efficient."""
+    f16 = normalized_ppa("Fused16", "ResNet18_Full", 32 * KB, 256)["energy"]
+    f4 = normalized_ppa("Fused4", "ResNet18_Full", 32 * KB, 256)["energy"]
+    assert f4 < f16 + 0.02
+
+
+# ---------------------------------------------------------------------------
+# model invariants
+# ---------------------------------------------------------------------------
+
+def test_all_commands_validate():
+    from repro.pim.ppa import build_workload, trace_for
+    for system in SYSTEMS:
+        a = SYSTEMS[system](32 * KB, 256)
+        for wl_name in ("ResNet18_First8Layers", "ResNet18_Full"):
+            for c in trace_for(system, build_workload(wl_name), a):
+                c.validate()
+                assert c.bytes_total >= 0 and c.macs >= 0
+
+
+def test_fused_macs_include_redundancy():
+    """Fused traces carry MORE MACs than the graph (halo recompute)."""
+    from repro.core.commands import trace_summary
+    from repro.pim.ppa import build_workload, trace_for
+    wl = build_workload("ResNet18_First8Layers")
+    a16 = SYSTEMS["Fused16"](32 * KB, 256)
+    fused_macs = trace_summary(trace_for("Fused16", wl, a16))[
+        "PIMcore_CMP"]["macs"]
+    assert fused_macs > wl.total_macs * 1.05
+    base_macs = trace_summary(trace_for(
+        "AiM-like", wl, SYSTEMS["AiM-like"](2 * KB, 0)))["PIMcore_CMP"]["macs"]
+    assert base_macs == wl.total_macs
