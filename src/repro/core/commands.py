@@ -48,6 +48,16 @@ class Command:
     # already open (row-buffer hits): same bus occupancy, cheaper energy
     restream_bytes: int = 0
     concurrent_cores: int = 1       # cores active for parallel commands
+    # explicit placement: DRAM bank ids the payload is striped across, in
+    # the order the sequential controller walks them.  Empty ⇒ legacy trace;
+    # consumers fall back to the byte-count heuristic (timing.py).
+    banks: tuple[int, ...] = ()
+    # True for bank→GBUF reads of STATIC data (weights): no RAW hazard
+    # against earlier compute, so an overlap-aware scheduler may hoist them
+    # behind in-flight PIMcore compute (sim/scheduler.py `overlap` policy).
+    # Writebacks (GBUF2BK) are never prefetchable — they consume computed
+    # data.
+    prefetchable: bool = False
     note: str = ""
 
     def validate(self) -> None:
@@ -57,9 +67,22 @@ class Command:
             raise ValueError(f"bad GBcore flag {self.flag}")
         if self.bytes_total < 0 or self.macs < 0:
             raise ValueError("negative payload")
+        if any(b < 0 for b in self.banks):
+            raise ValueError(f"negative bank id in {self.banks}")
+        if len(set(self.banks)) != len(self.banks):
+            raise ValueError(f"duplicate bank ids in {self.banks}")
+        if self.prefetchable and self.kind is not CMD.PIM_BK2GBUF:
+            raise ValueError("prefetchable only applies to bank→GBUF reads")
 
 
 Trace = list[Command]
+
+
+def validated(trace: Trace) -> Trace:
+    """Validate every command in place and return the trace (mapper epilogue)."""
+    for c in trace:
+        c.validate()
+    return trace
 
 
 def trace_summary(trace: Trace) -> dict[str, dict[str, int]]:

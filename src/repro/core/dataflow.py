@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import math
 
-from repro.core.commands import CMD, Command, Trace
+from repro.core.commands import CMD, Command, Trace, validated
 from repro.core.fusion import FusedGroup, FusionPlan
 from repro.core.graph import Graph, Layer, OpKind
 from repro.core.tiling import tile_group
@@ -54,6 +54,22 @@ ACT_STRIP_BYTES = 2 * 1024
 
 def _w_bytes(layer: Layer, arch: PIMArch) -> int:
     return layer.weight_elems * arch.dtype_bytes
+
+
+def _seq_banks(nbytes: int, arch: PIMArch) -> tuple[int, ...]:
+    """Explicit placement for GBUF-path payloads: data is striped across
+    banks in row-sized units starting at bank 0, so a payload of N rows
+    touches min(num_banks, N) banks — the order the sequential controller
+    walks them (§III-B)."""
+    if nbytes <= 0:
+        return ()
+    return tuple(range(min(arch.num_banks, math.ceil(nbytes / arch.row_bytes))))
+
+
+def _par_banks(arch: PIMArch, cores: int) -> tuple[int, ...]:
+    """Banks active on the parallel near-bank path: every bank fronted by a
+    participating PIMcore (core c owns banks [c·bpc, (c+1)·bpc))."""
+    return tuple(range(min(arch.num_banks, cores * arch.banks_per_pimcore)))
 
 
 def _positions_in_flight(arch: PIMArch) -> int:
@@ -87,6 +103,7 @@ def map_layer_by_layer(graph: Graph, arch: PIMArch,
             # (1) gather + broadcast input activations through GBUF
             fill = int(in_bytes * _act_stream_factor(arch))
             trace.append(Command(CMD.PIM_BK2GBUF, l.name, bytes_total=fill,
+                                 banks=_seq_banks(fill, arch),
                                  note="activation gather"))
             # (2) MAC on PIMcores: weights stream from local banks; the
             # LBUF captures the per-tap cin-vector between positions.
@@ -103,10 +120,13 @@ def map_layer_by_layer(graph: Graph, arch: PIMArch,
                 restream_bytes=max(0, w_stream - int(wpc)),  # row-buffer hits
                 gbuf_stream_bytes=int(in_bytes * l.kh * l.kw
                                       / max(l.stride, 1) ** 2),
-                concurrent_cores=cores, note="cout-partitioned conv"))
+                concurrent_cores=cores, banks=_par_banks(arch, cores),
+                note="cout-partitioned conv"))
             # (3) outputs written to local banks (parallel near-bank path)
             trace.append(Command(CMD.PIM_LBUF2BK, l.name, bytes_total=out_bytes,
-                                 concurrent_cores=cores, note="writeback"))
+                                 concurrent_cores=cores,
+                                 banks=_par_banks(arch, cores),
+                                 note="writeback"))
         elif l.kind.is_pool or l.kind is OpKind.ADD_RELU:
             flag = l.kind.pimcore_flag or "POOL"
             res_bytes = out_bytes if l.residual_of else 0
@@ -115,19 +135,25 @@ def map_layer_by_layer(graph: Graph, arch: PIMArch,
                 # under cout partitioning)
                 trace.append(Command(CMD.PIM_BK2LBUF, l.name,
                                      bytes_total=in_bytes + res_bytes,
-                                     concurrent_cores=cores, note="operands"))
+                                     concurrent_cores=cores,
+                                     banks=_par_banks(arch, cores),
+                                     note="operands"))
                 trace.append(Command(CMD.PIMCORE_CMP, l.name, flag=flag,
                                      alu_ops=l.alu_ops,
                                      lbuf_stream_bytes=(in_bytes + res_bytes
                                                         + out_bytes) // cores,
-                                     concurrent_cores=cores))
+                                     concurrent_cores=cores,
+                                     banks=_par_banks(arch, cores)))
                 trace.append(Command(CMD.PIM_LBUF2BK, l.name,
                                      bytes_total=out_bytes,
-                                     concurrent_cores=cores))
+                                     concurrent_cores=cores,
+                                     banks=_par_banks(arch, cores)))
             else:
                 # AiM-like: POOL/ADD on the GBcore via sequential GBUF hops
                 trace.append(Command(CMD.PIM_BK2GBUF, l.name,
                                      bytes_total=in_bytes + res_bytes,
+                                     banks=_seq_banks(in_bytes + res_bytes,
+                                                      arch),
                                      note="GBcore operands"))
                 trace.append(Command(CMD.GBCORE_CMP, l.name,
                                      flag=l.kind.gbcore_flag or "POOL",
@@ -136,10 +162,11 @@ def map_layer_by_layer(graph: Graph, arch: PIMArch,
                                      + out_bytes))
                 trace.append(Command(CMD.PIM_GBUF2BK, l.name,
                                      bytes_total=out_bytes,
+                                     banks=_seq_banks(out_bytes, arch),
                                      note="GBcore writeback"))
         else:  # pragma: no cover - exhaustive over OpKind
             raise ValueError(f"unmapped layer kind {l.kind}")
-    return trace
+    return validated(trace)
 
 
 # ---------------------------------------------------------------------------
@@ -165,10 +192,13 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch) -> Trace:
         - exact_in
     trace.append(Command(CMD.PIM_BK2LBUF, f"{group.name}:input",
                          bytes_total=exact_in, concurrent_cores=cores,
+                         banks=_par_banks(arch, cores),
                          note="tile-local input fetch"))
     if halo_in > 0:
         trace.append(Command(CMD.PIM_BK2GBUF, f"{group.name}:halo",
-                             bytes_total=halo_in, note="input halo exchange"))
+                             bytes_total=halo_in,
+                             banks=_seq_banks(halo_in, arch),
+                             note="input halo exchange"))
 
     # (2+3) per-layer: weight broadcast via GBUF, compute over each core's
     # tile, intermediates in LBUF else local-bank spill.  For each conv the
@@ -230,6 +260,8 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch) -> Trace:
             trace.append(Command(CMD.PIM_BK2GBUF, f"{group.name}:{l.name}:w",
                                  bytes_total=seq_fill,
                                  restream_bytes=seq_restream,
+                                 banks=_seq_banks(seq_fill, arch),
+                                 prefetchable=True,
                                  note=f"weight broadcast mode={mode}"))
             if par_reread:
                 trace.append(Command(CMD.PIM_BK2LBUF,
@@ -237,6 +269,7 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch) -> Trace:
                                      bytes_total=par_reread,
                                      restream_bytes=par_reread,
                                      concurrent_cores=cores,
+                                     banks=_par_banks(arch, cores),
                                      note="input re-read per weight block"))
         else:
             mode = "-"
@@ -250,14 +283,16 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch) -> Trace:
             bank_stream_bytes=spill_b // cores,
             gbuf_stream_bytes=w_l,                   # broadcast (overlapped)
             lbuf_stream_bytes=int((out_b + in_b) * (1 - spill_frac)) // cores,
-            concurrent_cores=cores, note=f"fused mode={mode}"))
+            concurrent_cores=cores, banks=_par_banks(arch, cores),
+            note=f"fused mode={mode}"))
 
     # (4) final outputs to local banks (exact partition, no overlap)
     last = group[len(group) - 1]
     trace.append(Command(CMD.PIM_LBUF2BK, f"{group.name}:output",
                          bytes_total=last.out_elems * dt,
-                         concurrent_cores=cores))
-    return trace
+                         concurrent_cores=cores,
+                         banks=_par_banks(arch, cores)))
+    return validated(trace)
 
 
 def map_boundary_reorg(graph: Graph, prev_stop: int, arch: PIMArch,
@@ -270,12 +305,14 @@ def map_boundary_reorg(graph: Graph, prev_stop: int, arch: PIMArch,
     dt = arch.dtype_bytes
     fmap = l.out_elems * dt
     moved = fmap // 4 if next_fused else fmap
-    return [
+    return validated([
         Command(CMD.PIM_BK2GBUF, f"{l.name}:reorg_in", bytes_total=moved,
+                banks=_seq_banks(moved, arch),
                 note="boundary reorganisation"),
         Command(CMD.PIM_GBUF2BK, f"{l.name}:reorg_out", bytes_total=moved,
+                banks=_seq_banks(moved, arch),
                 note="boundary reorganisation"),
-    ]
+    ])
 
 
 def map_pimfused(plan: FusionPlan, arch: PIMArch) -> Trace:

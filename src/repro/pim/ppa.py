@@ -29,6 +29,15 @@ SYSTEMS: dict[str, Callable[..., PIMArch]] = {
 # tile grid per PIMfused system (§V-3)
 TILE_GRID = {"Fused16": (4, 4), "Fused4": (2, 2)}
 
+# headline buffer points, (gbuf_bytes, lbuf_bytes): the AiM design point
+# for the baseline, the paper's §V-D G32K_L256 for the fused systems —
+# shared by benchmarks/sim_sweep.py, examples/pim_sim.py and tests
+HEADLINE_CONFIGS: dict[str, tuple[int, int]] = {
+    "AiM-like": (2 * 1024, 0),
+    "Fused16": (32 * 1024, 256),
+    "Fused4": (32 * 1024, 256),
+}
+
 
 @dataclasses.dataclass
 class PPAResult:

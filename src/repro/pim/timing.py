@@ -31,9 +31,23 @@ from repro.core.commands import CMD, Command, Trace
 from repro.pim.arch import PIMArch
 
 
+def rows_crossed(nbytes: int, arch: PIMArch) -> int:
+    """DRAM rows a payload crosses (shared with ``repro.sim.burst``)."""
+    return math.ceil(nbytes / arch.row_bytes) if nbytes > 0 else 0
+
+
 def _row_overhead(bytes_total: int, arch: PIMArch) -> int:
-    rows = math.ceil(bytes_total / arch.row_bytes) if bytes_total else 0
-    return rows * arch.row_overhead_cycles
+    return rows_crossed(bytes_total, arch) * arch.row_overhead_cycles
+
+
+def banks_touched(c: Command, arch: PIMArch) -> int:
+    """Banks a sequential GBUF-path command walks.  Prefers the explicit
+    placement metadata emitted by the dataflow mappers; legacy traces
+    without it fall back to the row-striping heuristic (one row per bank
+    until wrap)."""
+    if c.banks:
+        return len(c.banks)
+    return min(arch.num_banks, max(1, rows_crossed(c.bytes_total, arch)))
 
 
 def command_cycles(c: Command, arch: PIMArch) -> int:
@@ -41,10 +55,8 @@ def command_cycles(c: Command, arch: PIMArch) -> int:
         if c.bytes_total == 0:
             return 0
         xfer = math.ceil(c.bytes_total / arch.bus_bytes_per_cycle)
-        banks_touched = min(arch.num_banks,
-                            max(1, math.ceil(c.bytes_total / arch.row_bytes)))
         return (arch.cmd_issue_cycles + xfer
-                + banks_touched * arch.bank_switch_cycles
+                + banks_touched(c, arch) * arch.bank_switch_cycles
                 + _row_overhead(c.bytes_total, arch))
     if c.kind in (CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK):
         if c.bytes_total == 0:
@@ -80,6 +92,7 @@ def simulate_cycles(trace: Trace, arch: PIMArch) -> CycleReport:
     by_kind: dict[str, int] = {}
     total = 0
     for c in trace:
+        c.validate()
         cyc = command_cycles(c, arch)
         by_kind[c.kind.value] = by_kind.get(c.kind.value, 0) + cyc
         total += cyc

@@ -1,0 +1,34 @@
+"""Burst-level trace-driven DRAM-PIM simulator (Ramulator2-class fidelity).
+
+Lowers the aggregate ``Command`` IR (:mod:`repro.core.commands`) into
+per-bank burst micro-ops and replays them on an event-driven engine with
+per-row activation accounting, shared-internal-bus arbitration for the
+sequential GBUF path, parallel near-bank ports for LBUF transfers, and
+per-PIMcore operand-streaming occupancy.
+
+Modules:
+
+* :mod:`repro.sim.burst`     — ``Command`` → ``BurstOp`` lowering
+  (byte-conservation invariants).
+* :mod:`repro.sim.engine`    — event loop + per-bank / per-core / bus
+  resource timelines with per-row activation charges.
+* :mod:`repro.sim.scheduler` — issue policies: ``serial`` (the paper's
+  one-CMD-at-a-time controller) and ``overlap`` (weight prefetch behind
+  PIMcore compute).
+* :mod:`repro.sim.report`    — per-bank utilization, bus-occupancy
+  breakdown, cross-check against the analytic
+  :func:`repro.pim.timing.simulate_cycles` model.
+"""
+
+from repro.sim.burst import BurstOp, Resource, check_conservation, lower_command, lower_trace
+from repro.sim.engine import SimResult, simulate
+from repro.sim.report import (SimReport, assert_fidelity, cross_check,
+                              make_report, policy_reports)
+from repro.sim.scheduler import POLICIES, command_deps
+
+__all__ = [
+    "BurstOp", "Resource", "lower_command", "lower_trace",
+    "check_conservation", "SimResult", "simulate", "POLICIES",
+    "command_deps", "SimReport", "assert_fidelity", "cross_check",
+    "make_report", "policy_reports",
+]

@@ -1,0 +1,192 @@
+"""Command → burst micro-op lowering.
+
+Each aggregate :class:`repro.core.commands.Command` becomes a list of
+:class:`BurstOp` — row-sized (or smaller) data movements bound to a concrete
+resource and DRAM bank — matching how the paper's extended Ramulator2 would
+see the traffic:
+
+* ``PIM_BK2GBUF`` / ``PIM_GBUF2BK`` — the controller walks the payload's
+  banks one row at a time over the shared internal bus: one BurstOp per row
+  chunk, bank order given by the command's explicit ``banks`` placement
+  (round-robin when the payload exceeds one row per bank).  The first chunk
+  on each newly-targeted bank carries the bus re-target penalty.
+* ``PIM_BK2LBUF`` / ``PIM_LBUF2BK`` — the payload splits evenly across
+  participating PIMcores, then across each core's banks; every bank streams
+  its row chunks through its own near-bank port concurrently.
+* ``PIMCORE_CMP`` — per-core operand streaming (``bank_stream_bytes`` is
+  already a per-core figure): row chunks at the core's aggregate near-bank
+  bandwidth, occupying that core's port for the duration (MAC issue is
+  overlapped behind streaming, as in the analytic model).
+* ``GBCORE_CMP`` — a single zero-byte op on the GBcore (GBUF-resident
+  operands, SRAM speed: only issue overhead is visible).
+
+Every chunk opens a fresh DRAM row (chunks are row-sized by construction),
+so row ids are unique per (command, stream) — the engine charges one
+activation per chunk, exactly like the analytic model.
+
+Byte conservation is an invariant of the lowering, checked by
+:func:`check_conservation`: data-movement commands lower to bursts summing
+to ``bytes_total``; compute commands to ``bank_stream_bytes ×
+concurrent_cores`` (the operand traffic actually pulled out of DRAM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+from repro.core.commands import CMD, Command, Trace
+from repro.pim.arch import PIMArch
+from repro.pim.timing import banks_touched
+
+_SEQ = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)
+_PAR = (CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK)
+
+
+class Resource(enum.Enum):
+    """Timeline a burst occupies while in flight."""
+
+    BUS = "bus"            # shared internal bus (sequential GBUF path)
+    BANK_PORT = "bank"     # a bank's 256-bit near-bank I/O port
+    CORE_PORT = "core"     # a PIMcore's aggregate streaming port
+    GBCORE = "gbcore"      # channel-level GBcore
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstOp:
+    cmd_index: int          # index of the source Command in the trace
+    kind: CMD
+    resource: Resource
+    unit: int               # bank id / core id / 0 for BUS and GBCORE
+    bank: int               # DRAM bank attribution for stats (-1: none)
+    row: int                # row id for row-buffer tracking (-1: none)
+    nbytes: int
+    switch_cycles: int = 0  # bus re-target penalty (first visit to a bank)
+
+    def transfer_cycles(self, arch: PIMArch) -> int:
+        """Data-phase cycles (excludes the per-row activation charge and
+        the per-command issue overhead, both applied by the engine)."""
+        if self.nbytes == 0:
+            return 0
+        if self.resource is Resource.BUS:
+            bw = arch.bus_bytes_per_cycle
+        elif self.resource is Resource.BANK_PORT:
+            bw = arch.bank_io_bytes_per_cycle
+        elif self.resource is Resource.CORE_PORT:
+            bw = arch.core_bank_bytes_per_cycle
+        else:  # pragma: no cover - GBCORE bursts carry no bytes
+            raise ValueError("GBcore bursts carry no payload")
+        return math.ceil(self.nbytes / bw)
+
+
+def _row_chunks(nbytes: int, row_bytes: int) -> list[int]:
+    """Split a payload into full row-sized chunks plus a partial tail."""
+    full, tail = divmod(nbytes, row_bytes)
+    return [row_bytes] * full + ([tail] if tail else [])
+
+
+def _even_split(nbytes: int, parts: int) -> list[int]:
+    """Split bytes across ``parts`` with the remainder spread one-by-one
+    (max share == ceil(nbytes / parts), matching the analytic model)."""
+    base, rem = divmod(nbytes, parts)
+    return [base + (1 if i < rem else 0) for i in range(parts)]
+
+
+def _core_banks(core: int, arch: PIMArch, c: Command) -> list[int]:
+    """Banks PIMcore ``core`` streams through for command ``c``: the
+    explicit placement restricted to the core's bank range when present
+    (core *c* owns banks [c·bpc, (c+1)·bpc)), else the full range."""
+    bpc = arch.banks_per_pimcore
+    owned = range(core * bpc, (core + 1) * bpc)
+    if c.banks:
+        placed = [b for b in c.banks if b in owned]
+        if placed:
+            return placed
+    return list(owned)
+
+
+def _lower_sequential(idx: int, c: Command, arch: PIMArch) -> list[BurstOp]:
+    """GBUF-path walk: row chunks round-robin over the placement banks."""
+    banks = list(c.banks) if c.banks else list(range(banks_touched(c, arch)))
+    chunks = _row_chunks(c.bytes_total, arch.row_bytes)
+    ops: list[BurstOp] = []
+    visited: set[int] = set()
+    for row, chunk in enumerate(chunks):
+        bank = banks[row % len(banks)]
+        switch = arch.bank_switch_cycles if bank not in visited else 0
+        visited.add(bank)
+        ops.append(BurstOp(idx, c.kind, Resource.BUS, 0, bank, row, chunk,
+                           switch_cycles=switch))
+    return ops
+
+
+def _lower_parallel(idx: int, c: Command, arch: PIMArch) -> list[BurstOp]:
+    """Near-bank path: even per-core split, then even per-bank split; every
+    bank streams its chunks through its own port concurrently."""
+    cores = max(c.concurrent_cores, 1)
+    ops: list[BurstOp] = []
+    for core, core_bytes in enumerate(_even_split(c.bytes_total, cores)):
+        banks = _core_banks(core, arch, c)
+        for lane, bank_bytes in enumerate(_even_split(core_bytes, len(banks))):
+            bank = banks[lane]
+            for row, chunk in enumerate(_row_chunks(bank_bytes,
+                                                    arch.row_bytes)):
+                ops.append(BurstOp(idx, c.kind, Resource.BANK_PORT, bank,
+                                   bank, row, chunk))
+    return ops
+
+
+def _lower_cmp(idx: int, c: Command, arch: PIMArch) -> list[BurstOp]:
+    """Operand streaming: each active core pulls ``bank_stream_bytes`` out
+    of its banks at aggregate port bandwidth; rows open sequentially (the
+    analytic model bills one activation per row of the per-core stream)."""
+    cores = max(c.concurrent_cores, 1)
+    ops: list[BurstOp] = []
+    for core in range(cores):
+        banks = _core_banks(core, arch, c)
+        for row, chunk in enumerate(_row_chunks(c.bank_stream_bytes,
+                                                arch.row_bytes)):
+            ops.append(BurstOp(idx, c.kind, Resource.CORE_PORT, core,
+                               banks[row % len(banks)], row, chunk))
+    return ops
+
+
+def lower_command(idx: int, c: Command, arch: PIMArch) -> list[BurstOp]:
+    c.validate()
+    if c.kind in _SEQ:
+        return _lower_sequential(idx, c, arch) if c.bytes_total else []
+    if c.kind in _PAR:
+        return _lower_parallel(idx, c, arch) if c.bytes_total else []
+    if c.kind is CMD.PIMCORE_CMP:
+        return _lower_cmp(idx, c, arch)
+    if c.kind is CMD.GBCORE_CMP:
+        return [BurstOp(idx, c.kind, Resource.GBCORE, 0, -1, -1, 0)]
+    raise ValueError(f"unknown command kind {c.kind}")  # pragma: no cover
+
+
+def check_conservation(c: Command, ops: list[BurstOp]) -> None:
+    """Assert the lowering moved exactly the bytes the command describes."""
+    total = sum(op.nbytes for op in ops)
+    if c.kind in _SEQ or c.kind in _PAR:
+        want = c.bytes_total
+    elif c.kind is CMD.PIMCORE_CMP:
+        want = c.bank_stream_bytes * max(c.concurrent_cores, 1)
+    else:
+        want = 0
+    if total != want:
+        raise AssertionError(
+            f"{c.kind.value} '{c.layer}': bursts carry {total} B, "
+            f"command describes {want} B")
+
+
+def lower_trace(trace: Trace, arch: PIMArch,
+                check: bool = True) -> list[list[BurstOp]]:
+    """Lower a full trace; ``check`` verifies byte conservation per command."""
+    lowered = []
+    for idx, c in enumerate(trace):
+        ops = lower_command(idx, c, arch)
+        if check:
+            check_conservation(c, ops)
+        lowered.append(ops)
+    return lowered

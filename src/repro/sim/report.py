@@ -1,0 +1,103 @@
+"""Simulation reports: per-bank utilization, bus-occupancy breakdown, and
+the fidelity cross-check against the analytic cycle model.
+
+The contract (documented in README / ROADMAP): under the ``serial`` policy
+the burst simulator and :func:`repro.pim.timing.simulate_cycles` describe
+the same machine — one CMD in flight, every row activation billed — so
+their totals must agree within rounding (±5 % is the enforced band; the
+residual comes from per-chunk ceiling effects on partial tail bursts).
+The ``overlap`` policy then measures what the analytic model cannot: how
+much of the sequential GBUF path hides behind PIMcore compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.commands import Trace
+from repro.pim.arch import PIMArch
+from repro.pim.timing import simulate_cycles
+from repro.sim.burst import lower_trace
+from repro.sim.engine import SimResult, simulate
+
+
+@dataclasses.dataclass
+class SimReport:
+    system: str
+    policy: str
+    result: SimResult
+    analytic_total: int
+
+    @property
+    def simulated_total(self) -> int:
+        return self.result.makespan
+
+    @property
+    def relative_error(self) -> float:
+        """Simulated vs analytic total (meaningful for ``serial`` only)."""
+        return (self.simulated_total - self.analytic_total) \
+            / max(self.analytic_total, 1)
+
+    def lines(self) -> list[str]:
+        r = self.result
+        out = [
+            f"[{self.system}] policy={self.policy}  "
+            f"simulated={r.makespan}  analytic={self.analytic_total}  "
+            f"err={self.relative_error:+.2%}",
+            f"  row activations: {r.row_activations}   "
+            f"bus occupancy: {r.bus_occupancy():.2%} "
+            f"(xfer={r.bus_busy['xfer']} switch={r.bus_busy['switch']} "
+            f"row={r.bus_busy['row']})",
+        ]
+        util = r.bank_utilization()
+        if util:
+            top = sorted(util.items(), key=lambda kv: -kv[1])[:4]
+            out.append("  bank traffic (bus tap + near-bank port): "
+                       + " ".join(f"b{b}={u:.2%}" for b, u in top)
+                       + f"  (mean {sum(util.values()) / len(util):.2%})")
+        out.append("  busy cycles by kind: "
+                   + " ".join(f"{k}={v}"
+                              for k, v in sorted(r.busy_by_kind.items())))
+        return out
+
+
+def make_report(trace: Trace, arch: PIMArch,
+                policy: str = "serial") -> SimReport:
+    return SimReport(
+        system=arch.name,
+        policy=policy,
+        result=simulate(trace, arch, policy),
+        analytic_total=simulate_cycles(trace, arch).total,
+    )
+
+
+def policy_reports(trace: Trace, arch: PIMArch,
+                   policies: tuple[str, ...] = ("serial", "overlap"),
+                   ) -> dict[str, SimReport]:
+    """Reports for several policies, lowering the trace and running the
+    analytic model once (the lowering dominates the cost on big traces)."""
+    lowered = lower_trace(trace, arch)
+    analytic = simulate_cycles(trace, arch).total
+    return {p: SimReport(system=arch.name, policy=p,
+                         result=simulate(trace, arch, p, lowered=lowered),
+                         analytic_total=analytic)
+            for p in policies}
+
+
+def assert_fidelity(rep: SimReport, tolerance: float = 0.05) -> SimReport:
+    """The fidelity gate: a ``serial`` report must agree with the analytic
+    model within ``tolerance``."""
+    if abs(rep.relative_error) > tolerance:
+        raise AssertionError(
+            f"serial simulation diverges from analytic model on "
+            f"{rep.system}: simulated={rep.simulated_total} "
+            f"analytic={rep.analytic_total} "
+            f"err={rep.relative_error:+.2%} > ±{tolerance:.0%}")
+    return rep
+
+
+def cross_check(trace: Trace, arch: PIMArch,
+                tolerance: float = 0.05) -> SimReport:
+    """Run the ``serial`` policy and assert agreement with the analytic
+    model within ``tolerance``."""
+    return assert_fidelity(make_report(trace, arch, "serial"), tolerance)

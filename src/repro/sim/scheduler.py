@@ -1,0 +1,75 @@
+"""Issue policies: which earlier commands must RETIRE before a command may
+issue.  Resource contention (bus, bank ports, core ports) is not encoded
+here — the engine's timelines arbitrate that; the scheduler only expresses
+controller ordering and data hazards.
+
+* ``serial`` — the paper's controller (§V-1): one custom CMD in flight at a
+  time, command *i* issues when *i−1* retires.  This is the policy the
+  analytic :func:`repro.pim.timing.simulate_cycles` model assumes, and the
+  two agree within rounding (see ``sim/report.cross_check``).
+
+* ``overlap`` — transfers of STATIC data (``Command.prefetchable``: fused
+  weight broadcasts) may hoist past in-flight PIMcore compute and
+  near-bank traffic: a weight ``PIM_BK2GBUF`` waits only for the previous
+  GBUF-path transfer (the shared bus is in-order) and for the compute
+  consuming the double-buffer half it overwrites (prefetch depth ≤ 1), so
+  the next group's refill hides behind the current group's compute.
+  Everything else stays serial, which preserves every RAW hazard:
+  activation gathers and reorganisations still wait for the writebacks
+  that produce their data, and a CMP still waits for the weight fill that
+  feeds it.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core.commands import CMD, Trace
+
+_GBUF_PATH = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)
+
+
+def serial_deps(trace: Trace) -> list[list[int]]:
+    return [[i - 1] if i else [] for i in range(len(trace))]
+
+
+def overlap_deps(trace: Trace) -> list[list[int]]:
+    deps: list[list[int]] = []
+    last_solid = -1     # most recent non-prefetchable command
+    half_owner = -1     # consumer of the buffer half the NEXT prefetch reuses:
+    #                     last_solid as of the previous prefetch's issue slot
+    for i, c in enumerate(trace):
+        if c.prefetchable:
+            # waits for (a) the previous GBUF-path transfer — the shared
+            # bus is in-order — and (b) the compute consuming the
+            # double-buffer half this fill overwrites, bounding prefetch
+            # depth to one group ahead; the CURRENT compute may still be
+            # in flight.
+            j = i - 1
+            while j >= 0 and trace[j].kind not in _GBUF_PATH:
+                j -= 1
+            deps.append(sorted({k for k in (j, half_owner) if k >= 0}))
+            half_owner = last_solid
+        else:
+            # the ONLY thing allowed to float is a prefetch: everything
+            # else chains to the last non-prefetchable command (the serial
+            # program order), plus its immediate predecessor so a consumer
+            # never overtakes the weight fill that feeds it.
+            deps.append(sorted({j for j in (last_solid, i - 1) if j >= 0}))
+            last_solid = i
+    return deps
+
+
+POLICIES: dict[str, Callable[[Trace], list[list[int]]]] = {
+    "serial": serial_deps,
+    "overlap": overlap_deps,
+}
+
+
+def command_deps(trace: Trace, policy: str) -> list[list[int]]:
+    try:
+        return POLICIES[policy](trace)
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {policy!r}; choose from {sorted(POLICIES)}"
+        ) from None

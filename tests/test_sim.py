@@ -1,0 +1,248 @@
+"""Tests for the burst-level trace simulator (repro.sim).
+
+Covers the ISSUE acceptance gates: byte-conservation invariants of the
+Command → BurstOp lowering, the ±5 % serial-policy agreement with the
+analytic cycle model on end-to-end ResNet18 for all three systems, the
+overlap-policy speedup on fused systems, the validate() regression, and
+the legacy banks-heuristic fallback.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core.commands import CMD, Command, validated
+from repro.pim.ppa import HEADLINE_CONFIGS, SYSTEMS, build_workload, trace_for
+from repro.pim.timing import banks_touched, command_cycles, simulate_cycles
+from repro.sim.burst import check_conservation, lower_command, lower_trace
+from repro.sim.engine import simulate
+from repro.sim.report import cross_check, make_report
+from repro.sim.scheduler import command_deps
+
+KB = 1024
+
+CONFIGS = HEADLINE_CONFIGS
+
+
+def _system_trace(system, workload="ResNet18_First8Layers"):
+    gbuf, lbuf = CONFIGS[system]
+    arch = SYSTEMS[system](gbuf_bytes=gbuf, lbuf_bytes=lbuf)
+    return trace_for(system, build_workload(workload), arch), arch
+
+
+# ---------------------------------------------------------------------------
+# byte conservation (per kind) — the lowering invariant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", sorted(CONFIGS))
+@pytest.mark.parametrize("workload",
+                         ["ResNet18_First8Layers", "ResNet18_Full"])
+def test_burst_lowering_conserves_bytes(system, workload):
+    trace, arch = _system_trace(system, workload)
+    for idx, c in enumerate(trace):
+        ops = lower_command(idx, c, arch)
+        check_conservation(c, ops)  # raises on mismatch
+        moved = sum(op.nbytes for op in ops)
+        if c.kind in (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK,
+                      CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK):
+            assert moved == c.bytes_total
+        elif c.kind is CMD.PIMCORE_CMP:
+            assert moved == c.bank_stream_bytes * c.concurrent_cores
+        else:
+            assert moved == 0
+
+
+@pytest.mark.parametrize("nbytes", [1, 37, 2 * KB, 2 * KB + 1, 123456])
+@pytest.mark.parametrize("kind", [CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK])
+def test_sequential_lowering_properties(nbytes, kind):
+    arch = SYSTEMS["Fused16"](32 * KB, 256)
+    c = Command(kind, "x", bytes_total=nbytes)
+    ops = lower_command(0, c, arch)
+    assert sum(op.nbytes for op in ops) == nbytes
+    # every chunk row-sized or smaller, rows unique, switch on first visit
+    assert all(op.nbytes <= arch.row_bytes for op in ops)
+    assert len({op.row for op in ops}) == len(ops)
+    switches = [op for op in ops if op.switch_cycles]
+    assert len(switches) == len({op.bank for op in ops})
+    assert len({op.bank for op in ops}) == banks_touched(c, arch)
+
+
+@pytest.mark.parametrize("nbytes", [16, 4 * KB, 1_000_000])
+@pytest.mark.parametrize("cores", [4, 16])
+def test_parallel_lowering_split_is_even(nbytes, cores):
+    arch = SYSTEMS["Fused4" if cores == 4 else "Fused16"](2 * KB, 0)
+    c = Command(CMD.PIM_BK2LBUF, "x", bytes_total=nbytes,
+                concurrent_cores=cores)
+    ops = lower_command(0, c, arch)
+    assert sum(op.nbytes for op in ops) == nbytes
+    per_core = {}
+    for op in ops:
+        per_core[op.bank // arch.banks_per_pimcore] = \
+            per_core.get(op.bank // arch.banks_per_pimcore, 0) + op.nbytes
+    # even split: max per-core share == ceil(total / cores)
+    assert max(per_core.values()) == -(-nbytes // cores)
+
+
+# ---------------------------------------------------------------------------
+# golden cross-check: serial policy ≈ analytic model (±5 %)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", sorted(CONFIGS))
+def test_serial_matches_analytic_resnet18_full(system):
+    trace, arch = _system_trace(system, "ResNet18_Full")
+    rep = cross_check(trace, arch, tolerance=0.05)  # raises outside band
+    assert abs(rep.relative_error) <= 0.05
+    assert rep.simulated_total > 0
+
+
+def test_serial_per_command_matches_analytic():
+    """Stronger than the ±5 % aggregate: per-command finish deltas equal
+    the analytic per-command cycles under the serial policy."""
+    trace, arch = _system_trace("Fused16")
+    res = simulate(trace, arch, "serial")
+    prev = 0
+    for i, c in enumerate(trace):
+        sim_cyc = res.cmd_finish[i] - prev
+        assert sim_cyc == command_cycles(c, arch)
+        prev = res.cmd_finish[i]
+
+
+# ---------------------------------------------------------------------------
+# overlap policy: strictly better on fused systems, never worse, safe on
+# layer-by-layer traces (no prefetchable commands to hoist)
+# ---------------------------------------------------------------------------
+
+def test_overlap_strictly_faster_on_fused():
+    wins = 0
+    for system in ("Fused16", "Fused4"):
+        trace, arch = _system_trace(system, "ResNet18_Full")
+        serial = simulate(trace, arch, "serial")
+        overlap = simulate(trace, arch, "overlap")
+        assert overlap.makespan <= serial.makespan
+        wins += overlap.makespan < serial.makespan
+    assert wins >= 1
+
+
+def test_overlap_is_noop_for_layer_by_layer():
+    trace, arch = _system_trace("AiM-like")
+    assert not any(c.prefetchable for c in trace)
+    assert simulate(trace, arch, "overlap").makespan == \
+        simulate(trace, arch, "serial").makespan
+
+
+def _reaches(deps, start, target):
+    """True if ``target`` is in the transitive dependency closure of
+    ``start``."""
+    frontier, seen = list(deps[start]), set()
+    while frontier:
+        j = frontier.pop()
+        if j == target:
+            return True
+        if j not in seen:
+            seen.add(j)
+            frontier.extend(deps[j])
+    return False
+
+
+def test_overlap_deps_preserve_bus_order():
+    trace, _ = _system_trace("Fused16")
+    deps = command_deps(trace, "overlap")
+    seq = [i for i, c in enumerate(trace)
+           if c.kind in (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)]
+    # every GBUF-path command (transitively) waits for the previous one
+    for a, b in zip(seq, seq[1:]):
+        assert _reaches(deps, b, a)
+
+
+def test_overlap_only_prefetch_floats():
+    """Regression: a non-prefetchable command must never overtake the
+    last non-prefetchable command before it — only prefetches hoist past
+    in-flight compute (RAW hazards on intermediates stay serialized)."""
+    trace, _ = _system_trace("Fused16")
+    deps = command_deps(trace, "overlap")
+    solid = [i for i, c in enumerate(trace) if not c.prefetchable]
+    for a, b in zip(solid, solid[1:]):
+        assert _reaches(deps, b, a), f"command {b} may overtake {a}"
+    # and a consumer never overtakes the weight fill that feeds it
+    for i, c in enumerate(trace):
+        if c.prefetchable:
+            assert any(_reaches(deps, k, i) for k in range(i + 1, len(trace))
+                       if not trace[k].prefetchable)
+    # prefetch depth ≤ 1: each fill waits for the compute consuming the
+    # double-buffer half it overwrites (last solid before the previous fill)
+    pref = [i for i, c in enumerate(trace) if c.prefetchable]
+    for p_prev, p_cur in zip(pref, pref[1:]):
+        owners = [k for k in solid if k < p_prev]
+        if owners:
+            assert _reaches(deps, p_cur, owners[-1])
+
+
+def test_unknown_policy_raises():
+    trace, arch = _system_trace("Fused16")
+    with pytest.raises(ValueError, match="unknown policy"):
+        simulate(trace, arch, "speculative")
+
+
+# ---------------------------------------------------------------------------
+# validate(): now actually invoked (regression for the dormant-method bug)
+# ---------------------------------------------------------------------------
+
+def test_malformed_flag_raises_in_simulate_cycles():
+    bad = Command(CMD.PIMCORE_CMP, "l", flag="NOT_A_FLAG")
+    with pytest.raises(ValueError, match="bad PIMcore flag"):
+        simulate_cycles([bad], SYSTEMS["Fused16"](2 * KB, 0))
+
+
+def test_malformed_flag_raises_in_lowering():
+    bad = Command(CMD.GBCORE_CMP, "l", flag="CONV_BN")
+    with pytest.raises(ValueError, match="bad GBcore flag"):
+        lower_command(0, bad, SYSTEMS["AiM-like"](2 * KB, 0))
+
+
+def test_validated_trace_helper():
+    with pytest.raises(ValueError, match="duplicate bank ids"):
+        validated([Command(CMD.PIM_BK2GBUF, "l", bytes_total=4,
+                           banks=(0, 0))])
+    with pytest.raises(ValueError, match="prefetchable"):
+        validated([Command(CMD.PIM_BK2LBUF, "l", bytes_total=4,
+                           prefetchable=True)])
+    # writebacks consume computed data — never hoistable
+    with pytest.raises(ValueError, match="prefetchable"):
+        validated([Command(CMD.PIM_GBUF2BK, "l", bytes_total=4,
+                           prefetchable=True)])
+
+
+def test_mappers_emit_valid_placement():
+    for system in CONFIGS:
+        trace, arch = _system_trace(system)
+        for c in trace:
+            c.validate()
+            if c.kind in (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK) and c.bytes_total:
+                assert c.banks, f"{c.layer}: sequential cmd missing placement"
+                assert max(c.banks) < arch.num_banks
+
+
+# ---------------------------------------------------------------------------
+# legacy traces: banks_touched falls back to the byte-count heuristic
+# ---------------------------------------------------------------------------
+
+def test_banks_metadata_fallback_heuristic():
+    arch = SYSTEMS["AiM-like"](2 * KB, 0)
+    legacy = Command(CMD.PIM_BK2GBUF, "l", bytes_total=5 * arch.row_bytes)
+    assert not legacy.banks
+    assert banks_touched(legacy, arch) == 5
+    # explicit placement wins over the heuristic
+    placed = dataclasses.replace(legacy, banks=(0, 1))
+    assert banks_touched(placed, arch) == 2
+    assert command_cycles(placed, arch) < command_cycles(legacy, arch)
+    # legacy traces still lower and simulate
+    rep = make_report([legacy], arch, policy="serial")
+    assert rep.simulated_total == command_cycles(legacy, arch)
+
+
+def test_zero_byte_transfers_are_free():
+    arch = SYSTEMS["Fused16"](2 * KB, 0)
+    c = Command(CMD.PIM_BK2GBUF, "l", bytes_total=0)
+    assert command_cycles(c, arch) == 0
+    assert lower_trace([c], arch) == [[]]
+    assert simulate([c], arch, "serial").makespan == 0
