@@ -4,33 +4,41 @@ Each returns a list of CSV rows ``name,us_per_call,derived`` where
 ``derived`` carries the normalized PPA triple the paper reports; the
 wall-clock of one full PPA evaluation is the ``us_per_call`` (this IS the
 paper's profiling framework, so its speed is the benchmark).
+
+Each figure runs through its own fresh :class:`repro.experiment.Experiment`
+so every timed row is a real evaluation (never a cross-figure cache hit),
+while WITHIN a figure the driver's memoization works exactly as in
+production sweeps: graphs, fusion tilings and the per-workload
+normalisation baseline are computed once, not once per sweep point.
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.pim.ppa import baseline, evaluate, normalized_ppa
+from repro.experiment import Experiment
 
 KB = 1024
 SYSTEMS = ("AiM-like", "Fused16", "Fused4")
 WORKLOADS = ("ResNet18_First8Layers", "ResNet18_Full")
 
 
-def _timed(system, wl, g, l):
+def _timed(exp: Experiment, system: str, wl: str, g: int, l: int):
     t0 = time.perf_counter()
-    n = normalized_ppa(system, wl, g, l)
+    r = exp.run(workload=wl, system=system, gbuf_bytes=g, lbuf_bytes=l)
+    n = exp.normalized(r)
     us = (time.perf_counter() - t0) * 1e6
     return n, us
 
 
 def fig5_gbuf_sweep() -> list[str]:
     """§V-B: GBUF 2K→64K, LBUF=0."""
+    exp = Experiment()
     rows = []
     for wl in WORKLOADS:
         for system in SYSTEMS:
             for g in (2, 4, 8, 16, 32, 64):
-                n, us = _timed(system, wl, g * KB, 0)
+                n, us = _timed(exp, system, wl, g * KB, 0)
                 rows.append(
                     f"fig5/{wl}/{system}/G{g}K_L0,{us:.0f},"
                     f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
@@ -40,11 +48,12 @@ def fig5_gbuf_sweep() -> list[str]:
 
 def fig6_lbuf_sweep() -> list[str]:
     """§V-C: LBUF 0→1K, GBUF=2K."""
+    exp = Experiment()
     rows = []
     for wl in WORKLOADS:
         for system in SYSTEMS:
             for l in (0, 64, 128, 256, 512, 1024):
-                n, us = _timed(system, wl, 2 * KB, l)
+                n, us = _timed(exp, system, wl, 2 * KB, l)
                 rows.append(
                     f"fig6/{wl}/{system}/G2K_L{l},{us:.0f},"
                     f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
@@ -54,11 +63,12 @@ def fig6_lbuf_sweep() -> list[str]:
 
 def fig7_joint_sweep() -> list[str]:
     """§V-D: joint GBUF×LBUF, ResNet18_Full."""
+    exp = Experiment()
     rows = []
     for system in SYSTEMS:
         for g, l in ((2, 0), (8, 128), (16, 256), (32, 256), (64, 256),
                      (64, 100 * KB)):
-            n, us = _timed(system, "ResNet18_Full", g * KB, l)
+            n, us = _timed(exp, system, "ResNet18_Full", g * KB, l)
             label = f"G{g}K_L{l if l < KB else str(l // KB) + 'K'}"
             rows.append(
                 f"fig7/ResNet18_Full/{system}/{label},{us:.0f},"
@@ -69,7 +79,7 @@ def fig7_joint_sweep() -> list[str]:
 
 def headline() -> list[str]:
     """Abstract / §V-D: Fused4 G32K_L256 vs paper 0.306/0.834/0.765."""
-    n, us = _timed("Fused4", "ResNet18_Full", 32 * KB, 256)
+    n, us = _timed(Experiment(), "Fused4", "ResNet18_Full", 32 * KB, 256)
     paper = {"cycles": 0.306, "energy": 0.834, "area": 0.765}
     derived = ";".join(
         f"{k}={n[k]:.4f}(paper {paper[k]})" for k in ("cycles", "energy",
@@ -77,24 +87,38 @@ def headline() -> list[str]:
     return [f"headline/Fused4/G32K_L256,{us:.0f},{derived}"]
 
 
+def new_workloads() -> list[str]:
+    """Beyond the paper: VGG11 and MobileNetV1 at each system's registered
+    default design point (registry extensibility proof)."""
+    exp = Experiment()
+    rows = []
+    for wl in ("VGG11", "MobileNetV1"):
+        for system in SYSTEMS:
+            t0 = time.perf_counter()
+            r = exp.run(workload=wl, system=system)
+            n = exp.normalized(r)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append(
+                f"workloads/{wl}/{system}/{r.config},{us:.0f},"
+                f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
+                f"area={n['area']:.4f}")
+    return rows
+
+
 def cross_bank_transfer() -> list[str]:
     """Fig. 1 mechanism: cross-bank (GBUF-path) bytes, fused vs baseline."""
-    from repro.core.commands import cross_bank_bytes
-    from repro.pim.ppa import SYSTEMS as SYS, build_workload, trace_for
+    exp = Experiment()
     rows = []
     for wl_name in WORKLOADS:
-        wl = build_workload(wl_name)
         t0 = time.perf_counter()
-        base = cross_bank_bytes(trace_for("AiM-like", wl,
-                                          SYS["AiM-like"](2 * KB, 0)))
+        base = exp.run(workload=wl_name, system="AiM-like").cross_bank_bytes
         us = (time.perf_counter() - t0) * 1e6
         for system in ("Fused16", "Fused4"):
-            b = cross_bank_bytes(trace_for(system, wl,
-                                           SYS[system](32 * KB, 256)))
+            b = exp.run(workload=wl_name, system=system).cross_bank_bytes
             rows.append(f"xbank/{wl_name}/{system},{us:.0f},"
                         f"bytes={b};baseline={base};ratio={b / base:.4f}")
     return rows
 
 
 ALL = (fig5_gbuf_sweep, fig6_lbuf_sweep, fig7_joint_sweep, headline,
-       cross_bank_transfer)
+       new_workloads, cross_bank_transfer)

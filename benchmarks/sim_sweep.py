@@ -1,7 +1,8 @@
 """Burst-level simulator sweep: analytic vs simulated paths on ResNet18.
 
-Runs AiM-like, Fused16 and Fused4 (paper buffer points) through BOTH cycle
-paths and reports, per system:
+Runs every registered system at its registry default buffer point through
+BOTH cycle paths (the ``burst-sim`` experiment backend under each issue
+policy) and reports, per system:
 
 * the ``serial``-policy agreement with the analytic model (the fidelity
   contract: ±5 %),
@@ -10,6 +11,9 @@ paths and reports, per system:
   baseline would buy),
 * per-bank traffic attribution and the bus-occupancy breakdown
   (xfer / bank-switch / row-activation cycles).
+
+The trace is mapped and burst-lowered once per system (the `Experiment`
+memoizes both); the two policies replay the same lowering.
 
 Run:  PYTHONPATH=src python -m benchmarks.sim_sweep
 CSV rows (``name,us_per_call,derived``) go to stdout, the human-readable
@@ -21,21 +25,20 @@ from __future__ import annotations
 import sys
 import time
 
-from repro.pim.ppa import HEADLINE_CONFIGS, SYSTEMS, build_workload, trace_for
-from repro.sim.report import assert_fidelity, policy_reports
+from repro.experiment import default_experiment
+from repro.sim.report import assert_fidelity
 
 WORKLOAD = "ResNet18_Full"
 
 
 def run_sweep(workload: str = WORKLOAD) -> list[str]:
-    wl = build_workload(workload)
+    exp = default_experiment()
     rows = []
-    for system, (gbuf, lbuf) in HEADLINE_CONFIGS.items():
-        arch = SYSTEMS[system](gbuf_bytes=gbuf, lbuf_bytes=lbuf)
-        trace = trace_for(system, wl, arch)
-
+    for system in exp.systems.names():
         t0 = time.perf_counter()
-        reports = policy_reports(trace, arch)      # one lowering, both policies
+        reports = {p: exp.run(workload=workload, system=system,
+                              backend="burst-sim", policy=p).detail["sim"]
+                   for p in ("serial", "overlap")}
         us = (time.perf_counter() - t0) * 1e6
         serial = assert_fidelity(reports["serial"])    # the ±5 % band
         overlap = reports["overlap"]

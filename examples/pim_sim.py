@@ -1,27 +1,29 @@
 """Burst-level simulator walkthrough: where do the cycles actually go?
 
-Takes the Fused16 ResNet18 first-8-layer trace and shows what the
-``repro.sim`` subsystem adds over the analytic model: the serial-policy
-cross-check, the overlap-policy speedup, per-bank port occupancy and the
-sequential-bus breakdown.
+Takes the ResNet18 first-8-layer trace on every registered system (at its
+registry default buffer point) and shows what the ``repro.sim`` subsystem
+adds over the analytic model: the serial-policy cross-check, the
+overlap-policy speedup, per-bank port occupancy and the sequential-bus
+breakdown.  Everything runs through the unified experiment API — the
+``burst-sim`` backend with the issue-policy knob.
 
 Run:  PYTHONPATH=src python examples/pim_sim.py
 """
 
 from __future__ import annotations
 
-from repro.pim.ppa import HEADLINE_CONFIGS, SYSTEMS, build_workload, trace_for
-from repro.sim.report import assert_fidelity, policy_reports
+from repro.experiment import default_experiment
+from repro.sim.report import assert_fidelity
 
 
 def main() -> None:
-    wl = build_workload("ResNet18_First8Layers")
-    for system, (gbuf, lbuf) in HEADLINE_CONFIGS.items():
-        arch = SYSTEMS[system](gbuf_bytes=gbuf, lbuf_bytes=lbuf)
-        trace = trace_for(system, wl, arch)
-        reports = policy_reports(trace, arch)
-        serial = assert_fidelity(reports["serial"])     # fidelity gate: ±5 %
-        overlap = reports["overlap"]
+    exp = default_experiment()
+    for system in exp.systems.names():
+        run = lambda p: exp.run(workload="ResNet18_First8Layers",
+                                system=system, backend="burst-sim",
+                                policy=p).detail["sim"]
+        serial = assert_fidelity(run("serial"))         # fidelity gate: ±5 %
+        overlap = run("overlap")
         print("\n".join(serial.lines()))
         speedup = serial.simulated_total / max(overlap.simulated_total, 1)
         print(f"  overlap policy: {overlap.simulated_total} cycles "

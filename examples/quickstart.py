@@ -7,13 +7,10 @@ channel — and prints the headline PPA table.
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core.commands import cross_bank_bytes
 from repro.core.fusion import plan_fused
 from repro.core.graph import build_resnet18, first_n_layers
 from repro.core.tiling import group_tiling_stats
-from repro.pim.ppa import SYSTEMS, build_workload, normalized_ppa, trace_for
-
-KB = 1024
+from repro.experiment import default_experiment
 
 
 def main() -> None:
@@ -34,12 +31,12 @@ def main() -> None:
           "(paper: +17.3%)\n")
 
     print("=== Cross-bank transfer bytes (the paper's Fig. 1 mechanism) ===")
-    wl = build_workload("ResNet18_First8Layers")
-    base = cross_bank_bytes(trace_for("AiM-like", wl,
-                                      SYSTEMS["AiM-like"](2 * KB, 0)))
+    exp = default_experiment()
+    base = exp.run(workload="ResNet18_First8Layers",
+                   system="AiM-like").cross_bank_bytes
     for sysname in ("Fused16", "Fused4"):
-        b = cross_bank_bytes(trace_for(sysname, wl,
-                                       SYSTEMS[sysname](32 * KB, 256)))
+        b = exp.run(workload="ResNet18_First8Layers",
+                    system=sysname).cross_bank_bytes
         print(f"{sysname:8s}: {b / 1e6:6.2f} MB vs baseline "
               f"{base / 1e6:6.2f} MB  ({b / base:.1%})")
     print()
@@ -47,10 +44,9 @@ def main() -> None:
     print("=== Headline PPA, ResNet18_Full (normalized to AiM-like G2K_L0) ===")
     print(f"{'system':10s} {'config':12s} {'cycles':>8s} {'energy':>8s} "
           f"{'area':>8s}")
-    for sysname, gk, l in (("AiM-like", 2, 0), ("Fused16", 32, 256),
-                           ("Fused4", 32, 256)):
-        n = normalized_ppa(sysname, "ResNet18_Full", gk * KB, l)
-        print(f"{sysname:10s} G{gk}K_L{l:<6d} {n['cycles']:8.3f} "
+    for r in exp.sweep(workloads="ResNet18_Full"):  # registry default points
+        n = exp.normalized(r)
+        print(f"{r.system:10s} {r.config:12s} {n['cycles']:8.3f} "
               f"{n['energy']:8.3f} {n['area']:8.3f}")
     print("\npaper headline (Fused4 G32K_L256): 0.306 / 0.834 / 0.765")
 

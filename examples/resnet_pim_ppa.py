@@ -16,11 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.experiment import default_experiment
 from repro.kernels.fused_conv import fused_conv_kernel
 from repro.models.resnet import forward, forward_fused_groups, init_resnet18
-from repro.pim.ppa import normalized_ppa
-
-KB = 1024
 
 
 def main() -> None:
@@ -52,10 +50,10 @@ def main() -> None:
     print("Pallas fused CONV_BN_RELU == XLA reference ✓")
 
     print("\nPIM PPA (normalized to AiM-like G2K_L0):")
-    for sysname, gk, l in (("AiM-like", 2, 0), ("Fused16", 32, 256),
-                           ("Fused4", 32, 256)):
-        n = normalized_ppa(sysname, "ResNet18_Full", gk * KB, l)
-        print(f"  {sysname:10s} G{gk}K_L{l:<4d} cycles={n['cycles']:.3f} "
+    exp = default_experiment()
+    for r in exp.sweep(workloads="ResNet18_Full"):  # registry default points
+        n = exp.normalized(r)
+        print(f"  {r.system:10s} {r.config:9s} cycles={n['cycles']:.3f} "
               f"energy={n['energy']:.3f} area={n['area']:.3f}")
 
 

@@ -65,8 +65,22 @@ class Command:
             raise ValueError(f"bad PIMcore flag {self.flag}")
         if self.kind is CMD.GBCORE_CMP and self.flag not in GBCORE_FLAGS:
             raise ValueError(f"bad GBcore flag {self.flag}")
-        if self.bytes_total < 0 or self.macs < 0:
-            raise ValueError("negative payload")
+        for field in ("bytes_total", "macs", "alu_ops", "bank_stream_bytes",
+                      "gbuf_stream_bytes", "lbuf_stream_bytes",
+                      "restream_bytes"):
+            if getattr(self, field) < 0:
+                raise ValueError(f"negative {field} in {self.kind.value} "
+                                 f"'{self.layer}'")
+        # restream_bytes marks the row-buffer-hit share of a payload, so it
+        # can never exceed the payload it discounts: bytes_total for
+        # transfers, per-core bank_stream_bytes for compute commands.
+        restream_cap = (self.bank_stream_bytes
+                        if self.kind in (CMD.PIMCORE_CMP, CMD.GBCORE_CMP)
+                        else self.bytes_total)
+        if self.restream_bytes > restream_cap:
+            raise ValueError(
+                f"restream_bytes {self.restream_bytes} exceeds payload "
+                f"{restream_cap} in {self.kind.value} '{self.layer}'")
         if any(b < 0 for b in self.banks):
             raise ValueError(f"negative bank id in {self.banks}")
         if len(set(self.banks)) != len(self.banks):

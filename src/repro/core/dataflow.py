@@ -40,12 +40,23 @@ in :class:`repro.pim.arch.PIMArch` and are identical across systems):
 from __future__ import annotations
 
 import math
+from typing import Mapping
 
 from repro.core.commands import CMD, Command, Trace, validated
 from repro.core.fusion import FusedGroup, FusionPlan
 from repro.core.graph import Graph, Layer, OpKind
-from repro.core.tiling import tile_group
+from repro.core.tiling import GroupTiling, tile_group
 from repro.pim.arch import PIMArch
+
+# Cache key for a fused group's tiling solution: the tiling depends only on
+# the graph slice and the tile grid, NOT on buffer sizes, so callers sweeping
+# (gbuf, lbuf) points can compute each group's tiling once and pass it back
+# in through ``map_pimfused(..., tilings=...)``.
+TilingKey = tuple[int, int, int, int]  # (start, stop, tiles_y, tiles_x)
+
+
+def tiling_key(g: FusedGroup) -> TilingKey:
+    return (g.start, g.stop, g.tiles_y, g.tiles_x)
 
 # GBUF streaming strip that suffices for layer-by-layer activation reuse
 # (AiM design point: 2 KB GBUF "already suffices", §V-B obs. 1).
@@ -173,13 +184,25 @@ def map_layer_by_layer(graph: Graph, arch: PIMArch,
 # Fused-layer dataflow (Fig. 3c)
 # ---------------------------------------------------------------------------
 
-def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch) -> Trace:
+def group_input_halo_bytes(group: Graph, t: GroupTiling, dt: int) -> int:
+    """Bytes of the group's input map that cross tile boundaries: the sum of
+    per-tile halo'd fetch regions minus the exact (non-replicated) map —
+    exactly the receptive-field halo the tiling engine computes (Fig. 1b ②).
+    """
+    first = group[0]
+    exact_in = first.cin * first.iy * first.ix * dt
+    return sum(t.tile_input_elems(i) for i in range(t.num_tiles)) * dt \
+        - exact_in
+
+
+def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch,
+                    tiling: GroupTiling | None = None) -> Trace:
     group = graph.slice(g.start, g.stop)
     dt = arch.dtype_bytes
     cores = arch.num_pimcores
     if g.num_tiles != cores:
         raise ValueError(f"fused group tile count {g.num_tiles} != cores {cores}")
-    t = tile_group(group, g.tiles_y, g.tiles_x)
+    t = tiling if tiling is not None else tile_group(group, g.tiles_y, g.tiles_x)
     flight = _positions_in_flight(arch)
     trace: Trace = []
 
@@ -188,8 +211,7 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch) -> Trace:
     # neighbouring banks → cross-bank via GBUF.
     first = group[0]
     exact_in = first.cin * first.iy * first.ix * dt
-    halo_in = sum(t.tile_input_elems(i) for i in range(t.num_tiles)) * dt \
-        - exact_in
+    halo_in = group_input_halo_bytes(group, t, dt)
     trace.append(Command(CMD.PIM_BK2LBUF, f"{group.name}:input",
                          bytes_total=exact_in, concurrent_cores=cores,
                          banks=_par_banks(arch, cores),
@@ -220,8 +242,7 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch) -> Trace:
         tile_positions = max(t.computed[i][l.name].elems_hw
                              for i in range(t.num_tiles))
         w_l = _w_bytes(l, arch)
-        macs = sum(l.cout * l.cin * l.kh * l.kw
-                   * t.computed[i][l.name].elems_hw
+        macs = sum(l.macs_per_position * t.computed[i][l.name].elems_hw
                    for i in range(t.num_tiles)) if l.kind.is_conv else 0
         alu = 0
         if l.kind.is_pool:
@@ -296,15 +317,18 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch) -> Trace:
 
 
 def map_boundary_reorg(graph: Graph, prev_stop: int, arch: PIMArch,
-                       next_fused: bool) -> Trace:
+                       next_halo_bytes: int | None) -> Trace:
     """Fused-kernel boundary: reorganise intermediate data for the next
     kernel (orange boxes, Fig. 3c).  Spatial→spatial needs only the halo
-    rows crossing tile edges; spatial→cout (fused → layer-by-layer)
-    re-distributes the full map through the GBUF."""
+    rows crossing tile edges — ``next_halo_bytes``, the NEXT group's
+    receptive-field input halo as computed by the tiling engine
+    (:func:`group_input_halo_bytes`).  Spatial→cout (fused →
+    layer-by-layer, ``next_halo_bytes is None``) re-distributes the full
+    map through the GBUF."""
     l = graph[prev_stop - 1]
     dt = arch.dtype_bytes
     fmap = l.out_elems * dt
-    moved = fmap // 4 if next_fused else fmap
+    moved = fmap if next_halo_bytes is None else min(next_halo_bytes, fmap)
     return validated([
         Command(CMD.PIM_BK2GBUF, f"{l.name}:reorg_in", bytes_total=moved,
                 banks=_seq_banks(moved, arch),
@@ -315,15 +339,34 @@ def map_boundary_reorg(graph: Graph, prev_stop: int, arch: PIMArch,
     ])
 
 
-def map_pimfused(plan: FusionPlan, arch: PIMArch) -> Trace:
+def plan_tilings(plan: FusionPlan) -> dict[TilingKey, GroupTiling]:
+    """Tiling solutions for every fused group of a plan.  Buffer-size
+    independent, so one result serves every (gbuf, lbuf) sweep point of a
+    system (pass it to :func:`map_pimfused` via ``tilings``)."""
+    return {tiling_key(grp): tile_group(plan.graph.slice(grp.start, grp.stop),
+                                        grp.tiles_y, grp.tiles_x)
+            for grp in plan.groups}
+
+
+def map_pimfused(plan: FusionPlan, arch: PIMArch,
+                 tilings: Mapping[TilingKey, GroupTiling] | None = None,
+                 ) -> Trace:
     """End-to-end PIMfused hybrid dataflow (§IV, Fig. 3c)."""
     g = plan.graph
+    if tilings is None:
+        tilings = plan_tilings(plan)
     trace: Trace = []
     for gi, grp in enumerate(plan.groups):
-        trace += map_fused_group(g, grp, arch)
+        trace += map_fused_group(g, grp, arch, tiling=tilings[tiling_key(grp)])
         next_fused = gi + 1 < len(plan.groups)
-        if next_fused or plan.tail_start < len(g):
-            trace += map_boundary_reorg(g, grp.stop, arch, next_fused)
+        if next_fused:
+            nxt = plan.groups[gi + 1]
+            halo = group_input_halo_bytes(g.slice(nxt.start, nxt.stop),
+                                          tilings[tiling_key(nxt)],
+                                          arch.dtype_bytes)
+            trace += map_boundary_reorg(g, grp.stop, arch, halo)
+        elif plan.tail_start < len(g):
+            trace += map_boundary_reorg(g, grp.stop, arch, None)
     if plan.tail_start < len(g):
         trace += map_layer_by_layer(g, arch, start=plan.tail_start)
     return trace

@@ -85,6 +85,10 @@ class Layer:
     kw: int = 1
     stride: int = 1
     padding: int = 0
+    # channel groups for grouped/depthwise convolution (MobileNet-style
+    # depthwise = groups == cin == cout); each output channel only sees
+    # cin // groups input channels.
+    groups: int = 1
     # name of the layer producing the PRIMARY input; None = previous layer in
     # list order (or the graph input for the first layer).  Shortcut convs
     # (e.g. ResNet down-sample 1x1) read the block input, not their list
@@ -93,11 +97,22 @@ class Layer:
     # name of the layer whose OUTPUT is the residual operand, for ADD_RELU
     residual_of: str | None = None
 
+    def __post_init__(self) -> None:
+        if self.groups < 1 or self.cin % self.groups or self.cout % self.groups:
+            raise ValueError(
+                f"{self.name}: groups={self.groups} must divide "
+                f"cin={self.cin} and cout={self.cout}")
+
     # ---- footprint helpers (element counts; dtype handled by caller) ----
+    @property
+    def cin_per_group(self) -> int:
+        return self.cin // self.groups
+
     @property
     def weight_elems(self) -> int:
         if self.kind.is_conv:
-            return self.cout * self.cin * self.kh * self.kw + 2 * self.cout  # +BN scale/shift
+            return (self.cout * self.cin_per_group * self.kh * self.kw
+                    + 2 * self.cout)  # +BN scale/shift
         if self.kind is OpKind.FC:
             return self.cout * self.cin + self.cout
         return 0
@@ -111,10 +126,18 @@ class Layer:
         return self.cout * self.oy * self.ox
 
     @property
+    def macs_per_position(self) -> int:
+        """MACs per (oy, ox) output position across all output channels —
+        the unit fused tiling scales by a tile's computed positions."""
+        if self.kind.is_conv:
+            return self.cout * self.cin_per_group * self.kh * self.kw
+        return 0
+
+    @property
     def macs(self) -> int:
         """Multiply-accumulate count for the whole layer."""
         if self.kind.is_conv:
-            return self.cout * self.oy * self.ox * self.cin * self.kh * self.kw
+            return self.oy * self.ox * self.macs_per_position
         if self.kind is OpKind.FC:
             return self.cout * self.cin
         return 0
@@ -203,12 +226,14 @@ class Graph:
 # ---------------------------------------------------------------------------
 
 def _conv(name: str, cin: int, cout: int, iy: int, ix: int, k: int, s: int,
-          p: int, relu: bool = True, input_of: str | None = None) -> Layer:
+          p: int, relu: bool = True, input_of: str | None = None,
+          groups: int = 1) -> Layer:
     oy = (iy + 2 * p - k) // s + 1
     ox = (ix + 2 * p - k) // s + 1
     return Layer(name=name, kind=OpKind.CONV_BN_RELU if relu else OpKind.CONV_BN,
                  cin=cin, cout=cout, iy=iy, ix=ix, oy=oy, ox=ox,
-                 kh=k, kw=k, stride=s, padding=p, input_of=input_of)
+                 kh=k, kw=k, stride=s, padding=p, input_of=input_of,
+                 groups=groups)
 
 
 def build_resnet18(input_hw: int = 224, num_classes: int = 1000) -> Graph:
@@ -268,3 +293,66 @@ def build_resnet18(input_hw: int = 224, num_classes: int = 1000) -> Graph:
 def first_n_layers(g: Graph, n: int) -> Graph:
     """Workload slice, e.g. the paper's ResNet18_First8Layers (§V-2)."""
     return g.slice(0, n, name=f"{g.name}_first{n}")
+
+
+# ---------------------------------------------------------------------------
+# Additional CNN workloads (beyond the paper's ResNet18 benchmark): a plain
+# VGG-style chain and a MobileNet-style depthwise-separable net, exercising
+# the dataflow mappers on residual-free and grouped-conv graphs.
+# ---------------------------------------------------------------------------
+
+def build_vgg11(input_hw: int = 224, num_classes: int = 1000) -> Graph:
+    """VGG11 (configuration A) as a macro-layer chain.
+
+    Eight 3x3 convs interleaved with five 2x2 maxpools, then the three-layer
+    fully-connected classifier.  No residual edges, so fusion-plan boundaries
+    come purely from tile-grid divisibility.
+    """
+    L: list[Layer] = []
+    hw = input_hw
+    cin = 3
+    # (conv channel plan, pool-after flags) per VGG-A
+    plan = [(64, True), (128, True), (256, False), (256, True),
+            (512, False), (512, True), (512, False), (512, True)]
+    for i, (cout, pool_after) in enumerate(plan):
+        L.append(_conv(f"conv{i + 1}", cin, cout, hw, hw, k=3, s=1, p=1))
+        cin = cout
+        if pool_after:
+            pool_hw = hw // 2
+            L.append(Layer(f"pool{i + 1}", OpKind.POOL_MAX, cout, cout,
+                           hw, hw, pool_hw, pool_hw, kh=2, kw=2, stride=2))
+            hw = pool_hw
+    flat = cin * hw * hw
+    L.append(Layer("fc1", OpKind.FC, flat, 4096, 1, 1, 1, 1))
+    L.append(Layer("fc2", OpKind.FC, 4096, 4096, 1, 1, 1, 1))
+    L.append(Layer("fc3", OpKind.FC, 4096, num_classes, 1, 1, 1, 1))
+    return Graph("vgg11", L)
+
+
+def build_mobilenet_v1(input_hw: int = 224,
+                       num_classes: int = 1000) -> Graph:
+    """MobileNetV1 as a macro-layer chain of depthwise-separable blocks.
+
+    Each block is a depthwise 3x3 conv (``groups == cin``) followed by a
+    pointwise 1x1 conv; 13 blocks after the full-conv stem, then global
+    average pool + FC.  Exercises the ``groups`` field end-to-end.
+    """
+    L: list[Layer] = []
+    hw = input_hw
+    L.append(_conv("conv1", 3, 32, hw, hw, k=3, s=2, p=1))
+    hw = L[-1].oy
+    cin = 32
+    # (cout, stride) per depthwise-separable block (standard V1 schedule)
+    blocks = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+              (512, 1), (512, 1), (512, 1), (512, 1), (512, 1),
+              (1024, 2), (1024, 1)]
+    for i, (cout, s) in enumerate(blocks):
+        L.append(_conv(f"b{i + 1}_dw", cin, cin, hw, hw, k=3, s=s, p=1,
+                       groups=cin))
+        hw = L[-1].oy
+        L.append(_conv(f"b{i + 1}_pw", cin, cout, hw, hw, k=1, s=1, p=0))
+        cin = cout
+    L.append(Layer("avgpool", OpKind.POOL_AVG, cin, cin, hw, hw, 1, 1,
+                   kh=hw, kw=hw, stride=hw))
+    L.append(Layer("fc", OpKind.FC, cin, num_classes, 1, 1, 1, 1))
+    return Graph("mobilenet_v1", L)

@@ -89,7 +89,7 @@ class GroupTiling:
         for layer in self.group:
             req = self.computed[t][layer.name]
             if layer.kind.is_conv:
-                total += layer.cout * layer.cin * layer.kh * layer.kw * req.elems_hw
+                total += layer.macs_per_position * req.elems_hw
             elif layer.kind is OpKind.FC:
                 total += layer.cout * layer.cin
         return total

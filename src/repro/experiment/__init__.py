@@ -1,0 +1,45 @@
+"""Unified experiment API: declarative evaluation over named registries.
+
+The paper's evaluation grid — systems × workloads × (GBUF, LBUF) ×
+evaluation backend — behind one call path::
+
+    from repro.experiment import Experiment, EvalSpec
+
+    exp = Experiment()
+    r = exp.run(workload="MobileNetV1", system="Fused4",
+                backend="burst-sim", policy="overlap")
+    for point in exp.sweep(workloads="ResNet18_Full",
+                           buffers=[(32 * 1024, l) for l in
+                                    (0, 64, 128, 256, 512, 1024)]):
+        print(point.config, exp.normalized(point))
+
+Modules:
+
+* :mod:`repro.experiment.registry` — `Registry`, `WorkloadSpec`,
+  `SystemSpec`, `register_workload`, `register_system`.
+* :mod:`repro.experiment.workloads` / :mod:`~repro.experiment.systems` —
+  built-in registrations (ResNet18 ×2, VGG11, MobileNetV1; AiM-like,
+  Fused16, Fused4).
+* :mod:`repro.experiment.backends` — the ``EvalSpec → EvalResult``
+  backend protocol; ``analytic`` and ``burst-sim`` built-ins.
+* :mod:`repro.experiment.runner` — the memoizing `Experiment` driver.
+
+The legacy ``repro.pim.ppa`` entry points are thin shims over
+:func:`default_experiment`.
+"""
+
+from repro.experiment.backends import (BACKENDS, AnalyticBackend,
+                                       BurstSimBackend, EvalBackend,
+                                       EvalResult, EvalSpec)
+from repro.experiment.registry import (Registry, SystemSpec, WorkloadSpec,
+                                       SYSTEMS, WORKLOADS, register_system,
+                                       register_workload)
+from repro.experiment.runner import (BASELINE_SYSTEM, Experiment,
+                                     default_experiment)
+
+__all__ = [
+    "BACKENDS", "BASELINE_SYSTEM", "AnalyticBackend", "BurstSimBackend",
+    "EvalBackend", "EvalResult", "EvalSpec", "Experiment", "Registry",
+    "SystemSpec", "WorkloadSpec", "SYSTEMS", "WORKLOADS",
+    "default_experiment", "register_system", "register_workload",
+]

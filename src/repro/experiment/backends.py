@@ -1,0 +1,153 @@
+"""Pluggable evaluation backends: one ``EvalSpec → EvalResult`` interface.
+
+Two built-ins:
+
+* ``analytic`` — the fast aggregate model: cycles from
+  :func:`repro.pim.timing.simulate_cycles`, energy from
+  :func:`repro.pim.energy.simulate_energy`, area from
+  :func:`repro.pim.energy.system_area`.  This is the backend behind every
+  paper figure and the legacy ``repro.pim.ppa`` entry points.
+* ``burst-sim`` — the burst-level trace simulator (:mod:`repro.sim`) with
+  the issue-policy knob (``serial`` / ``overlap``); cycles come from the
+  event-driven makespan, while energy/area still use the analytic models
+  (energy on *simulated* row activations is a ROADMAP follow-up).  The
+  ``detail`` dict carries the full :class:`repro.sim.report.SimReport`.
+
+Both backends report the same :class:`EvalResult` shape, so sweep drivers
+and normalized reporting are backend-agnostic.  Register more via
+``BACKENDS.register`` (e.g. a future Ramulator2 bridge).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Protocol
+
+from repro.core.commands import Trace, cross_bank_bytes
+from repro.pim.arch import PIMArch, config_label
+from repro.pim.energy import simulate_energy, system_area
+from repro.pim.timing import simulate_cycles
+from repro.experiment.registry import Registry
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalSpec:
+    """One point of the evaluation grid.
+
+    ``gbuf_bytes`` / ``lbuf_bytes`` of ``None`` resolve to the system's
+    registered default design point.  ``policy`` is the burst-sim issue
+    policy (ignored by the analytic backend).
+    """
+
+    workload: str
+    system: str
+    gbuf_bytes: int | None = None
+    lbuf_bytes: int | None = None
+    backend: str = "analytic"
+    policy: str = "serial"
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalResult:
+    """Backend-agnostic PPA result for one grid point."""
+
+    spec: EvalSpec
+    config: str                     # paper-style label, e.g. G32K_L256
+    cycles: int
+    energy_nj: float
+    area_mm2: float
+    cross_bank_bytes: int
+    detail: Mapping[str, Any]       # backend-specific reports
+
+    @property
+    def workload(self) -> str:
+        return self.spec.workload
+
+    @property
+    def system(self) -> str:
+        return self.spec.system
+
+    def normalized(self, base: "EvalResult") -> dict[str, float]:
+        """The paper's reporting: every metric relative to ``base``."""
+        return {
+            "cycles": self.cycles / max(base.cycles, 1),
+            "energy": self.energy_nj / base.energy_nj,
+            "area": self.area_mm2 / base.area_mm2,
+        }
+
+
+class EvalContext(Protocol):
+    """Shared-work hooks a driver may offer backends (all optional):
+    memoized burst lowering (shared across issue policies) and memoized
+    policy-independent analytic cycle/energy reports."""
+
+    def lowered(self, trace: Trace, arch: PIMArch) -> Any: ...
+
+    def cycle_report(self, trace: Trace, arch: PIMArch) -> Any: ...
+
+    def energy_report(self, trace: Trace, arch: PIMArch) -> Any: ...
+
+
+def _cycle_report(trace: Trace, arch: PIMArch, ctx: EvalContext | None):
+    fn = getattr(ctx, "cycle_report", None)
+    return fn(trace, arch) if fn is not None else simulate_cycles(trace, arch)
+
+
+class EvalBackend(Protocol):
+    """A backend turns one mapped trace into an :class:`EvalResult`."""
+
+    name: str
+
+    def evaluate(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
+                 ctx: EvalContext | None = None) -> EvalResult: ...
+
+
+def _common(spec: EvalSpec, trace: Trace, arch: PIMArch,
+            cycles: int, detail: dict[str, Any],
+            ctx: EvalContext | None = None) -> EvalResult:
+    fn = getattr(ctx, "energy_report", None)
+    energy = fn(trace, arch) if fn is not None else simulate_energy(trace,
+                                                                    arch)
+    area = system_area(arch)
+    detail = dict(detail, energy=energy, area=area)
+    return EvalResult(spec=spec,
+                      config=config_label(arch.gbuf_bytes, arch.lbuf_bytes),
+                      cycles=cycles,
+                      energy_nj=energy.total_nj,
+                      area_mm2=area.total_mm2,
+                      cross_bank_bytes=cross_bank_bytes(trace),
+                      detail=detail)
+
+
+class AnalyticBackend:
+    name = "analytic"
+
+    def evaluate(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
+                 ctx: EvalContext | None = None) -> EvalResult:
+        cycles = _cycle_report(trace, arch, ctx)
+        return _common(spec, trace, arch, cycles.total, {"cycles": cycles},
+                       ctx)
+
+
+class BurstSimBackend:
+    name = "burst-sim"
+
+    def evaluate(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
+                 ctx: EvalContext | None = None) -> EvalResult:
+        # local import: keeps the analytic path importable without repro.sim
+        from repro.sim.engine import simulate
+        from repro.sim.report import SimReport
+
+        lowered = ctx.lowered(trace, arch) if ctx is not None else None
+        result = simulate(trace, arch, spec.policy, lowered=lowered)
+        report = SimReport(system=arch.name, policy=spec.policy,
+                           result=result,
+                           analytic_total=_cycle_report(trace, arch,
+                                                        ctx).total)
+        return _common(spec, trace, arch, result.makespan,
+                       {"sim": report}, ctx)
+
+
+BACKENDS: Registry[EvalBackend] = Registry("backend")
+BACKENDS.register("analytic", AnalyticBackend())
+BACKENDS.register("burst-sim", BurstSimBackend())

@@ -1,0 +1,140 @@
+"""Named registries for the experiment layer: workloads, systems, backends.
+
+The paper's evaluation is a grid — {systems} × {workloads} × (GBUF, LBUF)
+× {evaluation backend} — and every axis here is a small named registry so
+new entries compose with the whole grid without touching any driver code:
+
+* a **workload** is a zero-arg builder returning a
+  :class:`repro.core.graph.Graph` (register with :func:`register_workload`),
+* a **system** bundles the arch factory, the fused-dataflow tile grid, and
+  the paper's default (GBUF, LBUF) design point
+  (:class:`SystemSpec` / :func:`register_system`),
+* a **backend** maps a mapped trace to a result
+  (see :mod:`repro.experiment.backends`).
+
+Registries preserve registration order (the canonical reporting order) and
+raise `KeyError` naming the known entries on unknown lookups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Generic, Iterator, TypeVar
+
+from repro.core.graph import Graph
+from repro.pim.arch import PIMArch
+
+T = TypeVar("T")
+
+
+class Registry(Generic[T]):
+    """Ordered name → item mapping with helpful unknown-name errors."""
+
+    def __init__(self, kind: str) -> None:
+        self.kind = kind
+        self._items: dict[str, T] = {}
+
+    def register(self, name: str, item: T, *, replace: bool = False) -> T:
+        if not replace and name in self._items:
+            raise ValueError(
+                f"{self.kind} '{name}' already registered "
+                f"(pass replace=True to override)")
+        self._items[name] = item
+        return item
+
+    def get(self, name: str) -> T:
+        try:
+            return self._items[name]
+        except KeyError:
+            known = ", ".join(self._items) or "<none>"
+            raise KeyError(f"unknown {self.kind} '{name}' "
+                           f"(registered: {known})") from None
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._items)
+
+    def items(self) -> Iterator[tuple[str, T]]:
+        return iter(self._items.items())
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._items
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._items)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+
+# ---------------------------------------------------------------------------
+# Workloads
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """A named CNN workload: a zero-arg :class:`Graph` builder."""
+
+    name: str
+    builder: Callable[[], Graph]
+    description: str = ""
+
+    def build(self) -> Graph:
+        return self.builder()
+
+
+WORKLOADS: Registry[WorkloadSpec] = Registry("workload")
+
+
+def register_workload(name: str, *, description: str = "",
+                      registry: Registry[WorkloadSpec] = WORKLOADS,
+                      replace: bool = False):
+    """Decorator registering a ``() -> Graph`` builder as a named workload.
+
+    >>> @register_workload("TinyNet", description="3-layer smoke net")
+    ... def _tiny() -> Graph: ...
+    """
+
+    def deco(builder: Callable[[], Graph]) -> Callable[[], Graph]:
+        registry.register(name, WorkloadSpec(name, builder, description),
+                          replace=replace)
+        return builder
+
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Systems
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    """One evaluated PIM system: arch factory + dataflow + design point.
+
+    ``tile_grid is None`` selects the layer-by-layer baseline dataflow;
+    otherwise the fused-layer dataflow runs with that (tiles_y, tiles_x)
+    grid (its tile count must equal the arch's PIMcore count).
+    ``default_buffers`` is the system's headline (gbuf_bytes, lbuf_bytes)
+    design point (§V-3 / §V-D), used when an EvalSpec leaves them unset.
+    """
+
+    name: str
+    arch_factory: Callable[..., PIMArch]
+    tile_grid: tuple[int, int] | None = None
+    default_buffers: tuple[int, int] = (2 * 1024, 0)
+    description: str = ""
+
+    def make_arch(self, gbuf_bytes: int | None = None,
+                  lbuf_bytes: int | None = None) -> PIMArch:
+        g0, l0 = self.default_buffers
+        return self.arch_factory(
+            gbuf_bytes=g0 if gbuf_bytes is None else gbuf_bytes,
+            lbuf_bytes=l0 if lbuf_bytes is None else lbuf_bytes)
+
+
+SYSTEMS: Registry[SystemSpec] = Registry("system")
+
+
+def register_system(spec: SystemSpec, *,
+                    registry: Registry[SystemSpec] = SYSTEMS,
+                    replace: bool = False) -> SystemSpec:
+    return registry.register(spec.name, spec, replace=replace)

@@ -1,0 +1,250 @@
+"""The `Experiment` driver: memoized ``run()`` / ``sweep()`` over the grid.
+
+One call path evaluates any (registered workload × system × buffer config)
+under any registered backend.  Work that is invariant across sweep points
+is computed once and reused:
+
+* **graphs** — one build per workload (the legacy path rebuilt the graph
+  on every ``evaluate()`` call, including once per normalisation baseline),
+* **fusion plans and group tilings** — one per (workload, tile grid);
+  tilings are buffer-independent, so a (GBUF, LBUF) sweep never re-tiles,
+* **mapped traces** — one per (workload, system, gbuf, lbuf); the
+  normalisation baseline is one of these, shared by every point,
+* **lowered burst traces** — one per (trace, arch), shared across issue
+  policies (the lowering dominates burst-sim cost on big traces),
+* **results** — one backend evaluation per resolved spec.
+
+``Experiment.stats`` counts builds vs cache hits; tests assert on it.
+A process-wide :func:`default_experiment` backs the legacy
+``repro.pim.ppa`` shims so old and new entry points share one cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Sequence
+
+from repro.core import dataflow
+from repro.core.commands import Trace
+from repro.core.fusion import FusionPlan, plan_fused
+from repro.core.graph import Graph
+from repro.pim.arch import PIMArch
+from repro.experiment import systems as _systems  # registers built-ins
+from repro.experiment import workloads as _workloads  # registers built-ins
+from repro.experiment.backends import BACKENDS, EvalResult, EvalSpec
+from repro.experiment.registry import (Registry, SystemSpec, WorkloadSpec,
+                                       SYSTEMS, WORKLOADS)
+
+BASELINE_SYSTEM = _systems.BASELINE_SYSTEM
+
+_ = _workloads  # imported for registration side effects
+
+
+class Experiment:
+    """Declarative, memoizing evaluation driver over the registries."""
+
+    def __init__(self,
+                 workloads: Registry[WorkloadSpec] = WORKLOADS,
+                 systems: Registry[SystemSpec] = SYSTEMS,
+                 backends: Registry = BACKENDS,
+                 baseline_system: str = BASELINE_SYSTEM) -> None:
+        self.workloads = workloads
+        self.systems = systems
+        self.backends = backends
+        self.baseline_system = baseline_system
+        self.stats: dict[str, int] = {
+            "graph_builds": 0, "plan_builds": 0, "tiling_builds": 0,
+            "trace_maps": 0, "trace_hits": 0, "lowerings": 0,
+            "cycle_models": 0, "energy_models": 0,
+            "backend_evals": 0, "result_hits": 0,
+        }
+        self._graphs: dict[str, Graph] = {}
+        self._plans: dict[tuple[str, int, int], FusionPlan] = {}
+        self._tilings: dict[tuple[str, int, int], dict] = {}
+        self._traces: dict[tuple[str, str, int, int], Trace] = {}
+        # identity-keyed per-(trace, arch) derivations (lowered bursts,
+        # analytic cycle/energy reports): {key: (trace_ref, value)} — the
+        # stored strong ref both keeps the id() stable and lets the lookup
+        # verify it still names the same trace object
+        self._lowered: dict[tuple[int, str, int, int], tuple[Trace, Any]] = {}
+        self._cycle_reports: dict[tuple[int, str, int, int],
+                                  tuple[Trace, Any]] = {}
+        self._energy_reports: dict[tuple[int, str, int, int],
+                                   tuple[Trace, Any]] = {}
+        self._results: dict[EvalSpec, EvalResult] = {}
+
+    # ------------------------------------------------------------------
+    # memoized build pipeline
+    # ------------------------------------------------------------------
+
+    def graph(self, workload: str) -> Graph:
+        """The workload's graph, built once per Experiment (treat as
+        read-only — every trace and result shares it)."""
+        g = self._graphs.get(workload)
+        if g is None:
+            g = self.workloads.get(workload).build()
+            self.stats["graph_builds"] += 1
+            self._graphs[workload] = g
+        return g
+
+    def plan(self, workload: str, tile_grid: tuple[int, int]) -> FusionPlan:
+        key = (workload, *tile_grid)
+        p = self._plans.get(key)
+        if p is None:
+            p = plan_fused(self.graph(workload), *tile_grid)
+            self.stats["plan_builds"] += 1
+            self._plans[key] = p
+        return p
+
+    def tilings(self, workload: str, tile_grid: tuple[int, int]) -> dict:
+        """Buffer-independent tiling solutions for every fused group —
+        the expensive geometry a (GBUF, LBUF) sweep must never redo."""
+        key = (workload, *tile_grid)
+        t = self._tilings.get(key)
+        if t is None:
+            t = dataflow.plan_tilings(self.plan(workload, tile_grid))
+            self.stats["tiling_builds"] += 1
+            self._tilings[key] = t
+        return t
+
+    def trace(self, workload: str, system: str, gbuf_bytes: int,
+              lbuf_bytes: int) -> Trace:
+        """The mapped command trace for one fully-resolved grid point."""
+        key = (workload, system, gbuf_bytes, lbuf_bytes)
+        tr = self._traces.get(key)
+        if tr is not None:
+            self.stats["trace_hits"] += 1
+            return tr
+        spec = self.systems.get(system)
+        arch = spec.make_arch(gbuf_bytes, lbuf_bytes)
+        if spec.tile_grid is None:
+            tr = dataflow.map_baseline(self.graph(workload), arch)
+        else:
+            tr = dataflow.map_pimfused(self.plan(workload, spec.tile_grid),
+                                       arch,
+                                       tilings=self.tilings(workload,
+                                                            spec.tile_grid))
+        self.stats["trace_maps"] += 1
+        self._traces[key] = tr
+        return tr
+
+    def _per_trace(self, cache: dict, trace: Trace, arch: PIMArch,
+                   build, stat: str) -> Any:
+        key = (id(trace), arch.name, arch.gbuf_bytes, arch.lbuf_bytes)
+        hit = cache.get(key)
+        if hit is not None and hit[0] is trace:
+            return hit[1]
+        value = build()
+        self.stats[stat] += 1
+        cache[key] = (trace, value)
+        return value
+
+    def lowered(self, trace: Trace, arch: PIMArch) -> Any:
+        """Burst-lowered trace, shared across issue policies
+        (:class:`repro.experiment.backends.EvalContext` hook)."""
+        from repro.sim.burst import lower_trace
+        return self._per_trace(self._lowered, trace, arch,
+                               lambda: lower_trace(trace, arch), "lowerings")
+
+    def cycle_report(self, trace: Trace, arch: PIMArch) -> Any:
+        """Analytic cycle report, policy-independent — computed once per
+        (trace, arch) however many backends/policies consume it."""
+        from repro.pim.timing import simulate_cycles
+        return self._per_trace(self._cycle_reports, trace, arch,
+                               lambda: simulate_cycles(trace, arch),
+                               "cycle_models")
+
+    def energy_report(self, trace: Trace, arch: PIMArch) -> Any:
+        """Analytic energy report, policy-independent (as above)."""
+        from repro.pim.energy import simulate_energy
+        return self._per_trace(self._energy_reports, trace, arch,
+                               lambda: simulate_energy(trace, arch),
+                               "energy_models")
+
+    # ------------------------------------------------------------------
+    # evaluation
+    # ------------------------------------------------------------------
+
+    def resolve(self, spec: EvalSpec) -> EvalSpec:
+        """Fill unset buffer sizes from the system's default design point."""
+        sys_spec = self.systems.get(spec.system)
+        g0, l0 = sys_spec.default_buffers
+        return dataclasses.replace(
+            spec,
+            gbuf_bytes=g0 if spec.gbuf_bytes is None else spec.gbuf_bytes,
+            lbuf_bytes=l0 if spec.lbuf_bytes is None else spec.lbuf_bytes)
+
+    def run(self, spec: EvalSpec | None = None, **kwargs) -> EvalResult:
+        """Evaluate one grid point (``EvalSpec`` or its fields as kwargs)."""
+        if spec is None:
+            spec = EvalSpec(**kwargs)
+        elif kwargs:
+            spec = dataclasses.replace(spec, **kwargs)
+        spec = self.resolve(spec)
+        cached = self._results.get(spec)
+        if cached is not None:
+            self.stats["result_hits"] += 1
+            return cached
+        backend = self.backends.get(spec.backend)
+        sys_spec = self.systems.get(spec.system)
+        arch = sys_spec.make_arch(spec.gbuf_bytes, spec.lbuf_bytes)
+        trace = self.trace(spec.workload, spec.system, spec.gbuf_bytes,
+                           spec.lbuf_bytes)
+        result = backend.evaluate(trace, arch, spec, ctx=self)
+        self.stats["backend_evals"] += 1
+        self._results[spec] = result
+        return result
+
+    def baseline(self, workload: str, backend: str = "analytic",
+                 policy: str = "serial") -> EvalResult:
+        """The paper's 1.0: the baseline system at its own design point,
+        evaluated under the SAME backend/policy as the results it scales."""
+        return self.run(EvalSpec(workload=workload,
+                                 system=self.baseline_system,
+                                 backend=backend, policy=policy))
+
+    def normalized(self, result: EvalResult) -> dict[str, float]:
+        """Normalize one result to its workload's baseline (memoized — the
+        baseline is evaluated once per workload, not once per point)."""
+        return result.normalized(self.baseline(result.workload,
+                                               backend=result.spec.backend,
+                                               policy=result.spec.policy))
+
+    def sweep(self,
+              workloads: str | Iterable[str] | None = None,
+              systems: str | Iterable[str] | None = None,
+              buffers: Sequence[tuple[int | None, int | None]] | None = None,
+              backend: str = "analytic",
+              policy: str = "serial") -> list[EvalResult]:
+        """Evaluate the cross product workloads × systems × buffer points.
+
+        ``None`` axes default to every registered workload / system / the
+        per-system default buffer point.  Returns results in grid order.
+        """
+        if workloads is None:
+            workloads = self.workloads.names()
+        elif isinstance(workloads, str):
+            workloads = (workloads,)
+        if systems is None:
+            systems = self.systems.names()
+        elif isinstance(systems, str):
+            systems = (systems,)
+        points = buffers if buffers is not None else ((None, None),)
+        return [self.run(EvalSpec(workload=w, system=s, gbuf_bytes=g,
+                                  lbuf_bytes=l, backend=backend,
+                                  policy=policy))
+                for w in workloads for s in systems for g, l in points]
+
+
+# ---------------------------------------------------------------------------
+# process-wide default (shared cache behind the legacy pim.ppa shims)
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Experiment | None = None
+
+
+def default_experiment() -> Experiment:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Experiment()
+    return _DEFAULT

@@ -1,0 +1,36 @@
+"""Built-in system registrations: the paper's three evaluated systems.
+
+Single source of truth for arch factory + tile grid + headline buffer
+point; `repro.pim.ppa`'s legacy ``SYSTEMS`` / ``TILE_GRID`` /
+``HEADLINE_CONFIGS`` constants are derived views of this registry.
+"""
+
+from __future__ import annotations
+
+from repro.experiment.registry import SystemSpec, register_system
+from repro.pim import arch as pim_arch
+
+# the paper's 1.0: AiM-like at its own design point (G2K_L0)
+BASELINE_SYSTEM = "AiM-like"
+
+register_system(SystemSpec(
+    name="AiM-like",
+    arch_factory=pim_arch.aim_like,
+    tile_grid=None,                      # layer-by-layer dataflow (Fig. 3b)
+    default_buffers=(2 * 1024, 0),       # AiM design point (G2K_L0)
+    description="GDDR6-AiM-like baseline: 16 1-bank PIMcores + GBcore, "
+                "layer-by-layer dataflow"))
+
+register_system(SystemSpec(
+    name="Fused16",
+    arch_factory=pim_arch.fused16,
+    tile_grid=(4, 4),                    # 16 tiles = 16 PIMcores (§V-3)
+    default_buffers=(32 * 1024, 256),    # paper's §V-D G32K_L256 point
+    description="PIMfused, 16 1-bank PIMcores, 4x4 fused tile grid"))
+
+register_system(SystemSpec(
+    name="Fused4",
+    arch_factory=pim_arch.fused4,
+    tile_grid=(2, 2),                    # 4 tiles = 4 PIMcores (§V-3)
+    default_buffers=(32 * 1024, 256),
+    description="PIMfused, 4 4-bank PIMcores, 2x2 fused tile grid"))

@@ -1,0 +1,41 @@
+"""Built-in workload registrations.
+
+The paper's two ResNet18 benchmarks (§V-2) plus two structurally different
+CNNs proving the registry extends beyond the paper: a residual-free VGG
+chain and a depthwise-separable MobileNet (grouped convs).  All are plain
+``() -> Graph`` builders; register more with
+:func:`repro.experiment.register_workload`.
+"""
+
+from __future__ import annotations
+
+from repro.core.graph import (Graph, build_mobilenet_v1, build_resnet18,
+                              build_vgg11, first_n_layers)
+from repro.experiment.registry import register_workload
+
+
+@register_workload("ResNet18_First8Layers",
+                   description="ResNet18 stem + stage 1 (paper §V-2, the "
+                               "fusion-dominated slice)")
+def _resnet18_first8() -> Graph:
+    return first_n_layers(build_resnet18(), 8)
+
+
+@register_workload("ResNet18_Full",
+                   description="Full ResNet18 @224 (paper §V-2)")
+def _resnet18_full() -> Graph:
+    return build_resnet18()
+
+
+@register_workload("VGG11",
+                   description="VGG11 @224: residual-free conv/pool chain "
+                               "+ 3-layer FC head")
+def _vgg11() -> Graph:
+    return build_vgg11()
+
+
+@register_workload("MobileNetV1",
+                   description="MobileNetV1 @224: depthwise-separable "
+                               "blocks (grouped convs)")
+def _mobilenet_v1() -> Graph:
+    return build_mobilenet_v1()

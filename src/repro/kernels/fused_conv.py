@@ -24,6 +24,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams → CompilerParams across jax releases
+def _compiler_params(**kwargs):
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; this jax version is incompatible with the "
+            "fused_conv kernel")
+    return cls(**kwargs)
+
 
 def _kernel(x_ref, w_ref, scale_ref, shift_ref, *rest, stride: int,
             kh: int, kw: int, th: int, tw: int, relu: bool,
@@ -124,7 +135,7 @@ def fused_conv_kernel(x: jnp.ndarray, w: jnp.ndarray, scale: jnp.ndarray,
                                lambda b, h, w_, co: (b, h, w_, co)),
         out_shape=jax.ShapeDtypeStruct((B, OH + oh_pad, OW + ow_pad, Cout),
                                        x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel",) * 4),
         interpret=interpret,
     )(*args)

@@ -1,9 +1,16 @@
-"""End-to-end PPA evaluation: workload × system → {cycles, energy, area}.
+"""Legacy end-to-end PPA entry points — thin shims over `repro.experiment`.
 
-Drives the full reproduction of §V: the three systems (AiM-like, Fused16,
-Fused4), the two workloads (ResNet18_First8Layers, ResNet18_Full), and
-arbitrary (GBUF, LBUF) buffer configurations, all normalised to the
-AiM-like G2K_L0 baseline.
+.. deprecated::
+    New code should use :class:`repro.experiment.Experiment` directly: it
+    offers the same evaluation under pluggable backends (``analytic`` /
+    ``burst-sim``), memoizes graphs/tilings/traces across sweep points, and
+    extends to any registered workload.  These shims delegate to the
+    process-wide :func:`repro.experiment.default_experiment` (so they share
+    its caches) and are kept for API compatibility.
+
+``SYSTEMS`` / ``TILE_GRID`` / ``HEADLINE_CONFIGS`` are derived views of the
+system registry — the single source of truth lives in
+:mod:`repro.experiment.systems`.
 """
 
 from __future__ import annotations
@@ -13,30 +20,28 @@ from typing import Callable
 
 from repro.core import dataflow
 from repro.core.commands import Trace, cross_bank_bytes
-from repro.core.fusion import FusionPlan, plan_fused
-from repro.core.graph import Graph, build_resnet18, first_n_layers
-from repro.pim import arch as pim_arch
-from repro.pim.arch import PIMArch, config_label
-from repro.pim.energy import AreaReport, EnergyReport, simulate_energy, system_area
-from repro.pim.timing import CycleReport, simulate_cycles
+from repro.core.fusion import plan_fused
+from repro.core.graph import Graph
+from repro.experiment import SYSTEMS as _SYSTEM_REGISTRY
+from repro.experiment import default_experiment
+from repro.pim.arch import PIMArch
+from repro.pim.energy import AreaReport, EnergyReport
+from repro.pim.timing import CycleReport
 
+# Derived registry views (kept as plain dicts for legacy callers; the
+# registry preserves registration order: AiM-like, Fused16, Fused4).
 SYSTEMS: dict[str, Callable[..., PIMArch]] = {
-    "AiM-like": pim_arch.aim_like,
-    "Fused16": pim_arch.fused16,
-    "Fused4": pim_arch.fused4,
-}
+    name: spec.arch_factory for name, spec in _SYSTEM_REGISTRY.items()}
 
 # tile grid per PIMfused system (§V-3)
-TILE_GRID = {"Fused16": (4, 4), "Fused4": (2, 2)}
+TILE_GRID: dict[str, tuple[int, int]] = {
+    name: spec.tile_grid for name, spec in _SYSTEM_REGISTRY.items()
+    if spec.tile_grid is not None}
 
 # headline buffer points, (gbuf_bytes, lbuf_bytes): the AiM design point
-# for the baseline, the paper's §V-D G32K_L256 for the fused systems —
-# shared by benchmarks/sim_sweep.py, examples/pim_sim.py and tests
+# for the baseline, the paper's §V-D G32K_L256 for the fused systems
 HEADLINE_CONFIGS: dict[str, tuple[int, int]] = {
-    "AiM-like": (2 * 1024, 0),
-    "Fused16": (32 * 1024, 256),
-    "Fused4": (32 * 1024, 256),
-}
+    name: spec.default_buffers for name, spec in _SYSTEM_REGISTRY.items()}
 
 
 @dataclasses.dataclass
@@ -58,43 +63,47 @@ class PPAResult:
 
 
 def build_workload(name: str) -> Graph:
-    g = build_resnet18()
-    if name == "ResNet18_Full":
-        return g
-    if name == "ResNet18_First8Layers":
-        return first_n_layers(g, 8)
-    raise ValueError(f"unknown workload {name}")
+    """Deprecated: use the workload registry (`repro.experiment.WORKLOADS`).
+
+    Returns the default experiment's memoized graph — treat as read-only.
+    """
+    return default_experiment().graph(name)
 
 
 def trace_for(system: str, workload: Graph, a: PIMArch) -> Trace:
-    if system == "AiM-like":
+    """Deprecated: map an arbitrary graph under a registered system's
+    dataflow (used by callers holding pre-sliced graphs; registered
+    workloads should go through ``Experiment.trace`` for memoization)."""
+    spec = _SYSTEM_REGISTRY.get(system)
+    if spec.tile_grid is None:
         return dataflow.map_baseline(workload, a)
-    ty, tx = TILE_GRID[system]
-    plan = plan_fused(workload, ty, tx)
+    plan = plan_fused(workload, *spec.tile_grid)
     return dataflow.map_pimfused(plan, a)
 
 
 def evaluate(system: str, workload_name: str, gbuf_bytes: int,
              lbuf_bytes: int) -> PPAResult:
-    a = SYSTEMS[system](gbuf_bytes=gbuf_bytes, lbuf_bytes=lbuf_bytes)
-    wl = build_workload(workload_name)
-    trace = trace_for(system, wl, a)
-    return PPAResult(
-        system=system, workload=workload_name,
-        config=config_label(gbuf_bytes, lbuf_bytes),
-        cycles=simulate_cycles(trace, a),
-        energy=simulate_energy(trace, a),
-        area=system_area(a),
-        cross_bank_bytes=cross_bank_bytes(trace),
-    )
+    """Deprecated: use ``Experiment.run`` (analytic backend)."""
+    r = default_experiment().run(workload=workload_name, system=system,
+                                 gbuf_bytes=gbuf_bytes,
+                                 lbuf_bytes=lbuf_bytes, backend="analytic")
+    return PPAResult(system=system, workload=workload_name, config=r.config,
+                     cycles=r.detail["cycles"], energy=r.detail["energy"],
+                     area=r.detail["area"],
+                     cross_bank_bytes=r.cross_bank_bytes)
 
 
 def baseline(workload_name: str) -> PPAResult:
     """AiM-like with the default AiM buffers (G2K_L0) — the paper's 1.0."""
-    return evaluate("AiM-like", workload_name, 2 * 1024, 0)
+    exp = default_experiment()
+    g0, l0 = _SYSTEM_REGISTRY.get(exp.baseline_system).default_buffers
+    return evaluate(exp.baseline_system, workload_name, g0, l0)
 
 
 def normalized_ppa(system: str, workload_name: str, gbuf_bytes: int,
                    lbuf_bytes: int) -> dict[str, float]:
-    return evaluate(system, workload_name, gbuf_bytes, lbuf_bytes).normalized(
-        baseline(workload_name))
+    """Deprecated: use ``Experiment.run`` + ``Experiment.normalized``."""
+    exp = default_experiment()
+    r = exp.run(workload=workload_name, system=system, gbuf_bytes=gbuf_bytes,
+                lbuf_bytes=lbuf_bytes, backend="analytic")
+    return exp.normalized(r)

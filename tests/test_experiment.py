@@ -1,0 +1,404 @@
+"""Tests for the unified experiment API (`repro.experiment`).
+
+Covers: golden parity of the ``analytic`` backend against the raw model
+primitives (and the legacy ``pim.ppa`` shims), registry round-trips and
+unknown-name errors, graph/tiling/trace memoization across buffer sweeps
+(mapper call counts asserted), the two new non-ResNet workloads end to
+end under both backends, the tightened ``Command.validate()``, and the
+tiling-derived boundary-reorganisation halo bytes.
+"""
+
+import pytest
+
+from repro.core import dataflow
+from repro.core.commands import CMD, Command, cross_bank_bytes
+from repro.core.fusion import plan_fused
+from repro.core.graph import (Graph, Layer, OpKind, build_mobilenet_v1,
+                              build_resnet18, build_vgg11, first_n_layers)
+from repro.experiment import (BACKENDS, EvalSpec, Experiment, Registry,
+                              SYSTEMS, SystemSpec, WORKLOADS, WorkloadSpec,
+                              register_workload)
+from repro.pim import arch as pim_arch
+from repro.pim.energy import simulate_energy, system_area
+from repro.pim.timing import simulate_cycles
+
+KB = 1024
+
+
+# ---------------------------------------------------------------------------
+# golden parity: Experiment(analytic) == raw primitives == legacy shims
+# ---------------------------------------------------------------------------
+
+def _raw_ppa(system: str, workload: str, gbuf: int, lbuf: int):
+    """Compose the PPA triple directly from the model primitives,
+    bypassing both pim.ppa and repro.experiment."""
+    factories = {"AiM-like": pim_arch.aim_like, "Fused16": pim_arch.fused16,
+                 "Fused4": pim_arch.fused4}
+    grids = {"Fused16": (4, 4), "Fused4": (2, 2)}
+    g = build_resnet18()
+    if workload == "ResNet18_First8Layers":
+        g = first_n_layers(g, 8)
+    arch = factories[system](gbuf_bytes=gbuf, lbuf_bytes=lbuf)
+    if system == "AiM-like":
+        trace = dataflow.map_baseline(g, arch)
+    else:
+        trace = dataflow.map_pimfused(plan_fused(g, *grids[system]), arch)
+    return (simulate_cycles(trace, arch).total,
+            simulate_energy(trace, arch).total_nj,
+            system_area(arch).total_mm2,
+            cross_bank_bytes(trace))
+
+
+@pytest.mark.parametrize("system,gbuf,lbuf", [
+    ("AiM-like", 2 * KB, 0),
+    ("Fused16", 32 * KB, 256),
+    ("Fused4", 32 * KB, 256),
+    ("Fused16", 2 * KB, 512),
+])
+def test_analytic_backend_matches_raw_primitives(system, gbuf, lbuf):
+    exp = Experiment()
+    r = exp.run(workload="ResNet18_Full", system=system, gbuf_bytes=gbuf,
+                lbuf_bytes=lbuf)
+    cycles, energy, area, xbank = _raw_ppa(system, "ResNet18_Full", gbuf,
+                                           lbuf)
+    assert r.cycles == cycles
+    assert r.energy_nj == energy
+    assert r.area_mm2 == area
+    assert r.cross_bank_bytes == xbank
+
+
+@pytest.mark.parametrize("system", ["AiM-like", "Fused16", "Fused4"])
+def test_normalized_parity_with_legacy_shim(system):
+    """Experiment normalisation reproduces pim.ppa.normalized_ppa exactly
+    for all three systems at the paper's headline points."""
+    from repro.pim.ppa import HEADLINE_CONFIGS, normalized_ppa
+    gbuf, lbuf = HEADLINE_CONFIGS[system]
+    exp = Experiment()
+    r = exp.run(workload="ResNet18_Full", system=system, gbuf_bytes=gbuf,
+                lbuf_bytes=lbuf)
+    assert exp.normalized(r) == normalized_ppa(system, "ResNet18_Full",
+                                               gbuf, lbuf)
+    # and against the raw primitives (no shared code path with the shim)
+    c, e, a, _ = _raw_ppa(system, "ResNet18_Full", gbuf, lbuf)
+    bc, be, ba, _ = _raw_ppa("AiM-like", "ResNet18_Full", 2 * KB, 0)
+    n = exp.normalized(r)
+    assert n["cycles"] == pytest.approx(c / bc)
+    assert n["energy"] == pytest.approx(e / be)
+    assert n["area"] == pytest.approx(a / ba)
+
+
+def test_legacy_registry_views_are_registry_backed():
+    from repro.pim import ppa
+    assert set(ppa.SYSTEMS) == set(SYSTEMS.names())
+    assert ppa.TILE_GRID == {n: s.tile_grid for n, s in SYSTEMS.items()
+                             if s.tile_grid is not None}
+    assert ppa.HEADLINE_CONFIGS == {n: s.default_buffers
+                                    for n, s in SYSTEMS.items()}
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def _tiny_graph() -> Graph:
+    l0 = Layer("c0", OpKind.CONV_BN_RELU, 8, 16, 32, 32, 32, 32,
+               kh=3, kw=3, stride=1, padding=1)
+    l1 = Layer("c1", OpKind.CONV_BN_RELU, 16, 16, 32, 32, 32, 32,
+               kh=3, kw=3, stride=1, padding=1)
+    return Graph("tiny", [l0, l1])
+
+
+def test_registry_round_trip():
+    reg: Registry[WorkloadSpec] = Registry("workload")
+
+    @register_workload("Tiny", description="2-conv smoke net", registry=reg)
+    def _tiny() -> Graph:
+        return _tiny_graph()
+
+    spec = reg.get("Tiny")
+    assert spec.name == "Tiny" and spec.description == "2-conv smoke net"
+    assert len(spec.build()) == 2
+    assert "Tiny" in reg and reg.names() == ("Tiny",)
+
+
+def test_registry_unknown_name_lists_candidates():
+    with pytest.raises(KeyError, match="unknown workload 'NoSuchNet'"):
+        WORKLOADS.get("NoSuchNet")
+    with pytest.raises(KeyError, match="ResNet18_Full"):
+        WORKLOADS.get("NoSuchNet")
+    with pytest.raises(KeyError, match="unknown system"):
+        SYSTEMS.get("TPU")
+    with pytest.raises(KeyError, match="unknown backend"):
+        BACKENDS.get("ramulator")
+
+
+def test_registry_duplicate_rejected_unless_replace():
+    reg: Registry[int] = Registry("thing")
+    reg.register("x", 1)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("x", 2)
+    reg.register("x", 2, replace=True)
+    assert reg.get("x") == 2
+
+
+def test_builtin_registrations():
+    assert set(WORKLOADS.names()) >= {"ResNet18_Full",
+                                      "ResNet18_First8Layers", "VGG11",
+                                      "MobileNetV1"}
+    assert SYSTEMS.names() == ("AiM-like", "Fused16", "Fused4")
+    assert set(BACKENDS.names()) == {"analytic", "burst-sim"}
+
+
+# ---------------------------------------------------------------------------
+# memoization across sweep points
+# ---------------------------------------------------------------------------
+
+def test_buffer_sweep_reuses_graph_plan_and_tilings(monkeypatch):
+    builds = {"n": 0}
+    reg: Registry[WorkloadSpec] = Registry("workload")
+
+    def counted_builder() -> Graph:
+        builds["n"] += 1
+        return _tiny_graph()
+
+    reg.register("Tiny", WorkloadSpec("Tiny", counted_builder))
+    maps = {"fused": 0, "baseline": 0}
+    real_fused, real_baseline = dataflow.map_pimfused, dataflow.map_baseline
+
+    def counting_fused(*a, **k):
+        maps["fused"] += 1
+        return real_fused(*a, **k)
+
+    def counting_baseline(*a, **k):
+        maps["baseline"] += 1
+        return real_baseline(*a, **k)
+
+    monkeypatch.setattr("repro.experiment.runner.dataflow.map_pimfused",
+                        counting_fused)
+    monkeypatch.setattr("repro.experiment.runner.dataflow.map_baseline",
+                        counting_baseline)
+
+    exp = Experiment(workloads=reg)
+    points = [(2 * KB, l) for l in (0, 64, 128, 192, 256, 320, 384, 448)]
+    results = exp.sweep(workloads="Tiny", systems="Fused16", buffers=points)
+    norms = [exp.normalized(r) for r in results]
+
+    assert len(results) == len(points) == 8
+    assert len({r.config for r in results}) == 8
+    # the graph was built ONCE for all 8 points + the baseline
+    assert builds["n"] == 1
+    assert exp.stats["graph_builds"] == 1
+    # fusion plan + group tilings solved once, not once per buffer point
+    assert exp.stats["plan_builds"] == 1
+    assert exp.stats["tiling_builds"] == 1
+    # mapper ran once per DISTINCT point (8 fused) + once for the baseline
+    assert maps["fused"] == 8
+    assert maps["baseline"] == 1
+    assert exp.stats["trace_maps"] == 9
+    # the baseline backing normalized() was evaluated once, then cache-hit
+    assert exp.stats["backend_evals"] == 9
+    assert exp.stats["result_hits"] == len(norms) - 1
+
+    # re-running the sweep does no new building/mapping/evaluating at all
+    before = dict(exp.stats)
+    exp.sweep(workloads="Tiny", systems="Fused16", buffers=points)
+    assert builds["n"] == 1 and maps["fused"] == 8
+    assert exp.stats["trace_maps"] == before["trace_maps"]
+    assert exp.stats["backend_evals"] == before["backend_evals"]
+    assert exp.stats["result_hits"] == before["result_hits"] + 8
+
+
+def test_burst_sim_policies_share_one_lowering():
+    exp = Experiment()
+    serial = exp.run(workload="ResNet18_First8Layers", system="Fused16",
+                     backend="burst-sim", policy="serial")
+    overlap = exp.run(workload="ResNet18_First8Layers", system="Fused16",
+                      backend="burst-sim", policy="overlap")
+    assert exp.stats["lowerings"] == 1        # shared across policies
+    assert exp.stats["trace_maps"] == 1       # and one trace mapping
+    # the policy-independent analytic cycle/energy models also ran once
+    assert exp.stats["cycle_models"] == 1
+    assert exp.stats["energy_models"] == 1
+    assert overlap.cycles <= serial.cycles    # prefetch can only help
+
+
+# ---------------------------------------------------------------------------
+# one call path × any (workload, system, backend): new workloads e2e
+# ---------------------------------------------------------------------------
+
+def test_new_workload_graphs_match_reference_sizes():
+    vgg = build_vgg11()
+    assert 7.4e9 < vgg.total_macs < 7.8e9          # ~7.6 GMACs
+    assert 130e6 < vgg.total_weight_elems < 135e6  # ~132.9M params
+    mob = build_mobilenet_v1()
+    assert 0.5e9 < mob.total_macs < 0.65e9         # ~0.57 GMACs
+    assert 3.9e6 < mob.total_weight_elems < 4.5e6  # ~4.2M params
+
+
+def test_depthwise_groups_cut_macs_and_weights():
+    dw = Layer("dw", OpKind.CONV_BN_RELU, 64, 64, 16, 16, 16, 16,
+               kh=3, kw=3, padding=1, groups=64)
+    full = Layer("full", OpKind.CONV_BN_RELU, 64, 64, 16, 16, 16, 16,
+                 kh=3, kw=3, padding=1)
+    assert dw.macs * 64 == full.macs
+    assert dw.weight_elems == 64 * 9 + 2 * 64
+    with pytest.raises(ValueError, match="groups"):
+        Layer("bad", OpKind.CONV_BN_RELU, 64, 64, 16, 16, 16, 16, groups=7)
+
+
+@pytest.mark.parametrize("workload", ["VGG11", "MobileNetV1"])
+@pytest.mark.parametrize("system", ["AiM-like", "Fused16", "Fused4"])
+def test_new_workloads_evaluate_on_all_systems(workload, system):
+    exp = Experiment()
+    r = exp.run(workload=workload, system=system)   # registry default point
+    assert r.cycles > 0 and r.energy_nj > 0 and r.area_mm2 > 0
+    n = exp.normalized(r)
+    assert all(v > 0 for v in n.values())
+    if system != "AiM-like":
+        base = exp.run(workload=workload, system="AiM-like",
+                       gbuf_bytes=2 * KB, lbuf_bytes=0)
+        # the paper's mechanism generalises: fused dataflow cuts the
+        # sequential cross-bank bytes on the non-ResNet workloads too
+        assert r.cross_bank_bytes < base.cross_bank_bytes
+
+
+def test_new_workload_burst_sim_fidelity():
+    """The burst simulator honours the ±5 % serial-policy contract on a
+    depthwise-separable (grouped-conv) trace, not just ResNet."""
+    from repro.sim.report import assert_fidelity
+    exp = Experiment()
+    r = exp.run(workload="MobileNetV1", system="Fused4",
+                backend="burst-sim", policy="serial")
+    assert_fidelity(r.detail["sim"])
+    assert r.cycles == r.detail["sim"].simulated_total
+
+
+def test_default_sweep_covers_full_grid():
+    exp = Experiment()
+    results = exp.sweep()   # every workload × every system, default buffers
+    assert len(results) == len(WORKLOADS) * len(SYSTEMS)
+    seen = {(r.workload, r.system) for r in results}
+    assert len(seen) == len(results)
+
+
+def test_custom_system_registers_and_runs():
+    systems: Registry[SystemSpec] = Registry("system")
+    for _, spec in SYSTEMS.items():
+        systems.register(spec.name, spec)
+    systems.register("Fused16-wide", SystemSpec(
+        name="Fused16-wide", arch_factory=pim_arch.fused16,
+        tile_grid=(4, 4), default_buffers=(64 * KB, 512)))
+    exp = Experiment(systems=systems)
+    r = exp.run(workload="ResNet18_First8Layers", system="Fused16-wide")
+    assert r.config == "G64K_L512"
+    ref = exp.run(workload="ResNet18_First8Layers", system="Fused16",
+                  gbuf_bytes=64 * KB, lbuf_bytes=512)
+    assert r.cycles == ref.cycles
+
+
+# ---------------------------------------------------------------------------
+# Command.validate tightening (satellite)
+# ---------------------------------------------------------------------------
+
+def test_validate_rejects_negative_compute_fields():
+    with pytest.raises(ValueError, match="negative alu_ops"):
+        Command(CMD.PIMCORE_CMP, "l", flag="POOL", alu_ops=-1).validate()
+    with pytest.raises(ValueError, match="negative bank_stream_bytes"):
+        Command(CMD.PIMCORE_CMP, "l", flag="CONV_BN",
+                bank_stream_bytes=-8).validate()
+    with pytest.raises(ValueError, match="negative gbuf_stream_bytes"):
+        Command(CMD.GBCORE_CMP, "l", flag="POOL",
+                gbuf_stream_bytes=-8).validate()
+    with pytest.raises(ValueError, match="negative lbuf_stream_bytes"):
+        Command(CMD.PIMCORE_CMP, "l", flag="ADD_RELU",
+                lbuf_stream_bytes=-1).validate()
+    with pytest.raises(ValueError, match="negative restream_bytes"):
+        Command(CMD.PIM_BK2LBUF, "l", bytes_total=64,
+                restream_bytes=-1).validate()
+
+
+def test_validate_rejects_restream_exceeding_payload():
+    # transfer: restream may not exceed bytes_total
+    with pytest.raises(ValueError, match="restream_bytes 65 exceeds"):
+        Command(CMD.PIM_BK2GBUF, "l", bytes_total=64,
+                restream_bytes=65).validate()
+    # compute: restream is per-core, capped by bank_stream_bytes
+    with pytest.raises(ValueError, match="exceeds payload"):
+        Command(CMD.PIMCORE_CMP, "l", flag="CONV_BN", bank_stream_bytes=10,
+                restream_bytes=11).validate()
+    # boundary cases stay valid
+    Command(CMD.PIM_BK2GBUF, "l", bytes_total=64, restream_bytes=64).validate()
+    Command(CMD.PIMCORE_CMP, "l", flag="CONV_BN", bank_stream_bytes=10,
+            restream_bytes=10).validate()
+
+
+def test_all_registered_traces_validate():
+    exp = Experiment()
+    for workload in WORKLOADS.names():
+        for system in SYSTEMS.names():
+            for c in exp.trace(workload, system, 32 * KB, 256):
+                c.validate()
+
+
+# ---------------------------------------------------------------------------
+# boundary reorganisation uses tiling-derived halo bytes (satellite)
+# ---------------------------------------------------------------------------
+
+def test_boundary_reorg_moves_exact_next_group_halo():
+    g = build_resnet18()
+    plan = plan_fused(g, 4, 4)              # groups [0:8) [8:15), tail 15
+    tilings = dataflow.plan_tilings(plan)
+    arch = pim_arch.fused16(32 * KB, 256)
+    trace = dataflow.map_pimfused(plan, arch, tilings=tilings)
+
+    nxt = plan.groups[1]
+    halo = dataflow.group_input_halo_bytes(
+        g.slice(nxt.start, nxt.stop), tilings[dataflow.tiling_key(nxt)],
+        arch.dtype_bytes)
+    boundary_layer = g[plan.groups[0].stop - 1]
+    reorg_in = [c for c in trace
+                if c.layer == f"{boundary_layer.name}:reorg_in"]
+    assert len(reorg_in) == 1
+    # spatial→spatial moves the NEXT group's tiling-engine halo, bounded by
+    # one full-map redistribution (deep groups can demand replicated halo
+    # regions larger than the map itself)
+    fmap = boundary_layer.out_elems * arch.dtype_bytes
+    assert halo > 0
+    assert reorg_in[0].bytes_total == min(halo, fmap)
+    tail_layer = g[plan.groups[-1].stop - 1]
+    tail_reorg = [c for c in trace
+                  if c.layer == f"{tail_layer.name}:reorg_out"]
+    assert tail_reorg[0].bytes_total == \
+        tail_layer.out_elems * arch.dtype_bytes
+
+    # Fused4's first boundary halo fits under the map: the reorg carries
+    # the EXACT tiling-engine halo, not an estimate
+    plan4 = plan_fused(g, 2, 2)
+    tilings4 = dataflow.plan_tilings(plan4)
+    arch4 = pim_arch.fused4(32 * KB, 256)
+    trace4 = dataflow.map_pimfused(plan4, arch4, tilings=tilings4)
+    nxt4 = plan4.groups[1]
+    halo4 = dataflow.group_input_halo_bytes(
+        g.slice(nxt4.start, nxt4.stop), tilings4[dataflow.tiling_key(nxt4)],
+        arch4.dtype_bytes)
+    fmap4 = g[plan4.groups[0].stop - 1].out_elems * arch4.dtype_bytes
+    assert 0 < halo4 < fmap4
+    reorg4 = [c for c in trace4
+              if c.layer == f"{g[plan4.groups[0].stop - 1].name}:reorg_in"]
+    assert reorg4[0].bytes_total == halo4
+
+
+def test_group_input_halo_matches_group_mapper():
+    """The reorg halo and the fused group's own input-halo command agree on
+    the same tiling-engine number."""
+    g = first_n_layers(build_resnet18(), 8)
+    plan = plan_fused(g, 4, 4)
+    arch = pim_arch.fused16(32 * KB, 256)
+    tilings = dataflow.plan_tilings(plan)
+    grp = plan.groups[0]
+    halo = dataflow.group_input_halo_bytes(
+        g.slice(grp.start, grp.stop), tilings[dataflow.tiling_key(grp)],
+        arch.dtype_bytes)
+    trace = dataflow.map_pimfused(plan, arch, tilings=tilings)
+    halo_cmds = [c for c in trace if c.layer.endswith(":halo")]
+    assert halo_cmds and halo_cmds[0].bytes_total == halo
