@@ -10,13 +10,21 @@ so every timed row is a real evaluation (never a cross-figure cache hit),
 while WITHIN a figure the driver's memoization works exactly as in
 production sweeps: graphs, fusion tilings and the per-workload
 normalisation baseline are computed once, not once per sweep point.
+
+Every figure additionally persists its grid points as a CSV artifact under
+:func:`repro.experiment.artifacts.default_artifact_dir`
+(``$REPRO_ARTIFACT_DIR``, default ``artifacts/``) — e.g.
+``artifacts/fig5_gbuf_sweep.csv`` — so the figures regenerate from disk
+without re-running the sweep.
 """
 
 from __future__ import annotations
 
+import sys
 import time
 
 from repro.experiment import Experiment
+from repro.experiment.artifacts import default_artifact_dir, write_results_csv
 
 KB = 1024
 SYSTEMS = ("AiM-like", "Fused16", "Fused4")
@@ -28,58 +36,72 @@ def _timed(exp: Experiment, system: str, wl: str, g: int, l: int):
     r = exp.run(workload=wl, system=system, gbuf_bytes=g, lbuf_bytes=l)
     n = exp.normalized(r)
     us = (time.perf_counter() - t0) * 1e6
-    return n, us
+    return r, n, us
+
+
+def _persist(figure: str, exp: Experiment, results) -> None:
+    path = write_results_csv(default_artifact_dir() / f"{figure}.csv",
+                             results, experiment=exp)
+    print(f"[{figure}] wrote {len(results)} rows to {path}", file=sys.stderr)
 
 
 def fig5_gbuf_sweep() -> list[str]:
     """§V-B: GBUF 2K→64K, LBUF=0."""
     exp = Experiment()
-    rows = []
+    rows, results = [], []
     for wl in WORKLOADS:
         for system in SYSTEMS:
             for g in (2, 4, 8, 16, 32, 64):
-                n, us = _timed(exp, system, wl, g * KB, 0)
+                r, n, us = _timed(exp, system, wl, g * KB, 0)
+                results.append(r)
                 rows.append(
                     f"fig5/{wl}/{system}/G{g}K_L0,{us:.0f},"
                     f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
                     f"area={n['area']:.4f}")
+    _persist("fig5_gbuf_sweep", exp, results)
     return rows
 
 
 def fig6_lbuf_sweep() -> list[str]:
     """§V-C: LBUF 0→1K, GBUF=2K."""
     exp = Experiment()
-    rows = []
+    rows, results = [], []
     for wl in WORKLOADS:
         for system in SYSTEMS:
             for l in (0, 64, 128, 256, 512, 1024):
-                n, us = _timed(exp, system, wl, 2 * KB, l)
+                r, n, us = _timed(exp, system, wl, 2 * KB, l)
+                results.append(r)
                 rows.append(
                     f"fig6/{wl}/{system}/G2K_L{l},{us:.0f},"
                     f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
                     f"area={n['area']:.4f}")
+    _persist("fig6_lbuf_sweep", exp, results)
     return rows
 
 
 def fig7_joint_sweep() -> list[str]:
     """§V-D: joint GBUF×LBUF, ResNet18_Full."""
     exp = Experiment()
-    rows = []
+    rows, results = [], []
     for system in SYSTEMS:
         for g, l in ((2, 0), (8, 128), (16, 256), (32, 256), (64, 256),
                      (64, 100 * KB)):
-            n, us = _timed(exp, system, "ResNet18_Full", g * KB, l)
+            r, n, us = _timed(exp, system, "ResNet18_Full", g * KB, l)
+            results.append(r)
             label = f"G{g}K_L{l if l < KB else str(l // KB) + 'K'}"
             rows.append(
                 f"fig7/ResNet18_Full/{system}/{label},{us:.0f},"
                 f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
                 f"area={n['area']:.4f}")
+    _persist("fig7_joint_sweep", exp, results)
     return rows
 
 
 def headline() -> list[str]:
     """Abstract / §V-D: Fused4 G32K_L256 vs paper 0.306/0.834/0.765."""
-    n, us = _timed(Experiment(), "Fused4", "ResNet18_Full", 32 * KB, 256)
+    exp = Experiment()
+    r, n, us = _timed(exp, "Fused4", "ResNet18_Full", 32 * KB, 256)
+    _persist("headline", exp, [r])
     paper = {"cycles": 0.306, "energy": 0.834, "area": 0.765}
     derived = ";".join(
         f"{k}={n[k]:.4f}(paper {paper[k]})" for k in ("cycles", "energy",
@@ -91,17 +113,19 @@ def new_workloads() -> list[str]:
     """Beyond the paper: VGG11 and MobileNetV1 at each system's registered
     default design point (registry extensibility proof)."""
     exp = Experiment()
-    rows = []
+    rows, results = [], []
     for wl in ("VGG11", "MobileNetV1"):
         for system in SYSTEMS:
             t0 = time.perf_counter()
             r = exp.run(workload=wl, system=system)
             n = exp.normalized(r)
             us = (time.perf_counter() - t0) * 1e6
+            results.append(r)
             rows.append(
                 f"workloads/{wl}/{system}/{r.config},{us:.0f},"
                 f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
                 f"area={n['area']:.4f}")
+    _persist("new_workloads", exp, results)
     return rows
 
 

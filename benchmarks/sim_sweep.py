@@ -4,16 +4,22 @@ Runs every registered system at its registry default buffer point through
 BOTH cycle paths (the ``burst-sim`` experiment backend under each issue
 policy) and reports, per system:
 
-* the ``serial``-policy agreement with the analytic model (the fidelity
-  contract: ±5 %),
-* the ``overlap``-policy speedup (weight prefetch hidden behind PIMcore
-  compute — what a smarter controller than the paper's one-CMD-at-a-time
-  baseline would buy),
-* per-bank traffic attribution and the bus-occupancy breakdown
+* the ``serial``-policy agreement with the analytic model under the
+  row-reuse-disabled lowering (the fidelity contract: ±5 % on cycles,
+  EXACT on activation counts),
+* the row-aware operating point: activations saved, row-buffer hits and
+  the hit-aware energy (priced from the simulated ``EventCounts``, not
+  the analytic restream assumption),
+* the ``overlap`` / ``row-aware``-policy speedups (weight prefetch hidden
+  behind PIMcore compute; same-row burst batching per bank),
+* per-bank port occupancy and the bus-occupancy breakdown
   (xfer / bank-switch / row-activation cycles).
 
-The trace is mapped and burst-lowered once per system (the `Experiment`
-memoizes both); the two policies replay the same lowering.
+The trace is mapped once per system and burst-lowered once per row-reuse
+mode (the `Experiment` memoizes both); the policies replay the same
+lowering.  All grid points are persisted as a CSV artifact
+(``$REPRO_ARTIFACT_DIR``, default ``artifacts/sim_sweep.csv``) so figures
+regenerate without re-running.
 
 Run:  PYTHONPATH=src python -m benchmarks.sim_sweep
 CSV rows (``name,us_per_call,derived``) go to stdout, the human-readable
@@ -26,6 +32,7 @@ import sys
 import time
 
 from repro.experiment import default_experiment
+from repro.experiment.artifacts import default_artifact_dir, write_results_csv
 from repro.sim.report import assert_fidelity
 
 WORKLOAD = "ResNet18_Full"
@@ -34,15 +41,24 @@ WORKLOAD = "ResNet18_Full"
 def run_sweep(workload: str = WORKLOAD) -> list[str]:
     exp = default_experiment()
     rows = []
+    results = []
     for system in exp.systems.names():
         t0 = time.perf_counter()
+        # the fidelity gate replays the row-reuse-DISABLED lowering
+        gate = exp.run(workload=workload, system=system,
+                       backend="burst-sim", policy="serial",
+                       row_reuse=False)
         reports = {p: exp.run(workload=workload, system=system,
-                              backend="burst-sim", policy=p).detail["sim"]
-                   for p in ("serial", "overlap")}
+                              backend="burst-sim", policy=p)
+                   for p in ("serial", "overlap", "row-aware")}
         us = (time.perf_counter() - t0) * 1e6
-        serial = assert_fidelity(reports["serial"])    # the ±5 % band
-        overlap = reports["overlap"]
-        speedup = serial.simulated_total / max(overlap.simulated_total, 1)
+        serial = assert_fidelity(gate.detail["sim"])   # ±5 % + exact acts
+        ra = reports["row-aware"].detail["sim"]
+        overlap = reports["overlap"].detail["sim"]
+        # policy speedups vs the same (row-reuse-enabled) serial lowering
+        base = reports["serial"].detail["sim"].simulated_total
+        speedup = base / max(overlap.simulated_total, 1)
+        ra_speedup = base / max(ra.simulated_total, 1)
 
         rows.append(
             f"sim_sweep/{workload}/{system},{us:.0f},"
@@ -50,10 +66,20 @@ def run_sweep(workload: str = WORKLOAD) -> list[str]:
             f"serial={serial.simulated_total};"
             f"serial_err={serial.relative_error:+.4f};"
             f"overlap={overlap.simulated_total};"
-            f"overlap_speedup={speedup:.4f}")
+            f"overlap_speedup={speedup:.4f};"
+            f"row_aware={ra.simulated_total};"
+            f"row_aware_speedup={ra_speedup:.4f};"
+            f"row_hits={ra.result.row_hits};"
+            f"acts_saved={ra.activations_saved};"
+            f"hit_energy_nj={reports['row-aware'].energy_nj:.0f}")
 
-        for line in serial.lines() + overlap.lines():
+        results += [gate, *reports.values()]
+        for line in serial.lines() + ra.lines() + overlap.lines():
             print(line, file=sys.stderr)
+    path = write_results_csv(default_artifact_dir() / "sim_sweep.csv",
+                             results, experiment=exp)
+    print(f"[sim_sweep] wrote {len(results)} rows to {path}",
+          file=sys.stderr)
     return rows
 
 

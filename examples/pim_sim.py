@@ -1,11 +1,21 @@
-"""Burst-level simulator walkthrough: where do the cycles actually go?
+"""Burst-level simulator walkthrough: where do the cycles — and the DRAM
+row activations — actually go?
 
 Takes the ResNet18 first-8-layer trace on every registered system (at its
 registry default buffer point) and shows what the ``repro.sim`` subsystem
-adds over the analytic model: the serial-policy cross-check, the
-overlap-policy speedup, per-bank port occupancy and the sequential-bus
-breakdown.  Everything runs through the unified experiment API — the
-``burst-sim`` backend with the issue-policy knob.
+adds over the analytic model:
+
+* the serial-policy cross-check with row reuse DISABLED (cycle totals
+  within ±5 %, activation counts exactly equal — the fidelity contract),
+* the row-buffer-aware operating point: per-bank open-row state resolves
+  each burst to ACTIVATE / HIT / CONFLICT, and the energy report is
+  priced from those OBSERVED counts (``energy_from_counts``) instead of
+  the analytic restream assumption,
+* the ``overlap`` and ``row-aware`` issue policies (weight prefetch
+  behind compute; same-row burst batching per bank).
+
+Everything runs through the unified experiment API — the ``burst-sim``
+backend with the issue-policy and row-reuse knobs.
 
 Run:  PYTHONPATH=src python examples/pim_sim.py
 """
@@ -19,15 +29,33 @@ from repro.sim.report import assert_fidelity
 def main() -> None:
     exp = default_experiment()
     for system in exp.systems.names():
-        run = lambda p: exp.run(workload="ResNet18_First8Layers",
-                                system=system, backend="burst-sim",
-                                policy=p).detail["sim"]
-        serial = assert_fidelity(run("serial"))         # fidelity gate: ±5 %
-        overlap = run("overlap")
-        print("\n".join(serial.lines()))
-        speedup = serial.simulated_total / max(overlap.simulated_total, 1)
-        print(f"  overlap policy: {overlap.simulated_total} cycles "
-              f"({speedup:.3f}x vs serial)\n")
+        def run(policy: str, row_reuse: bool = True):
+            return exp.run(workload="ResNet18_First8Layers", system=system,
+                           backend="burst-sim", policy=policy,
+                           row_reuse=row_reuse)
+
+        # fidelity gate: serial + row reuse off == the analytic machine
+        gate = assert_fidelity(run("serial", row_reuse=False).detail["sim"])
+        print("\n".join(gate.lines()))
+
+        serial = run("serial")
+        rep = serial.detail["sim"]
+        saved = rep.activations_saved
+        print(f"  row reuse on : {rep.simulated_total} cycles, "
+              f"{rep.result.row_hits} row hits "
+              f"({saved} activations saved, hit rate "
+              f"{rep.result.hit_rate:.1%})")
+        print(f"  energy from simulated counts: {serial.energy_nj:.0f} nJ "
+              f"(analytic-count path: "
+              f"{run('serial', row_reuse=False).energy_nj:.0f} nJ)")
+
+        base = rep.simulated_total
+        for policy in ("overlap", "row-aware"):
+            r = run(policy).detail["sim"]
+            print(f"  {policy:9s} policy: {r.simulated_total} cycles "
+                  f"({base / max(r.simulated_total, 1):.3f}x vs serial, "
+                  f"{r.result.row_hits} hits)")
+        print()
 
 
 if __name__ == "__main__":

@@ -21,13 +21,19 @@ Modules:
   built-in registrations (ResNet18 ×2, VGG11, MobileNetV1; AiM-like,
   Fused16, Fused4).
 * :mod:`repro.experiment.backends` — the ``EvalSpec → EvalResult``
-  backend protocol; ``analytic`` and ``burst-sim`` built-ins.
+  backend protocol; ``analytic`` and ``burst-sim`` built-ins (the latter
+  reports energy from simulated row activations / row-buffer hits).
 * :mod:`repro.experiment.runner` — the memoizing `Experiment` driver.
+* :mod:`repro.experiment.artifacts` — CSV persistence for sweep results
+  (``Experiment.sweep(..., csv_path=...)``), so figures regenerate
+  without re-running.
 
 The legacy ``repro.pim.ppa`` entry points are thin shims over
 :func:`default_experiment`.
 """
 
+from repro.experiment.artifacts import (default_artifact_dir,
+                                        read_results_csv, write_results_csv)
 from repro.experiment.backends import (BACKENDS, AnalyticBackend,
                                        BurstSimBackend, EvalBackend,
                                        EvalResult, EvalSpec)
@@ -41,5 +47,6 @@ __all__ = [
     "BACKENDS", "BASELINE_SYSTEM", "AnalyticBackend", "BurstSimBackend",
     "EvalBackend", "EvalResult", "EvalSpec", "Experiment", "Registry",
     "SystemSpec", "WorkloadSpec", "SYSTEMS", "WORKLOADS",
-    "default_experiment", "register_system", "register_workload",
+    "default_artifact_dir", "default_experiment", "read_results_csv",
+    "register_system", "register_workload", "write_results_csv",
 ]

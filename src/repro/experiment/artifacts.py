@@ -1,0 +1,112 @@
+"""CSV artifacts for sweep results: persist once, regenerate figures free.
+
+One flat schema for every backend: grid coordinates (workload, system,
+buffer point, backend, policy, row-reuse mode), the absolute PPA triple,
+the cross-bank byte count, the row-activation/hit counts behind the energy
+number, and — when an :class:`~repro.experiment.runner.Experiment` is
+supplied — the normalized-to-baseline triple the paper reports.
+
+::
+
+    exp.sweep(workloads="ResNet18_Full", csv_path="artifacts/full.csv")
+    rows = read_results_csv("artifacts/full.csv")   # typed dicts back
+
+The benchmark drivers (``benchmarks/ppa_figures.py``,
+``benchmarks/sim_sweep.py``) write one artifact per figure under
+:func:`default_artifact_dir` (``$REPRO_ARTIFACT_DIR``, default
+``artifacts/``).
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+from pathlib import Path
+from typing import TYPE_CHECKING, Iterable
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.experiment.backends import EvalResult
+    from repro.experiment.runner import Experiment
+
+CSV_FIELDS = (
+    "workload", "system", "config", "backend", "policy", "row_reuse",
+    "gbuf_bytes", "lbuf_bytes", "cycles", "energy_nj", "area_mm2",
+    "cross_bank_bytes", "row_activations", "row_hits",
+    "norm_cycles", "norm_energy", "norm_area",
+)
+
+# how each column reads back from text (everything else stays str)
+_PARSERS = {
+    "row_reuse": lambda s: s == "True",
+    "gbuf_bytes": int, "lbuf_bytes": int, "cycles": int,
+    "cross_bank_bytes": int, "row_activations": int, "row_hits": int,
+    "energy_nj": float, "area_mm2": float,
+    "norm_cycles": float, "norm_energy": float, "norm_area": float,
+}
+
+
+def default_artifact_dir() -> Path:
+    """Where benchmark drivers drop their CSVs (override with
+    ``$REPRO_ARTIFACT_DIR``)."""
+    return Path(os.environ.get("REPRO_ARTIFACT_DIR", "artifacts"))
+
+
+def result_row(result: "EvalResult",
+               normalized: dict[str, float] | None = None) -> dict:
+    """Flatten one :class:`~repro.experiment.backends.EvalResult` into the
+    CSV schema."""
+    spec = result.spec
+    row = {
+        "workload": spec.workload,
+        "system": spec.system,
+        "config": result.config,
+        "backend": spec.backend,
+        "policy": spec.policy,
+        "row_reuse": spec.row_reuse,
+        "gbuf_bytes": spec.gbuf_bytes,
+        "lbuf_bytes": spec.lbuf_bytes,
+        "cycles": result.cycles,
+        "energy_nj": result.energy_nj,
+        "area_mm2": result.area_mm2,
+        "cross_bank_bytes": result.cross_bank_bytes,
+        "row_activations": result.events.row_activations,
+        "row_hits": result.events.row_hits,
+        "norm_cycles": "", "norm_energy": "", "norm_area": "",
+    }
+    if normalized is not None:
+        row["norm_cycles"] = normalized["cycles"]
+        row["norm_energy"] = normalized["energy"]
+        row["norm_area"] = normalized["area"]
+    return row
+
+
+def write_results_csv(path: str | Path, results: Iterable["EvalResult"],
+                      experiment: "Experiment | None" = None) -> Path:
+    """Persist results to ``path`` (parent directories created).  With an
+    ``experiment``, each row also carries the normalized PPA triple
+    (computed against the memoized per-workload baseline)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with path.open("w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=CSV_FIELDS)
+        writer.writeheader()
+        for r in results:
+            norm = experiment.normalized(r) if experiment is not None else None
+            writer.writerow(result_row(r, norm))
+    return path
+
+
+def read_results_csv(path: str | Path) -> list[dict]:
+    """Read an artifact back with typed columns (ints/floats/bools
+    restored; absent normalized columns come back as ``None``)."""
+    out = []
+    with Path(path).open(newline="") as f:
+        for raw in csv.DictReader(f):
+            row = {}
+            for k, v in raw.items():
+                if v == "":
+                    row[k] = None
+                else:
+                    row[k] = _PARSERS.get(k, str)(v)
+            out.append(row)
+    return out

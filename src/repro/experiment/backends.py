@@ -4,17 +4,21 @@ Two built-ins:
 
 * ``analytic`` — the fast aggregate model: cycles from
   :func:`repro.pim.timing.simulate_cycles`, energy from
-  :func:`repro.pim.energy.simulate_energy`, area from
+  :func:`repro.pim.energy.simulate_energy` (DRAM hits assumed at the
+  mapper-declared ``restream_bytes``), area from
   :func:`repro.pim.energy.system_area`.  This is the backend behind every
   paper figure and the legacy ``repro.pim.ppa`` entry points.
 * ``burst-sim`` — the burst-level trace simulator (:mod:`repro.sim`) with
-  the issue-policy knob (``serial`` / ``overlap``); cycles come from the
-  event-driven makespan, while energy/area still use the analytic models
-  (energy on *simulated* row activations is a ROADMAP follow-up).  The
-  ``detail`` dict carries the full :class:`repro.sim.report.SimReport`.
+  the issue-policy knob (``serial`` / ``overlap`` / ``row-aware``) and the
+  row-reuse knob; cycles come from the event-driven makespan and **energy
+  from the simulated** :class:`~repro.pim.events.EventCounts` — row
+  activations and row-buffer hits the engine actually observed, priced by
+  :func:`repro.pim.energy.energy_from_counts`.  The ``detail`` dict
+  carries the full :class:`repro.sim.report.SimReport`.
 
-Both backends report the same :class:`EvalResult` shape, so sweep drivers
-and normalized reporting are backend-agnostic.  Register more via
+Both backends report the same :class:`EvalResult` shape — including the
+:class:`~repro.pim.events.EventCounts` behind the energy number — so sweep
+drivers and normalized reporting are backend-agnostic.  Register more via
 ``BACKENDS.register`` (e.g. a future Ramulator2 bridge).
 """
 
@@ -25,7 +29,8 @@ from typing import Any, Mapping, Protocol
 
 from repro.core.commands import Trace, cross_bank_bytes
 from repro.pim.arch import PIMArch, config_label
-from repro.pim.energy import simulate_energy, system_area
+from repro.pim.energy import EnergyReport, simulate_energy, system_area
+from repro.pim.events import EventCounts, assumed_hit_bits, trace_events
 from repro.pim.timing import simulate_cycles
 from repro.experiment.registry import Registry
 
@@ -36,7 +41,9 @@ class EvalSpec:
 
     ``gbuf_bytes`` / ``lbuf_bytes`` of ``None`` resolve to the system's
     registered default design point.  ``policy`` is the burst-sim issue
-    policy (ignored by the analytic backend).
+    policy and ``row_reuse`` its lowering mode (both ignored by the
+    analytic backend; ``row_reuse=False`` restores the legacy
+    fresh-row-per-chunk addressing the fidelity contract is pinned to).
     """
 
     workload: str
@@ -45,6 +52,7 @@ class EvalSpec:
     lbuf_bytes: int | None = None
     backend: str = "analytic"
     policy: str = "serial"
+    row_reuse: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +65,13 @@ class EvalResult:
     energy_nj: float
     area_mm2: float
     cross_bank_bytes: int
+    # the counts behind energy_nj.  burst-sim: OBSERVED by the replay and
+    # priced exactly (energy_nj == energy_from_counts(events)).  analytic:
+    # predicted counts with the restream hit ASSUMPTION in dram_hit_bits
+    # (row_hits stays 0 — hits are burst-level events only a replay can
+    # observe); energy_nj itself comes from simulate_energy's per-command
+    # walk, which prices the same assumption.
+    events: EventCounts
     detail: Mapping[str, Any]       # backend-specific reports
 
     @property
@@ -78,10 +93,12 @@ class EvalResult:
 
 class EvalContext(Protocol):
     """Shared-work hooks a driver may offer backends (all optional):
-    memoized burst lowering (shared across issue policies) and memoized
-    policy-independent analytic cycle/energy reports."""
+    memoized burst lowering (shared across issue policies, keyed by
+    row-reuse mode) and memoized policy-independent analytic cycle/energy
+    reports."""
 
-    def lowered(self, trace: Trace, arch: PIMArch) -> Any: ...
+    def lowered(self, trace: Trace, arch: PIMArch,
+                row_reuse: bool = True) -> Any: ...
 
     def cycle_report(self, trace: Trace, arch: PIMArch) -> Any: ...
 
@@ -104,10 +121,19 @@ class EvalBackend(Protocol):
 
 def _common(spec: EvalSpec, trace: Trace, arch: PIMArch,
             cycles: int, detail: dict[str, Any],
-            ctx: EvalContext | None = None) -> EvalResult:
-    fn = getattr(ctx, "energy_report", None)
-    energy = fn(trace, arch) if fn is not None else simulate_energy(trace,
-                                                                    arch)
+            ctx: EvalContext | None = None,
+            energy: EnergyReport | None = None,
+            events: EventCounts | None = None) -> EvalResult:
+    if energy is None:
+        fn = getattr(ctx, "energy_report", None)
+        energy = fn(trace, arch) if fn is not None \
+            else simulate_energy(trace, arch)
+    if events is None:
+        # analytic default: predicted counts carrying the same restream
+        # hit assumption the energy number was priced with
+        events = dataclasses.replace(
+            trace_events(trace, arch),
+            dram_hit_bits=assumed_hit_bits(trace, arch))
     area = system_area(arch)
     detail = dict(detail, energy=energy, area=area)
     return EvalResult(spec=spec,
@@ -116,6 +142,7 @@ def _common(spec: EvalSpec, trace: Trace, arch: PIMArch,
                       energy_nj=energy.total_nj,
                       area_mm2=area.total_mm2,
                       cross_bank_bytes=cross_bank_bytes(trace),
+                      events=events,
                       detail=detail)
 
 
@@ -135,17 +162,27 @@ class BurstSimBackend:
     def evaluate(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
                  ctx: EvalContext | None = None) -> EvalResult:
         # local import: keeps the analytic path importable without repro.sim
+        from repro.pim.energy import energy_from_counts
+        from repro.sim.burst import lower_trace
         from repro.sim.engine import simulate
         from repro.sim.report import SimReport
 
-        lowered = ctx.lowered(trace, arch) if ctx is not None else None
+        lowered = ctx.lowered(trace, arch, spec.row_reuse) \
+            if ctx is not None \
+            else lower_trace(trace, arch, row_reuse=spec.row_reuse)
         result = simulate(trace, arch, spec.policy, lowered=lowered)
+        analytic = _cycle_report(trace, arch, ctx)
         report = SimReport(system=arch.name, policy=spec.policy,
                            result=result,
-                           analytic_total=_cycle_report(trace, arch,
-                                                        ctx).total)
+                           analytic_total=analytic.total,
+                           analytic_activations=analytic.row_activations,
+                           row_reuse=spec.row_reuse)
+        # energy from what the replay OBSERVED (activations, hits), not the
+        # analytic restream assumption
+        energy = energy_from_counts(result.events, arch)
         return _common(spec, trace, arch, result.makespan,
-                       {"sim": report}, ctx)
+                       {"sim": report}, ctx,
+                       energy=energy, events=result.events)
 
 
 BACKENDS: Registry[EvalBackend] = Registry("backend")

@@ -62,15 +62,14 @@ class Experiment:
         self._plans: dict[tuple[str, int, int], FusionPlan] = {}
         self._tilings: dict[tuple[str, int, int], dict] = {}
         self._traces: dict[tuple[str, str, int, int], Trace] = {}
-        # identity-keyed per-(trace, arch) derivations (lowered bursts,
-        # analytic cycle/energy reports): {key: (trace_ref, value)} — the
-        # stored strong ref both keeps the id() stable and lets the lookup
-        # verify it still names the same trace object
-        self._lowered: dict[tuple[int, str, int, int], tuple[Trace, Any]] = {}
-        self._cycle_reports: dict[tuple[int, str, int, int],
-                                  tuple[Trace, Any]] = {}
-        self._energy_reports: dict[tuple[int, str, int, int],
-                                   tuple[Trace, Any]] = {}
+        # identity-keyed per-(trace, arch[, extra]) derivations (lowered
+        # bursts keyed by row-reuse mode, analytic cycle/energy reports):
+        # {key: (trace_ref, value)} — the stored strong ref both keeps the
+        # id() stable and lets the lookup verify it still names the same
+        # trace object
+        self._lowered: dict[tuple, tuple[Trace, Any]] = {}
+        self._cycle_reports: dict[tuple, tuple[Trace, Any]] = {}
+        self._energy_reports: dict[tuple, tuple[Trace, Any]] = {}
         self._results: dict[EvalSpec, EvalResult] = {}
 
     # ------------------------------------------------------------------
@@ -129,8 +128,8 @@ class Experiment:
         return tr
 
     def _per_trace(self, cache: dict, trace: Trace, arch: PIMArch,
-                   build, stat: str) -> Any:
-        key = (id(trace), arch.name, arch.gbuf_bytes, arch.lbuf_bytes)
+                   build, stat: str, extra: Any = None) -> Any:
+        key = (id(trace), arch.name, arch.gbuf_bytes, arch.lbuf_bytes, extra)
         hit = cache.get(key)
         if hit is not None and hit[0] is trace:
             return hit[1]
@@ -139,12 +138,16 @@ class Experiment:
         cache[key] = (trace, value)
         return value
 
-    def lowered(self, trace: Trace, arch: PIMArch) -> Any:
-        """Burst-lowered trace, shared across issue policies
-        (:class:`repro.experiment.backends.EvalContext` hook)."""
+    def lowered(self, trace: Trace, arch: PIMArch,
+                row_reuse: bool = True) -> Any:
+        """Burst-lowered trace, shared across issue policies and keyed by
+        row-reuse mode (:class:`repro.experiment.backends.EvalContext`
+        hook)."""
         from repro.sim.burst import lower_trace
         return self._per_trace(self._lowered, trace, arch,
-                               lambda: lower_trace(trace, arch), "lowerings")
+                               lambda: lower_trace(trace, arch,
+                                                   row_reuse=row_reuse),
+                               "lowerings", extra=row_reuse)
 
     def cycle_report(self, trace: Trace, arch: PIMArch) -> Any:
         """Analytic cycle report, policy-independent — computed once per
@@ -196,30 +199,40 @@ class Experiment:
         return result
 
     def baseline(self, workload: str, backend: str = "analytic",
-                 policy: str = "serial") -> EvalResult:
+                 policy: str = "serial",
+                 row_reuse: bool = True) -> EvalResult:
         """The paper's 1.0: the baseline system at its own design point,
-        evaluated under the SAME backend/policy as the results it scales."""
+        evaluated under the SAME backend/policy/row-reuse mode as the
+        results it scales."""
         return self.run(EvalSpec(workload=workload,
                                  system=self.baseline_system,
-                                 backend=backend, policy=policy))
+                                 backend=backend, policy=policy,
+                                 row_reuse=row_reuse))
 
     def normalized(self, result: EvalResult) -> dict[str, float]:
         """Normalize one result to its workload's baseline (memoized — the
         baseline is evaluated once per workload, not once per point)."""
         return result.normalized(self.baseline(result.workload,
                                                backend=result.spec.backend,
-                                               policy=result.spec.policy))
+                                               policy=result.spec.policy,
+                                               row_reuse=result.spec.row_reuse))
 
     def sweep(self,
               workloads: str | Iterable[str] | None = None,
               systems: str | Iterable[str] | None = None,
               buffers: Sequence[tuple[int | None, int | None]] | None = None,
               backend: str = "analytic",
-              policy: str = "serial") -> list[EvalResult]:
+              policy: str = "serial",
+              row_reuse: bool = True,
+              csv_path: str | None = None) -> list[EvalResult]:
         """Evaluate the cross product workloads × systems × buffer points.
 
         ``None`` axes default to every registered workload / system / the
         per-system default buffer point.  Returns results in grid order.
+        ``csv_path`` additionally persists the results (with normalized
+        PPA columns) as a CSV artifact via
+        :func:`repro.experiment.artifacts.write_results_csv`, so figures
+        regenerate without re-running the sweep.
         """
         if workloads is None:
             workloads = self.workloads.names()
@@ -230,10 +243,14 @@ class Experiment:
         elif isinstance(systems, str):
             systems = (systems,)
         points = buffers if buffers is not None else ((None, None),)
-        return [self.run(EvalSpec(workload=w, system=s, gbuf_bytes=g,
-                                  lbuf_bytes=l, backend=backend,
-                                  policy=policy))
-                for w in workloads for s in systems for g, l in points]
+        results = [self.run(EvalSpec(workload=w, system=s, gbuf_bytes=g,
+                                     lbuf_bytes=l, backend=backend,
+                                     policy=policy, row_reuse=row_reuse))
+                   for w in workloads for s in systems for g, l in points]
+        if csv_path is not None:
+            from repro.experiment.artifacts import write_results_csv
+            write_results_csv(csv_path, results, experiment=self)
+        return results
 
 
 # ---------------------------------------------------------------------------

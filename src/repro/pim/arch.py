@@ -45,7 +45,14 @@ class PIMArch:
     gbcore_ops_per_cycle: int = 32        # channel-level GBcore is wider
     accum_regs: int = 8                   # output partial sums in flight / core
     row_bytes: int = 2 * 1024             # GDDR6 row (per bank)
+    rows_per_bank: int = 16 * 1024        # row geometry: rows a bank holds
     row_overhead_cycles: int = 24         # tRP+tRCD-ish per row activation
+    # extra precharge charged when a command RE-OPENS a row it already
+    # activated (row-buffer thrash on a wrapped multi-row restream).
+    # Fresh-row opens pay only row_overhead_cycles — the analytic model's
+    # per-chunk bill — so the serial/no-reuse fidelity contract holds for
+    # any setting of this knob.
+    row_precharge_cycles: int = 0
     bank_switch_cycles: int = 8           # GBUF path: re-target to next bank
     cmd_issue_cycles: int = 4             # controller issue per PIM CMD
 

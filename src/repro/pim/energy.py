@@ -15,6 +15,17 @@ Component library constants follow the paper's methodology (§V-1):
 
 Absolute values are model outputs, not silicon claims; every reported result
 is NORMALISED to the AiM-like G2K_L0 baseline exactly as the paper reports.
+
+Two DRAM-energy paths exist (see README "Where energy numbers come from"):
+
+* **analytic counts** — :func:`simulate_energy` walks the Command trace and
+  discounts the mapper-declared ``restream_bytes`` at the row-buffer-hit
+  rate (``PJ_PER_BIT_DRAM_HIT``): an *assumption* that every re-streamed
+  byte finds its row open.
+* **simulated counts** — :func:`energy_from_counts` consumes an
+  :class:`~repro.pim.events.EventCounts` whose ``dram_hit_bits`` the burst
+  simulator *observed* against per-bank open-row state, so the hit
+  discount reflects what the row buffers actually did.
 """
 
 from __future__ import annotations
@@ -24,6 +35,7 @@ import math
 
 from repro.core.commands import CMD, Command, Trace
 from repro.pim.arch import PIMArch
+from repro.pim.events import EventCounts
 
 # ---------------------------------------------------------------------------
 # Component library (22 nm)
@@ -123,6 +135,28 @@ def simulate_energy(trace: Trace, arch: PIMArch) -> EnergyReport:
     for c in trace:
         for k, v in command_energy_nj(c, arch).items():
             by_component[k] = by_component.get(k, 0.0) + v
+    return EnergyReport(total_nj=sum(by_component.values()),
+                        by_component=by_component)
+
+
+def energy_from_counts(ev: EventCounts, arch: PIMArch) -> EnergyReport:
+    """Energy from an :class:`~repro.pim.events.EventCounts` — the same
+    component library applied to explicit event totals instead of a Command
+    walk.  Feed it the burst simulator's *observed* counts and the
+    near-bank DRAM term prices actual row-buffer hits
+    (``PJ_PER_BIT_DRAM_HIT``) rather than the analytic restream assumption;
+    feed it :func:`repro.pim.events.trace_events` (predicted, zero hits)
+    and it is the no-hit upper bound on DRAM energy."""
+    out = {
+        "dram_near": _dram_pj(ev.dram_bits, ev.dram_hit_bits),
+        "bus": ev.bus_bits * PJ_PER_BIT_WIRE_MM * BUS_LENGTH_MM,
+        "gbuf": ev.gbuf_bits * sram_pj_per_bit(arch.gbuf_bytes),
+        "lbuf": ev.lbuf_bits * sram_pj_per_bit(arch.lbuf_bytes),
+        "pimcore_mac": ev.macs * PJ_PER_MAC_BF16,
+        "pimcore_alu": ev.pimcore_alu_ops * PJ_PER_ALU_OP,
+        "gbcore_alu": ev.gbcore_alu_ops * PJ_PER_ALU_OP,
+    }
+    by_component = {k: v / 1000.0 for k, v in out.items() if v}  # pJ → nJ
     return EnergyReport(total_nj=sum(by_component.values()),
                         by_component=by_component)
 

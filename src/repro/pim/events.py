@@ -1,0 +1,189 @@
+"""Shared event-count vocabulary for the timing/energy stack.
+
+:class:`EventCounts` is the single currency both evaluation paths speak:
+
+* the **analytic** path (:mod:`repro.pim.timing` / :mod:`repro.pim.energy`)
+  *predicts* counts from the aggregate ``Command`` walk — every row-sized
+  chunk is assumed to open a fresh DRAM row, so ``row_hits`` is always 0
+  and ``dram_hit_bits`` carries nothing;
+* the **burst simulator** (:mod:`repro.sim.engine`) *observes* counts from
+  replaying the lowered trace against per-bank open-row state — activations
+  drop and ``row_hits`` / ``dram_hit_bits`` rise wherever the lowering's
+  row reuse actually lands on an open row.
+
+:func:`repro.pim.energy.energy_from_counts` turns either flavour into an
+:class:`~repro.pim.energy.EnergyReport`, which is how the ``burst-sim``
+experiment backend charges energy for *simulated* (not analytic) row
+behaviour.
+
+This module also owns the row/split geometry helpers (``rows_crossed``,
+``row_chunks``, ``even_split``, ``core_banks``) so the analytic predictions
+and the burst lowering share one definition of how payloads decompose into
+row-sized chunks — :func:`predicted_activations` is exactly the number of
+row-carrying bursts :func:`repro.sim.burst.lower_command` emits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.commands import CMD, Command, Trace
+from repro.pim.arch import PIMArch
+
+_SEQ = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)
+_PAR = (CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK)
+
+
+# ---------------------------------------------------------------------------
+# row / split geometry (shared with repro.sim.burst)
+# ---------------------------------------------------------------------------
+
+def rows_crossed(nbytes: int, arch: PIMArch) -> int:
+    """DRAM rows a payload crosses."""
+    return math.ceil(nbytes / arch.row_bytes) if nbytes > 0 else 0
+
+
+def row_chunks(nbytes: int, row_bytes: int) -> list[int]:
+    """Split a payload into full row-sized chunks plus a partial tail."""
+    full, tail = divmod(nbytes, row_bytes)
+    return [row_bytes] * full + ([tail] if tail else [])
+
+
+def even_split(nbytes: int, parts: int) -> list[int]:
+    """Split bytes across ``parts`` with the remainder spread one-by-one
+    (max share == ceil(nbytes / parts), matching the analytic model).
+    Monotone per index in ``nbytes``, so a sub-payload's shares never
+    exceed its parent's."""
+    base, rem = divmod(nbytes, parts)
+    return [base + (1 if i < rem else 0) for i in range(parts)]
+
+
+def core_banks(core: int, arch: PIMArch, c: Command) -> list[int]:
+    """Banks PIMcore ``core`` streams through for command ``c``: the
+    explicit placement restricted to the core's bank range when present
+    (core *c* owns banks [c·bpc, (c+1)·bpc)), else the full range."""
+    bpc = arch.banks_per_pimcore
+    owned = range(core * bpc, (core + 1) * bpc)
+    if c.banks:
+        placed = [b for b in c.banks if b in owned]
+        if placed:
+            return placed
+    return list(owned)
+
+
+# ---------------------------------------------------------------------------
+# EventCounts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EventCounts:
+    """Hardware events behind one trace evaluation (predicted or observed).
+
+    ``dram_bits`` is the total near-bank DRAM traffic; ``dram_hit_bits`` is
+    the subset served from an already-open row (column access only —
+    charged at ``PJ_PER_BIT_DRAM_HIT``).  ``row_activations`` counts
+    ACTIVATEs (including conflicts, which re-activate); ``row_hits`` counts
+    bursts that found their row open.
+    """
+
+    row_activations: int = 0
+    row_hits: int = 0
+    dram_bits: int = 0
+    dram_hit_bits: int = 0
+    bus_bits: int = 0           # internal bank↔GBUF bus bit-traversals
+    gbuf_bits: int = 0          # GBUF SRAM accesses
+    lbuf_bits: int = 0          # LBUF SRAM accesses (summed over cores)
+    macs: int = 0
+    pimcore_alu_ops: int = 0
+    gbcore_alu_ops: int = 0
+
+    def __add__(self, other: "EventCounts") -> "EventCounts":
+        return EventCounts(*(getattr(self, f.name) + getattr(other, f.name)
+                             for f in dataclasses.fields(self)))
+
+    @property
+    def hit_rate(self) -> float:
+        """Observed row-buffer hit rate over all row-carrying bursts."""
+        total = self.row_activations + self.row_hits
+        return self.row_hits / total if total else 0.0
+
+
+def predicted_activations(c: Command, arch: PIMArch) -> int:
+    """Row activations the analytic model charges: one per row-sized chunk,
+    decomposed exactly as the burst lowering decomposes the payload (so
+    under ``row_reuse=False`` the simulator observes this same number)."""
+    if c.kind in _SEQ:
+        return rows_crossed(c.bytes_total, arch)
+    if c.kind in _PAR:
+        if c.bytes_total == 0:
+            return 0
+        acts = 0
+        for core, core_bytes in enumerate(even_split(c.bytes_total,
+                                                     max(c.concurrent_cores,
+                                                         1))):
+            banks = core_banks(core, arch, c)
+            acts += sum(len(row_chunks(b, arch.row_bytes))
+                        for b in even_split(core_bytes, len(banks)))
+        return acts
+    if c.kind is CMD.PIMCORE_CMP:
+        return max(c.concurrent_cores, 1) * rows_crossed(c.bank_stream_bytes,
+                                                         arch)
+    return 0
+
+
+def command_events(c: Command, arch: PIMArch) -> EventCounts:
+    """Predicted event counts for one command (row_hits is always 0: the
+    analytic walk has no open-row state — ``Command.restream_bytes`` only
+    discounts *energy* inside :func:`repro.pim.energy.command_energy_nj`)."""
+    bits = c.bytes_total * 8
+    cores = max(c.concurrent_cores, 1)
+    ev = EventCounts(row_activations=predicted_activations(c, arch))
+    if c.kind in _SEQ:
+        return dataclasses.replace(ev, dram_bits=bits, bus_bits=bits,
+                                   gbuf_bits=bits)
+    if c.kind in _PAR:
+        return dataclasses.replace(
+            ev, dram_bits=bits,
+            lbuf_bits=bits if arch.lbuf_bytes > 0 else 0)
+    if c.kind is CMD.PIMCORE_CMP:
+        gb_bits = c.gbuf_stream_bytes * 8
+        return dataclasses.replace(
+            ev,
+            dram_bits=c.bank_stream_bytes * 8 * cores,
+            bus_bits=gb_bits,              # GBUF broadcast over the bus
+            gbuf_bits=gb_bits,
+            lbuf_bits=(c.lbuf_stream_bytes * 8 * cores
+                       if arch.lbuf_bytes > 0 else 0),
+            macs=c.macs, pimcore_alu_ops=c.alu_ops)
+    if c.kind is CMD.GBCORE_CMP:
+        return dataclasses.replace(ev, gbuf_bits=c.gbuf_stream_bytes * 8,
+                                   gbcore_alu_ops=c.alu_ops)
+    raise ValueError(f"unknown command kind {c.kind}")  # pragma: no cover
+
+
+def trace_events(trace: Trace, arch: PIMArch) -> EventCounts:
+    """Predicted counts for a whole trace (the analytic side of the
+    activation-count cross-check in :mod:`repro.sim.report`).  Zero
+    ``dram_hit_bits``: price these for the no-hit upper bound on DRAM
+    energy."""
+    total = EventCounts()
+    for c in trace:
+        total = total + command_events(c, arch)
+    return total
+
+
+def assumed_hit_bits(trace: Trace, arch: PIMArch) -> int:
+    """The analytic energy model's row-hit ASSUMPTION, as bits: every
+    ``restream_bytes`` byte is taken to find its row open (the discount
+    :func:`repro.pim.energy.simulate_energy` applies per command).  Attach
+    to predicted counts to describe the analytic backend's energy."""
+    bits = 0
+    for c in trace:
+        if c.kind in _SEQ or c.kind in _PAR:
+            bits += min(c.restream_bytes, c.bytes_total) * 8
+        elif c.kind is CMD.PIMCORE_CMP:
+            # restream is per-core in CMP context, like bank_stream_bytes
+            bits += min(c.restream_bytes, c.bank_stream_bytes) * 8 \
+                * max(c.concurrent_cores, 1)
+    return bits

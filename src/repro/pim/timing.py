@@ -29,11 +29,13 @@ import math
 
 from repro.core.commands import CMD, Command, Trace
 from repro.pim.arch import PIMArch
+from repro.pim.events import predicted_activations
+from repro.pim.events import rows_crossed  # canonical row geometry (shared
+#                                            with repro.sim.burst); re-
+#                                            exported for legacy importers
 
-
-def rows_crossed(nbytes: int, arch: PIMArch) -> int:
-    """DRAM rows a payload crosses (shared with ``repro.sim.burst``)."""
-    return math.ceil(nbytes / arch.row_bytes) if nbytes > 0 else 0
+__all__ = ["rows_crossed", "banks_touched", "command_cycles", "CycleReport",
+           "simulate_cycles"]
 
 
 def _row_overhead(bytes_total: int, arch: PIMArch) -> int:
@@ -83,6 +85,10 @@ def command_cycles(c: Command, arch: PIMArch) -> int:
 class CycleReport:
     total: int
     by_kind: dict[str, int]
+    # predicted row activations (one per row-sized chunk — the analytic
+    # model has no open-row state, so this is the row_reuse=False count the
+    # burst simulator must reproduce exactly)
+    row_activations: int = 0
 
     def fraction(self, kind: CMD) -> float:
         return self.by_kind.get(kind.value, 0) / max(self.total, 1)
@@ -91,9 +97,11 @@ class CycleReport:
 def simulate_cycles(trace: Trace, arch: PIMArch) -> CycleReport:
     by_kind: dict[str, int] = {}
     total = 0
+    acts = 0
     for c in trace:
         c.validate()
         cyc = command_cycles(c, arch)
         by_kind[c.kind.value] = by_kind.get(c.kind.value, 0) + cyc
         total += cyc
-    return CycleReport(total=total, by_kind=by_kind)
+        acts += predicted_activations(c, arch)
+    return CycleReport(total=total, by_kind=by_kind, row_activations=acts)

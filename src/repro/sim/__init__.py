@@ -13,22 +13,30 @@ Modules:
 * :mod:`repro.sim.engine`    — event loop + per-bank / per-core / bus
   resource timelines with per-row activation charges.
 * :mod:`repro.sim.scheduler` — issue policies: ``serial`` (the paper's
-  one-CMD-at-a-time controller) and ``overlap`` (weight prefetch behind
-  PIMcore compute).
+  one-CMD-at-a-time controller), ``overlap`` (weight prefetch behind
+  PIMcore compute) and ``row-aware`` (overlap plus per-bank same-row
+  burst batching).
 * :mod:`repro.sim.report`    — per-bank utilization, bus-occupancy
-  breakdown, cross-check against the analytic
-  :func:`repro.pim.timing.simulate_cycles` model.
+  breakdown, row activation/hit accounting, cross-check against the
+  analytic :func:`repro.pim.timing.simulate_cycles` model.
+
+The lowering is row-aware by default (restream payloads wrap onto their
+unique row footprint, so the engine's per-bank open-row tracker resolves
+ACTIVATE / HIT / CONFLICT per burst); pass ``row_reuse=False`` for the
+legacy fresh-row-per-chunk addressing the analytic cross-check contract
+is pinned to.
 """
 
-from repro.sim.burst import BurstOp, Resource, check_conservation, lower_command, lower_trace
+from repro.sim.burst import (BurstOp, Resource, check_conservation,
+                             check_row_geometry, lower_command, lower_trace)
 from repro.sim.engine import SimResult, simulate
 from repro.sim.report import (SimReport, assert_fidelity, cross_check,
                               make_report, policy_reports)
-from repro.sim.scheduler import POLICIES, command_deps
+from repro.sim.scheduler import POLICIES, batch_same_row, command_deps
 
 __all__ = [
     "BurstOp", "Resource", "lower_command", "lower_trace",
-    "check_conservation", "SimResult", "simulate", "POLICIES",
-    "command_deps", "SimReport", "assert_fidelity", "cross_check",
-    "make_report", "policy_reports",
+    "check_conservation", "check_row_geometry", "SimResult", "simulate",
+    "POLICIES", "batch_same_row", "command_deps", "SimReport",
+    "assert_fidelity", "cross_check", "make_report", "policy_reports",
 ]

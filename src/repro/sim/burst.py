@@ -20,14 +20,26 @@ see the traffic:
 * ``GBCORE_CMP`` — a single zero-byte op on the GBcore (GBUF-resident
   operands, SRAM speed: only issue overhead is visible).
 
-Every chunk opens a fresh DRAM row (chunks are row-sized by construction),
-so row ids are unique per (command, stream) — the engine charges one
-activation per chunk, exactly like the analytic model.
+**Row addressing.**  Row ids are namespaced per command (no two commands
+share a row id), and within a command they map chunks onto the payload's
+*unique* data footprint: a command whose ``restream_bytes`` re-reads data it
+already walked wraps back onto the same ``(bank, row)`` pairs instead of
+minting fresh rows per chunk.  The engine's per-bank open-row tracker then
+resolves each burst to ACTIVATE / HIT / CONFLICT — a re-stream whose
+per-bank footprint fits one row becomes a stream of row-buffer HITs, the
+central energy lever of commodity-DRAM PIM.  Pass ``row_reuse=False`` to
+restore the legacy one-fresh-row-per-chunk lowering, under which the engine
+charges exactly one activation per chunk and the ``serial`` policy matches
+the analytic model to the cycle (the fidelity contract).
 
 Byte conservation is an invariant of the lowering, checked by
 :func:`check_conservation`: data-movement commands lower to bursts summing
 to ``bytes_total``; compute commands to ``bank_stream_bytes ×
 concurrent_cores`` (the operand traffic actually pulled out of DRAM).
+:func:`check_row_geometry` additionally verifies every chunk fits a DRAM
+row, no bank is assigned more rows than it has, and row reuse never folds
+*unique* data onto shared rows (first-visit bytes cover the non-restream
+footprint).
 """
 
 from __future__ import annotations
@@ -38,10 +50,17 @@ import math
 
 from repro.core.commands import CMD, Command, Trace
 from repro.pim.arch import PIMArch
+from repro.pim.events import core_banks, even_split, row_chunks
 from repro.pim.timing import banks_touched
 
 _SEQ = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)
 _PAR = (CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK)
+
+# Per-command row-id namespace: command i's rows live in
+# [i * _ROW_SPAN, (i+1) * _ROW_SPAN), so row state never leaks between
+# commands (cross-command reuse is future work — it would need a shared
+# physical address map, not per-command footprints).
+_ROW_SPAN = 1 << 24
 
 
 class Resource(enum.Enum):
@@ -80,86 +99,91 @@ class BurstOp:
         return math.ceil(self.nbytes / bw)
 
 
-def _row_chunks(nbytes: int, row_bytes: int) -> list[int]:
-    """Split a payload into full row-sized chunks plus a partial tail."""
-    full, tail = divmod(nbytes, row_bytes)
-    return [row_bytes] * full + ([tail] if tail else [])
+def _footprint_rows(unique_bytes: int, row_bytes: int) -> int:
+    """Rows the unique (non-restream) share of a stream occupies — the
+    wrap modulus for row reuse.  At least 1: a pure re-stream
+    (``restream == payload``) re-walks a single already-resident row."""
+    return max(1, math.ceil(unique_bytes / row_bytes)) \
+        if unique_bytes > 0 else 1
 
 
-def _even_split(nbytes: int, parts: int) -> list[int]:
-    """Split bytes across ``parts`` with the remainder spread one-by-one
-    (max share == ceil(nbytes / parts), matching the analytic model)."""
-    base, rem = divmod(nbytes, parts)
-    return [base + (1 if i < rem else 0) for i in range(parts)]
-
-
-def _core_banks(core: int, arch: PIMArch, c: Command) -> list[int]:
-    """Banks PIMcore ``core`` streams through for command ``c``: the
-    explicit placement restricted to the core's bank range when present
-    (core *c* owns banks [c·bpc, (c+1)·bpc)), else the full range."""
-    bpc = arch.banks_per_pimcore
-    owned = range(core * bpc, (core + 1) * bpc)
-    if c.banks:
-        placed = [b for b in c.banks if b in owned]
-        if placed:
-            return placed
-    return list(owned)
-
-
-def _lower_sequential(idx: int, c: Command, arch: PIMArch) -> list[BurstOp]:
-    """GBUF-path walk: row chunks round-robin over the placement banks."""
+def _lower_sequential(idx: int, c: Command, arch: PIMArch,
+                      row_reuse: bool) -> list[BurstOp]:
+    """GBUF-path walk: row chunks round-robin over the placement banks;
+    with ``row_reuse`` the restream share wraps onto the unique footprint's
+    (bank, row) pairs."""
     banks = list(c.banks) if c.banks else list(range(banks_touched(c, arch)))
-    chunks = _row_chunks(c.bytes_total, arch.row_bytes)
+    chunks = row_chunks(c.bytes_total, arch.row_bytes)
+    fr = _footprint_rows(c.bytes_total - c.restream_bytes, arch.row_bytes)
+    base = idx * _ROW_SPAN
     ops: list[BurstOp] = []
     visited: set[int] = set()
-    for row, chunk in enumerate(chunks):
-        bank = banks[row % len(banks)]
+    for i, chunk in enumerate(chunks):
+        lr = i % fr if row_reuse else i
+        bank = banks[lr % len(banks)]
         switch = arch.bank_switch_cycles if bank not in visited else 0
         visited.add(bank)
-        ops.append(BurstOp(idx, c.kind, Resource.BUS, 0, bank, row, chunk,
-                           switch_cycles=switch))
+        ops.append(BurstOp(idx, c.kind, Resource.BUS, 0, bank, base + lr,
+                           chunk, switch_cycles=switch))
     return ops
 
 
-def _lower_parallel(idx: int, c: Command, arch: PIMArch) -> list[BurstOp]:
+def _lower_parallel(idx: int, c: Command, arch: PIMArch,
+                    row_reuse: bool) -> list[BurstOp]:
     """Near-bank path: even per-core split, then even per-bank split; every
-    bank streams its chunks through its own port concurrently."""
+    bank streams its chunks through its own port concurrently.  The
+    restream share splits the same way and wraps per-bank."""
     cores = max(c.concurrent_cores, 1)
+    base = idx * _ROW_SPAN
     ops: list[BurstOp] = []
-    for core, core_bytes in enumerate(_even_split(c.bytes_total, cores)):
-        banks = _core_banks(core, arch, c)
-        for lane, bank_bytes in enumerate(_even_split(core_bytes, len(banks))):
+    core_restream = even_split(c.restream_bytes, cores)
+    for core, core_bytes in enumerate(even_split(c.bytes_total, cores)):
+        banks = core_banks(core, arch, c)
+        lane_restream = even_split(core_restream[core], len(banks))
+        for lane, bank_bytes in enumerate(even_split(core_bytes, len(banks))):
             bank = banks[lane]
-            for row, chunk in enumerate(_row_chunks(bank_bytes,
-                                                    arch.row_bytes)):
+            fr = _footprint_rows(bank_bytes - lane_restream[lane],
+                                 arch.row_bytes)
+            for i, chunk in enumerate(row_chunks(bank_bytes,
+                                                 arch.row_bytes)):
+                lr = i % fr if row_reuse else i
                 ops.append(BurstOp(idx, c.kind, Resource.BANK_PORT, bank,
-                                   bank, row, chunk))
+                                   bank, base + lr, chunk))
     return ops
 
 
-def _lower_cmp(idx: int, c: Command, arch: PIMArch) -> list[BurstOp]:
+def _lower_cmp(idx: int, c: Command, arch: PIMArch,
+               row_reuse: bool) -> list[BurstOp]:
     """Operand streaming: each active core pulls ``bank_stream_bytes`` out
-    of its banks at aggregate port bandwidth; rows open sequentially (the
-    analytic model bills one activation per row of the per-core stream)."""
+    of its banks at aggregate port bandwidth; rows open sequentially, and
+    the restream share (``restream_bytes`` is per-core in CMP context)
+    wraps onto the unique weight footprint's rows."""
     cores = max(c.concurrent_cores, 1)
+    fr = _footprint_rows(c.bank_stream_bytes - c.restream_bytes,
+                         arch.row_bytes)
+    base = idx * _ROW_SPAN
     ops: list[BurstOp] = []
     for core in range(cores):
-        banks = _core_banks(core, arch, c)
-        for row, chunk in enumerate(_row_chunks(c.bank_stream_bytes,
-                                                arch.row_bytes)):
+        banks = core_banks(core, arch, c)
+        for i, chunk in enumerate(row_chunks(c.bank_stream_bytes,
+                                             arch.row_bytes)):
+            lr = i % fr if row_reuse else i
             ops.append(BurstOp(idx, c.kind, Resource.CORE_PORT, core,
-                               banks[row % len(banks)], row, chunk))
+                               banks[lr % len(banks)], base + lr, chunk))
     return ops
 
 
-def lower_command(idx: int, c: Command, arch: PIMArch) -> list[BurstOp]:
+def lower_command(idx: int, c: Command, arch: PIMArch,
+                  row_reuse: bool = True) -> list[BurstOp]:
     c.validate()
     if c.kind in _SEQ:
-        return _lower_sequential(idx, c, arch) if c.bytes_total else []
+        return _lower_sequential(idx, c, arch, row_reuse) \
+            if c.bytes_total else []
     if c.kind in _PAR:
-        return _lower_parallel(idx, c, arch) if c.bytes_total else []
+        return _lower_parallel(idx, c, arch, row_reuse) \
+            if c.bytes_total else []
     if c.kind is CMD.PIMCORE_CMP:
-        return _lower_cmp(idx, c, arch)
+        return _lower_cmp(idx, c, arch, row_reuse)
     if c.kind is CMD.GBCORE_CMP:
         return [BurstOp(idx, c.kind, Resource.GBCORE, 0, -1, -1, 0)]
     raise ValueError(f"unknown command kind {c.kind}")  # pragma: no cover
@@ -180,13 +204,54 @@ def check_conservation(c: Command, ops: list[BurstOp]) -> None:
             f"command describes {want} B")
 
 
-def lower_trace(trace: Trace, arch: PIMArch,
-                check: bool = True) -> list[list[BurstOp]]:
-    """Lower a full trace; ``check`` verifies byte conservation per command."""
+def check_row_geometry(c: Command, ops: list[BurstOp],
+                       arch: PIMArch) -> None:
+    """Assert the row addressing is physically coherent: chunks fit a DRAM
+    row, no bank is assigned more distinct rows than it has, and row reuse
+    only folds the restream share — the first visit to each (bank, row)
+    must cover the command's unique data footprint."""
+    rows_by_bank: dict[int, set[int]] = {}
+    first_visit_bytes = 0
+    for op in ops:
+        if op.nbytes > arch.row_bytes:
+            raise AssertionError(
+                f"{c.kind.value} '{c.layer}': {op.nbytes} B chunk exceeds "
+                f"the {arch.row_bytes} B DRAM row")
+        if op.row < 0:
+            continue
+        rows = rows_by_bank.setdefault(op.bank, set())
+        if op.row not in rows:
+            rows.add(op.row)
+            first_visit_bytes += op.nbytes
+    for bank, rows in rows_by_bank.items():
+        if len(rows) > arch.rows_per_bank:
+            raise AssertionError(
+                f"{c.kind.value} '{c.layer}': {len(rows)} rows assigned to "
+                f"bank {bank} > rows_per_bank={arch.rows_per_bank}")
+    if c.kind is CMD.PIMCORE_CMP:
+        unique = (c.bank_stream_bytes - c.restream_bytes) \
+            * max(c.concurrent_cores, 1)
+    elif c.kind in _SEQ or c.kind in _PAR:
+        unique = c.bytes_total - c.restream_bytes
+    else:
+        unique = 0
+    if first_visit_bytes < unique:
+        raise AssertionError(
+            f"{c.kind.value} '{c.layer}': first-visit bytes "
+            f"{first_visit_bytes} < unique footprint {unique} — row reuse "
+            f"folded non-restream data onto shared rows")
+
+
+def lower_trace(trace: Trace, arch: PIMArch, check: bool = True,
+                row_reuse: bool = True) -> list[list[BurstOp]]:
+    """Lower a full trace; ``check`` verifies byte conservation and row
+    geometry per command.  ``row_reuse=False`` mints a fresh row per chunk
+    (the legacy lowering the analytic cross-check contract is pinned to)."""
     lowered = []
     for idx, c in enumerate(trace):
-        ops = lower_command(idx, c, arch)
+        ops = lower_command(idx, c, arch, row_reuse=row_reuse)
         if check:
             check_conservation(c, ops)
+            check_row_geometry(c, ops, arch)
         lowered.append(ops)
     return lowered

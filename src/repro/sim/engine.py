@@ -1,4 +1,5 @@
-"""Event-driven burst replay with explicit resource timelines.
+"""Event-driven burst replay with explicit resource timelines and per-bank
+open-row state.
 
 Resources (one earliest-free timeline each):
 
@@ -9,19 +10,42 @@ Resources (one earliest-free timeline each):
   (compute occupancy: MAC issue hides behind streaming);
 * ``(GBCORE, 0)``     — the channel-level GBcore.
 
-Near-bank ports and the internal-bus tap are separate ports into a bank
+Near-bank ports and the internal-bus tap are separate taps into a bank
 (the GDDR6-AiM arrangement), so an overlap-scheduled weight prefetch on the
-bus does not steal a streaming core's bank bandwidth.  Every row-carrying
-burst pays ``row_overhead_cycles``: the lowering emits row-sized chunks
-with fresh row ids, so each chunk IS an activation — the same charge the
-analytic model makes.  Row-buffer HIT modelling (re-walking an open row
-without re-activating) would need the lowering to reuse row ids and is
-future work (ROADMAP).
+bus does not steal a streaming core's bank bandwidth — but both taps read
+through the bank's single ROW BUFFER, so one open-row tracker per bank
+serves both.  Each row-carrying burst resolves against that tracker:
+
+* **HIT**      — the burst's row is already open: column access only, no
+  activation charge (this is what the lowering's row reuse buys).
+* **ACTIVATE** — a row this command has not opened before: pay
+  ``row_overhead_cycles``, exactly the analytic model's per-chunk bill
+  (a streaming walk closes each row behind itself, so fresh-row opens
+  carry no extra precharge).
+* **CONFLICT** — a re-activation of a row this same command already
+  opened (row-buffer thrash: the wrap of a multi-row restream): pay
+  ``row_overhead_cycles`` plus ``row_precharge_cycles``.  Under
+  ``row_reuse=False`` every row id is unique, so conflicts cannot occur
+  and the fidelity contract holds for ANY precharge setting; conflicts
+  are exactly the activations ``row-aware`` batching can still remove.
+
+Row state is updated in burst-replay order.  Under ``serial`` that IS time
+order; under ``overlap``/``row-aware`` concurrent commands interleave in
+time while the tracker advances in program order — an approximation on
+par with the analytic model's contention-free commands.
+
+The result carries an observed :class:`repro.pim.events.EventCounts`
+(activations, hits, DRAM/bus/buffer bit totals, MAC/ALU ops) that
+:func:`repro.pim.energy.energy_from_counts` prices directly — the
+``burst-sim`` experiment backend's energy comes from these observed
+counts, not the analytic restream assumption.
 
 A command issues once its scheduler dependencies retire, pays the
 controller's ``cmd_issue_cycles``, then its bursts queue on their resource
-timelines in lowering order.  Zero-byte transfers retire instantly (the
-analytic model also bills them nothing).
+timelines in lowering order (the ``row-aware`` policy first batches
+same-row bursts per bank — :func:`repro.sim.scheduler.batch_same_row`).
+Zero-byte transfers retire instantly (the analytic model also bills them
+nothing).
 """
 
 from __future__ import annotations
@@ -30,8 +54,9 @@ import dataclasses
 
 from repro.core.commands import CMD, Trace
 from repro.pim.arch import PIMArch
+from repro.pim.events import EventCounts, trace_events
 from repro.sim.burst import BurstOp, Resource, lower_trace
-from repro.sim.scheduler import command_deps
+from repro.sim.scheduler import BATCHING_POLICIES, batch_same_row, command_deps
 
 _TRANSFER = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK,
              CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK)
@@ -43,38 +68,66 @@ class SimResult:
     makespan: int                       # total memory-system cycles
     cmd_start: list[int]
     cmd_finish: list[int]
-    bank_busy: dict[int, int]           # traffic cycles attributed per bank
-    #                                     (summed over bus tap AND near-bank
-    #                                     port — not one physical port)
+    bank_bus_busy: dict[int, int]       # per-bank cycles on the bus tap
+    bank_port_busy: dict[int, int]      # per-bank cycles on the near-bank port
     core_busy: dict[int, int]           # streaming occupancy per PIMcore
     bus_busy: dict[str, int]            # {"xfer", "switch", "row"} cycles
-    row_activations: int
+    row_conflicts: int                  # same-command row re-opens (thrash)
+    bank_rows: dict[int, dict[str, int]]  # per-bank {"act","hit","conflict"}
     busy_by_kind: dict[str, int]        # burst cycles per command kind
+    events: EventCounts                 # observed event counts (energy input)
+
+    # the activation/hit totals live in ``events`` (the energy input) —
+    # these accessors are views, never a second copy to keep in sync
+    @property
+    def row_activations(self) -> int:
+        return self.events.row_activations
+
+    @property
+    def row_hits(self) -> int:
+        return self.events.row_hits
+
+    @property
+    def hit_rate(self) -> float:
+        return self.events.hit_rate
 
     def bank_utilization(self) -> dict[int, float]:
-        """Per-bank traffic cycles / makespan.  A bank has TWO ports (bus
-        tap + near-bank), so under ``overlap`` this can exceed 1."""
-        return {b: busy / max(self.makespan, 1)
-                for b, busy in sorted(self.bank_busy.items())}
+        """Per-bank busiest-port fraction of makespan.  Each bank has TWO
+        taps (bus + near-bank port) tracked separately; every tap is a
+        serialized timeline, so each fraction is a true occupancy ≤ 1."""
+        banks = set(self.bank_bus_busy) | set(self.bank_port_busy)
+        return {b: max(self.bank_bus_busy.get(b, 0),
+                       self.bank_port_busy.get(b, 0)) / max(self.makespan, 1)
+                for b in sorted(banks)}
 
     def bus_occupancy(self) -> float:
         return sum(self.bus_busy.values()) / max(self.makespan, 1)
 
 
 def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
-             lowered: list[list[BurstOp]] | None = None) -> SimResult:
-    if lowered is None:
-        lowered = lower_trace(trace, arch)
+             lowered: list[list[BurstOp]] | None = None,
+             row_reuse: bool = True) -> SimResult:
+    """Replay a trace.  ``row_reuse`` selects the lowering's row addressing
+    when ``lowered`` is not supplied (callers passing a pre-lowered trace
+    have already made that choice)."""
     deps = command_deps(trace, policy)
+    if lowered is None:
+        lowered = lower_trace(trace, arch, row_reuse=row_reuse)
+    if policy in BATCHING_POLICIES:
+        lowered = [batch_same_row(ops) for ops in lowered]
 
     free: dict[tuple[Resource, int], int] = {}
     cmd_start = [0] * len(trace)
     cmd_finish = [0] * len(trace)
-    bank_busy: dict[int, int] = {}
+    bank_bus_busy: dict[int, int] = {}
+    bank_port_busy: dict[int, int] = {}
     core_busy: dict[int, int] = {}
     bus_busy = {"xfer": 0, "switch": 0, "row": 0}
     busy_by_kind: dict[str, int] = {}
-    activations = 0
+    open_row: dict[int, int] = {}       # bank → currently open row id
+    bank_rows: dict[int, dict[str, int]] = {}
+    activations = hits = conflicts = 0
+    hit_bits = 0
 
     for i, (c, ops) in enumerate(zip(trace, lowered)):
         ready = max((cmd_finish[j] for j in deps[i]), default=0)
@@ -88,37 +141,68 @@ def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
         t0 = ready + arch.cmd_issue_cycles
         cmd_start[i] = t0
         end = t0
+        opened: dict[int, set[int]] = {}    # rows THIS command has opened
         for op in ops:
             key = (op.resource, op.unit)
             start = max(t0, free.get(key, 0))
             dur = op.transfer_cycles(arch) + op.switch_cycles
             row_cyc = 0
             if op.row >= 0 and op.nbytes > 0:
-                row_cyc = arch.row_overhead_cycles
-                activations += 1
+                events = bank_rows.setdefault(
+                    op.bank, {"act": 0, "hit": 0, "conflict": 0})
+                if open_row.get(op.bank) == op.row:
+                    hits += 1
+                    hit_bits += op.nbytes * 8
+                    events["hit"] += 1
+                else:
+                    row_cyc = arch.row_overhead_cycles
+                    activations += 1
+                    seen = opened.setdefault(op.bank, set())
+                    if op.row in seen:      # re-open: row-buffer thrash
+                        conflicts += 1
+                        row_cyc += arch.row_precharge_cycles
+                        events["conflict"] += 1
+                    else:
+                        seen.add(op.row)
+                        events["act"] += 1
+                    open_row[op.bank] = op.row
             dur += row_cyc
             finish = start + dur
             free[key] = finish
             end = max(end, finish)
             busy_by_kind[c.kind.value] = busy_by_kind.get(c.kind.value, 0) + dur
-            if op.bank >= 0:
-                bank_busy[op.bank] = bank_busy.get(op.bank, 0) + dur
-            if op.resource is Resource.CORE_PORT:
-                core_busy[op.unit] = core_busy.get(op.unit, 0) + dur
-            elif op.resource is Resource.BUS:
+            if op.resource is Resource.BUS:
                 bus_busy["xfer"] += op.transfer_cycles(arch)
                 bus_busy["switch"] += op.switch_cycles
                 bus_busy["row"] += row_cyc
+                if op.bank >= 0:
+                    bank_bus_busy[op.bank] = \
+                        bank_bus_busy.get(op.bank, 0) + dur
+            elif op.bank >= 0:
+                bank_port_busy[op.bank] = bank_port_busy.get(op.bank, 0) + dur
+            if op.resource is Resource.CORE_PORT:
+                core_busy[op.unit] = core_busy.get(op.unit, 0) + dur
         cmd_finish[i] = end
+
+    # observed counts = trace-level compute/buffer totals (identical to the
+    # analytic prediction — bursts conserve bytes) with the row behaviour
+    # the replay actually saw
+    events = dataclasses.replace(trace_events(trace, arch),
+                                 row_activations=activations,
+                                 row_hits=hits,
+                                 dram_hit_bits=hit_bits)
 
     return SimResult(
         policy=policy,
         makespan=max(cmd_finish, default=0),
         cmd_start=cmd_start,
         cmd_finish=cmd_finish,
-        bank_busy=bank_busy,
+        bank_bus_busy=bank_bus_busy,
+        bank_port_busy=bank_port_busy,
         core_busy=core_busy,
         bus_busy=bus_busy,
-        row_activations=activations,
+        row_conflicts=conflicts,
+        bank_rows=bank_rows,
         busy_by_kind=busy_by_kind,
+        events=events,
     )

@@ -1,13 +1,18 @@
-"""Simulation reports: per-bank utilization, bus-occupancy breakdown, and
-the fidelity cross-check against the analytic cycle model.
+"""Simulation reports: per-bank utilization, bus-occupancy breakdown, row
+activation/hit accounting, and the fidelity cross-check against the
+analytic cycle model.
 
 The contract (documented in README / ROADMAP): under the ``serial`` policy
-the burst simulator and :func:`repro.pim.timing.simulate_cycles` describe
-the same machine — one CMD in flight, every row activation billed — so
-their totals must agree within rounding (±5 % is the enforced band; the
-residual comes from per-chunk ceiling effects on partial tail bursts).
-The ``overlap`` policy then measures what the analytic model cannot: how
-much of the sequential GBUF path hides behind PIMcore compute.
+with row reuse DISABLED the burst simulator and
+:func:`repro.pim.timing.simulate_cycles` describe the same machine — one
+CMD in flight, every row-sized chunk billed one activation — so their
+totals must agree within rounding (±5 % is the enforced band; the residual
+comes from per-chunk ceiling effects on partial tail bursts), and the
+observed activation count must equal the analytic prediction exactly.
+The row-reuse lowering plus the ``overlap`` / ``row-aware`` policies then
+measure what the analytic model cannot: how much of the sequential GBUF
+path hides behind PIMcore compute, and how many activations open-row
+locality removes.
 """
 
 from __future__ import annotations
@@ -27,6 +32,8 @@ class SimReport:
     policy: str
     result: SimResult
     analytic_total: int
+    analytic_activations: int = 0   # predicted (no-reuse) activation count
+    row_reuse: bool = True          # lowering mode this report replayed
 
     @property
     def simulated_total(self) -> int:
@@ -34,25 +41,34 @@ class SimReport:
 
     @property
     def relative_error(self) -> float:
-        """Simulated vs analytic total (meaningful for ``serial`` only)."""
+        """Simulated vs analytic total (meaningful for ``serial`` with
+        ``row_reuse=False`` only — the fidelity contract)."""
         return (self.simulated_total - self.analytic_total) \
             / max(self.analytic_total, 1)
+
+    @property
+    def activations_saved(self) -> int:
+        """Activations open-row locality removed vs the analytic charge."""
+        return self.analytic_activations - self.result.row_activations
 
     def lines(self) -> list[str]:
         r = self.result
         out = [
             f"[{self.system}] policy={self.policy}  "
+            f"row_reuse={'on' if self.row_reuse else 'off'}  "
             f"simulated={r.makespan}  analytic={self.analytic_total}  "
             f"err={self.relative_error:+.2%}",
-            f"  row activations: {r.row_activations}   "
-            f"bus occupancy: {r.bus_occupancy():.2%} "
+            f"  rows: activations={r.row_activations} "
+            f"(analytic {self.analytic_activations})  hits={r.row_hits}  "
+            f"conflicts={r.row_conflicts}  hit_rate={r.hit_rate:.2%}",
+            f"  bus occupancy: {r.bus_occupancy():.2%} "
             f"(xfer={r.bus_busy['xfer']} switch={r.bus_busy['switch']} "
             f"row={r.bus_busy['row']})",
         ]
         util = r.bank_utilization()
         if util:
             top = sorted(util.items(), key=lambda kv: -kv[1])[:4]
-            out.append("  bank traffic (bus tap + near-bank port): "
+            out.append("  bank occupancy (busiest port): "
                        + " ".join(f"b{b}={u:.2%}" for b, u in top)
                        + f"  (mean {sum(util.values()) / len(util):.2%})")
         out.append("  busy cycles by kind: "
@@ -61,43 +77,58 @@ class SimReport:
         return out
 
 
-def make_report(trace: Trace, arch: PIMArch,
-                policy: str = "serial") -> SimReport:
+def make_report(trace: Trace, arch: PIMArch, policy: str = "serial",
+                row_reuse: bool = True) -> SimReport:
+    analytic = simulate_cycles(trace, arch)
     return SimReport(
         system=arch.name,
         policy=policy,
-        result=simulate(trace, arch, policy),
-        analytic_total=simulate_cycles(trace, arch).total,
+        result=simulate(trace, arch, policy, row_reuse=row_reuse),
+        analytic_total=analytic.total,
+        analytic_activations=analytic.row_activations,
+        row_reuse=row_reuse,
     )
 
 
 def policy_reports(trace: Trace, arch: PIMArch,
-                   policies: tuple[str, ...] = ("serial", "overlap"),
-                   ) -> dict[str, SimReport]:
+                   policies: tuple[str, ...] = ("serial", "overlap",
+                                                "row-aware"),
+                   row_reuse: bool = True) -> dict[str, SimReport]:
     """Reports for several policies, lowering the trace and running the
     analytic model once (the lowering dominates the cost on big traces)."""
-    lowered = lower_trace(trace, arch)
-    analytic = simulate_cycles(trace, arch).total
+    lowered = lower_trace(trace, arch, row_reuse=row_reuse)
+    analytic = simulate_cycles(trace, arch)
     return {p: SimReport(system=arch.name, policy=p,
                          result=simulate(trace, arch, p, lowered=lowered),
-                         analytic_total=analytic)
+                         analytic_total=analytic.total,
+                         analytic_activations=analytic.row_activations,
+                         row_reuse=row_reuse)
             for p in policies}
 
 
 def assert_fidelity(rep: SimReport, tolerance: float = 0.05) -> SimReport:
     """The fidelity gate: a ``serial`` report must agree with the analytic
-    model within ``tolerance``."""
+    model within ``tolerance`` — and when its lowering disabled row reuse,
+    the observed activation count must equal the prediction exactly."""
     if abs(rep.relative_error) > tolerance:
         raise AssertionError(
             f"serial simulation diverges from analytic model on "
             f"{rep.system}: simulated={rep.simulated_total} "
             f"analytic={rep.analytic_total} "
             f"err={rep.relative_error:+.2%} > ±{tolerance:.0%}")
+    if not rep.row_reuse and \
+            rep.result.row_activations != rep.analytic_activations:
+        raise AssertionError(
+            f"activation-count mismatch on {rep.system} (row reuse off): "
+            f"observed={rep.result.row_activations} "
+            f"analytic={rep.analytic_activations}")
     return rep
 
 
 def cross_check(trace: Trace, arch: PIMArch,
                 tolerance: float = 0.05) -> SimReport:
-    """Run the ``serial`` policy and assert agreement with the analytic
-    model within ``tolerance``."""
-    return assert_fidelity(make_report(trace, arch, "serial"), tolerance)
+    """Run the ``serial`` policy with row reuse disabled and assert
+    agreement with the analytic model within ``tolerance`` (cycle totals)
+    and exactly (activation counts)."""
+    return assert_fidelity(make_report(trace, arch, "serial",
+                                       row_reuse=False), tolerance)

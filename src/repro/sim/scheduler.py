@@ -5,8 +5,9 @@ controller ordering and data hazards.
 
 * ``serial`` — the paper's controller (§V-1): one custom CMD in flight at a
   time, command *i* issues when *i−1* retires.  This is the policy the
-  analytic :func:`repro.pim.timing.simulate_cycles` model assumes, and the
-  two agree within rounding (see ``sim/report.cross_check``).
+  analytic :func:`repro.pim.timing.simulate_cycles` model assumes, and
+  (with row reuse disabled in the lowering) the two agree to the cycle
+  (see ``sim/report.cross_check``).
 
 * ``overlap`` — transfers of STATIC data (``Command.prefetchable``: fused
   weight broadcasts) may hoist past in-flight PIMcore compute and
@@ -18,6 +19,15 @@ controller ordering and data hazards.
   activation gathers and reorganisations still wait for the writebacks
   that produce their data, and a CMP still waits for the weight fill that
   feeds it.
+
+* ``row-aware`` — ``overlap``'s command ordering plus open-row batching
+  *within* each command: the controller reorders a command's bursts so
+  same-row bursts issue back-to-back per bank (:func:`batch_same_row`),
+  turning the restream share's row CONFLICTs into HITs, as open-row
+  schedulers in commodity-DRAM PIM do (Shared-PIM, PIM-DRAM).  Reordering
+  is bounded to one command — all bursts of a command move one payload in
+  one direction, so there is no intra-command RAW hazard, and
+  inter-command hazards are exactly ``overlap``'s dependency edges.
 """
 
 from __future__ import annotations
@@ -25,6 +35,7 @@ from __future__ import annotations
 from typing import Callable
 
 from repro.core.commands import CMD, Trace
+from repro.sim.burst import BurstOp
 
 _GBUF_PATH = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)
 
@@ -60,10 +71,28 @@ def overlap_deps(trace: Trace) -> list[list[int]]:
     return deps
 
 
+def batch_same_row(ops: list[BurstOp]) -> list[BurstOp]:
+    """Reorder ONE command's bursts so same-row bursts issue back-to-back
+    per bank: stable sort by (resource, unit, bank, row).  Per-stream
+    chunk grouping is preserved (streams are already emitted contiguously
+    by the lowering); within a bank, the restream passes that would
+    re-open rows in footprint order now coalesce on each row once.  Byte
+    totals, switch charges (one per distinct bank) and per-stream chunk
+    multisets are invariants — only issue ORDER changes, and only inside
+    the command (the bounded reordering window)."""
+    return sorted(ops, key=lambda op: (op.resource.value, op.unit, op.bank,
+                                       op.row))
+
+
 POLICIES: dict[str, Callable[[Trace], list[list[int]]]] = {
     "serial": serial_deps,
     "overlap": overlap_deps,
+    "row-aware": overlap_deps,   # same hazard edges; engine adds batching
 }
+
+# policies whose engines reorder bursts within a command for open-row
+# locality (consulted by repro.sim.engine)
+BATCHING_POLICIES = frozenset({"row-aware"})
 
 
 def command_deps(trace: Trace, policy: str) -> list[list[int]]:

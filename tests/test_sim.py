@@ -12,12 +12,15 @@ import dataclasses
 import pytest
 
 from repro.core.commands import CMD, Command, validated
+from repro.pim.energy import energy_from_counts, simulate_energy
+from repro.pim.events import trace_events
 from repro.pim.ppa import HEADLINE_CONFIGS, SYSTEMS, build_workload, trace_for
 from repro.pim.timing import banks_touched, command_cycles, simulate_cycles
-from repro.sim.burst import check_conservation, lower_command, lower_trace
+from repro.sim.burst import (check_conservation, check_row_geometry,
+                             lower_command, lower_trace)
 from repro.sim.engine import simulate
-from repro.sim.report import cross_check, make_report
-from repro.sim.scheduler import command_deps
+from repro.sim.report import cross_check, make_report, policy_reports
+from repro.sim.scheduler import batch_same_row, command_deps
 
 KB = 1024
 
@@ -97,14 +100,30 @@ def test_serial_matches_analytic_resnet18_full(system):
 
 def test_serial_per_command_matches_analytic():
     """Stronger than the ±5 % aggregate: per-command finish deltas equal
-    the analytic per-command cycles under the serial policy."""
+    the analytic per-command cycles under the serial policy with row reuse
+    disabled (the fidelity contract's lowering mode)."""
     trace, arch = _system_trace("Fused16")
-    res = simulate(trace, arch, "serial")
+    res = simulate(trace, arch, "serial",
+                   lowered=lower_trace(trace, arch, row_reuse=False))
     prev = 0
     for i, c in enumerate(trace):
         sim_cyc = res.cmd_finish[i] - prev
         assert sim_cyc == command_cycles(c, arch)
         prev = res.cmd_finish[i]
+
+
+def test_serial_no_reuse_observes_predicted_activations():
+    """Without row reuse the engine observes EXACTLY the activation count
+    the analytic model predicts (and zero hits) on every system."""
+    for system in sorted(CONFIGS):
+        trace, arch = _system_trace(system, "ResNet18_Full")
+        res = simulate(trace, arch, "serial",
+                       lowered=lower_trace(trace, arch, row_reuse=False))
+        predicted = simulate_cycles(trace, arch).row_activations
+        assert res.row_activations == predicted
+        assert res.row_hits == 0
+        assert res.events.row_activations == predicted
+        assert res.events.dram_hit_bits == 0
 
 
 # ---------------------------------------------------------------------------
@@ -246,3 +265,174 @@ def test_zero_byte_transfers_are_free():
     assert command_cycles(c, arch) == 0
     assert lower_trace([c], arch) == [[]]
     assert simulate([c], arch, "serial").makespan == 0
+
+
+# ---------------------------------------------------------------------------
+# row-buffer state: row-aware lowering, open-row tracker, hit/conflict
+# classification, geometry checks
+# ---------------------------------------------------------------------------
+
+def test_restream_wraps_onto_unique_footprint():
+    """A restream payload re-walks the unique footprint's (bank, row)
+    pairs instead of minting fresh rows; disabling reuse restores the
+    legacy one-row-per-chunk addressing."""
+    arch = SYSTEMS["Fused16"](32 * KB, 256)
+    row = arch.row_bytes
+    # 2 unique rows + 4 restreamed rows over 2 banks
+    c = Command(CMD.PIM_BK2GBUF, "w", bytes_total=6 * row,
+                restream_bytes=4 * row, banks=(0, 1))
+    ops = lower_command(0, c, arch)
+    check_conservation(c, ops)
+    check_row_geometry(c, ops, arch)
+    assert len(ops) == 6
+    assert len({(op.bank, op.row) for op in ops}) == 2   # wrapped
+    legacy = lower_command(0, c, arch, row_reuse=False)
+    assert len({(op.bank, op.row) for op in legacy}) == 6  # fresh per chunk
+
+
+def test_row_namespaces_never_collide_across_commands():
+    arch = SYSTEMS["Fused16"](2 * KB, 0)
+    row = arch.row_bytes
+    trace = [Command(CMD.PIM_BK2GBUF, "a", bytes_total=2 * row, banks=(0,)),
+             Command(CMD.PIM_BK2GBUF, "b", bytes_total=2 * row, banks=(0,))]
+    lowered = lower_trace(trace, arch)
+    rows = [{op.row for op in ops} for ops in lowered]
+    assert not rows[0] & rows[1]
+    # identical payloads to the same bank still never HIT across commands
+    res = simulate(trace, arch, "serial", lowered=lowered)
+    assert res.row_hits == 0
+
+
+def test_open_row_tracker_classifies_hit_and_conflict():
+    arch = SYSTEMS["Fused16"](2 * KB, 0)
+    row = arch.row_bytes
+    # one unique row on bank 0, re-streamed twice: ACTIVATE then 2 HITs
+    c = Command(CMD.PIM_BK2GBUF, "w", bytes_total=3 * row,
+                restream_bytes=2 * row, banks=(0,))
+    res = simulate([c], arch, "serial")
+    assert (res.row_activations, res.row_hits, res.row_conflicts) == (1, 2, 0)
+    assert res.bank_rows[0] == {"act": 1, "hit": 2, "conflict": 0}
+    # each HIT saves exactly one activation charge vs the no-reuse replay
+    legacy = simulate([c], arch, "serial",
+                      lowered=lower_trace([c], arch, row_reuse=False))
+    assert legacy.makespan - res.makespan == 2 * arch.row_overhead_cycles
+    # two unique rows on ONE bank re-walked once: the wrapped pass re-opens
+    # rows the command already activated → CONFLICTs (thrash), not hits
+    c2 = Command(CMD.PIM_BK2GBUF, "w2", bytes_total=4 * row,
+                 restream_bytes=2 * row, banks=(0,))
+    res2 = simulate([c2], arch, "serial")
+    assert res2.row_hits == 0
+    assert res2.row_conflicts == 2          # chunks 2,3 re-open rows 0,1
+    assert res2.row_activations == 4        # same bill as the legacy replay
+    assert res2.bank_rows[0] == {"act": 2, "hit": 0, "conflict": 2}
+
+
+def test_precharge_knob_never_breaks_fidelity():
+    """Only same-command row RE-OPENS pay row_precharge_cycles, so the
+    serial/no-reuse contract holds for any knob setting — and thrashing
+    replays get strictly slower."""
+    arch = dataclasses.replace(SYSTEMS["Fused16"](32 * KB, 256),
+                               row_precharge_cycles=24)
+    trace, _ = _system_trace("Fused16")
+    rep = cross_check(trace, arch)          # raises if precharge leaks in
+    assert rep.relative_error == 0
+    row = arch.row_bytes
+    thrash = Command(CMD.PIM_BK2GBUF, "w", bytes_total=4 * row,
+                     restream_bytes=2 * row, banks=(0,))
+    res = simulate([thrash], arch, "serial")
+    base = simulate([thrash],
+                    dataclasses.replace(arch, row_precharge_cycles=0),
+                    "serial")
+    assert res.row_conflicts == 2
+    assert res.makespan == base.makespan + 2 * 24
+
+
+def test_hits_carry_dram_hit_bits_into_events():
+    arch = SYSTEMS["Fused16"](2 * KB, 0)
+    row = arch.row_bytes
+    c = Command(CMD.PIM_BK2GBUF, "w", bytes_total=3 * row,
+                restream_bytes=2 * row, banks=(0,))
+    res = simulate([c], arch, "serial")
+    assert res.events.dram_hit_bits == 2 * row * 8
+    assert res.events.row_hits == 2
+    assert res.events.hit_rate == pytest.approx(2 / 3)
+    # observed-hit energy sits between the analytic restream assumption
+    # (all restream bytes hit) and the no-hit upper bound
+    e_obs = energy_from_counts(res.events, arch).total_nj
+    e_analytic = simulate_energy([c], arch).total_nj
+    e_nohit = energy_from_counts(trace_events([c], arch), arch).total_nj
+    assert e_analytic == pytest.approx(e_obs)   # here ALL restream bytes hit
+    assert e_obs < e_nohit
+
+
+def test_row_geometry_check_rejects_bad_lowerings():
+    arch = SYSTEMS["Fused16"](2 * KB, 0)
+    row = arch.row_bytes
+    c = Command(CMD.PIM_BK2GBUF, "w", bytes_total=2 * row, banks=(0,))
+    ops = lower_command(0, c, arch)
+    import dataclasses as dc
+    with pytest.raises(AssertionError, match="exceeds the"):
+        check_row_geometry(c, [dc.replace(ops[0], nbytes=row + 1)], arch)
+    # folding unique data onto one shared row must be caught
+    folded = [dc.replace(op, row=ops[0].row) for op in ops]
+    with pytest.raises(AssertionError, match="unique footprint"):
+        check_row_geometry(c, folded, arch)
+
+
+def test_bank_busy_split_by_port():
+    """Satellite: bus-tap and near-bank-port cycles are separate counters
+    and every per-bank port occupancy is a true fraction ≤ 1."""
+    trace, arch = _system_trace("Fused16")
+    for policy in ("serial", "overlap", "row-aware"):
+        res = simulate(trace, arch, policy)
+        assert set(res.bank_bus_busy)        # GBUF path touched banks
+        assert set(res.bank_port_busy)       # near-bank path touched banks
+        for frac in res.bank_utilization().values():
+            assert 0 <= frac <= 1
+        for busy in (*res.bank_bus_busy.values(),
+                     *res.bank_port_busy.values()):
+            assert busy <= res.makespan
+
+
+def test_row_aware_policy_batches_hits():
+    """The row-aware policy turns restream CONFLICTs into HITs via bounded
+    same-row batching and never runs slower than overlap."""
+    for system in sorted(CONFIGS):
+        trace, arch = _system_trace(system, "ResNet18_Full")
+        reps = policy_reports(trace, arch)
+        ra, ov, se = reps["row-aware"], reps["overlap"], reps["serial"]
+        assert ra.simulated_total <= ov.simulated_total <= se.simulated_total
+        assert ra.result.row_hits >= ov.result.row_hits
+        assert ra.result.row_activations <= ov.result.row_activations
+    # Fused ResNet18 at the headline point shows real open-row locality
+    trace, arch = _system_trace("Fused16", "ResNet18_Full")
+    ra = policy_reports(trace, arch)["row-aware"]
+    assert ra.result.row_hits > 0
+    assert ra.activations_saved > 0
+
+
+def test_batch_same_row_preserves_command_invariants():
+    trace, arch = _system_trace("Fused16", "ResNet18_Full")
+    for idx, c in enumerate(trace):
+        ops = lower_command(idx, c, arch)
+        batched = batch_same_row(ops)
+        assert sorted(ops, key=id) == sorted(batched, key=id)  # permutation
+        check_conservation(c, batched)
+        check_row_geometry(c, batched, arch)
+        # one switch charge per distinct bank, before and after
+        assert sum(op.switch_cycles for op in ops) == \
+            sum(op.switch_cycles for op in batched)
+
+
+def test_cross_check_catches_activation_mismatch():
+    """assert_fidelity enforces the exact activation-count contract when
+    row reuse is off."""
+    from repro.sim.report import SimReport, assert_fidelity
+    trace, arch = _system_trace("Fused16")
+    rep = cross_check(trace, arch)
+    bad = SimReport(system=rep.system, policy="serial", result=rep.result,
+                    analytic_total=rep.analytic_total,
+                    analytic_activations=rep.analytic_activations + 1,
+                    row_reuse=False)
+    with pytest.raises(AssertionError, match="activation-count mismatch"):
+        assert_fidelity(bad)

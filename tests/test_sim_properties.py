@@ -1,0 +1,139 @@
+"""Property tests (hypothesis) for the issue-policy hazard contracts.
+
+The `overlap` / `row-aware` policies may hoist prefetchable weight fills
+past in-flight work — and NOTHING else.  Under random interleavings of
+prefetchable fills with transfers/computes, no consumer may ever issue
+before the transfer that produces its data retires:
+
+* every non-prefetchable command transitively depends on EVERY earlier
+  command (it can never overtake a producer of any kind),
+* a prefetchable fill still waits for the previous GBUF-path transfer
+  (the shared bus is in-order) and keeps prefetch depth ≤ 1,
+* the engine's issue times realise the dependency closure: a consumer's
+  start time is never before any earlier non-prefetchable command's
+  finish, under either hoisting policy and either row-reuse mode.
+
+Skips cleanly when hypothesis is not installed (see requirements-dev.txt).
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.commands import CMD, Command  # noqa: E402
+from repro.pim.ppa import SYSTEMS  # noqa: E402
+from repro.sim.engine import simulate  # noqa: E402
+from repro.sim.scheduler import POLICIES, command_deps  # noqa: E402
+
+KB = 1024
+HOISTING = ("overlap", "row-aware")
+
+
+def _prefetch(nbytes: int) -> Command:
+    return Command(CMD.PIM_BK2GBUF, "w", bytes_total=nbytes,
+                   prefetchable=True, note="weight fill")
+
+
+def _gather(nbytes: int) -> Command:
+    return Command(CMD.PIM_BK2GBUF, "act", bytes_total=nbytes)
+
+
+def _writeback(nbytes: int) -> Command:
+    return Command(CMD.PIM_GBUF2BK, "out", bytes_total=nbytes)
+
+
+def _lbuf(nbytes: int) -> Command:
+    return Command(CMD.PIM_BK2LBUF, "tile", bytes_total=nbytes,
+                   concurrent_cores=4)
+
+
+def _cmp(nbytes: int) -> Command:
+    return Command(CMD.PIMCORE_CMP, "conv", flag="CONV_BN", macs=64,
+                   bank_stream_bytes=nbytes, concurrent_cores=4,
+                   restream_bytes=nbytes // 2)
+
+
+def _gbcore(_: int) -> Command:
+    return Command(CMD.GBCORE_CMP, "pool", flag="POOL", alu_ops=32)
+
+
+_KINDS = (_prefetch, _gather, _writeback, _lbuf, _cmp, _gbcore)
+
+# random traces: any interleaving of prefetchable fills with solid work,
+# payloads spanning zero-byte through multi-row
+commands = st.builds(lambda mk, nbytes: mk(nbytes),
+                     st.sampled_from(_KINDS),
+                     st.sampled_from([0, 64, 2 * KB, 3 * KB, 9 * KB]))
+traces = st.lists(commands, min_size=1, max_size=24)
+
+
+def _reaches(deps, start, target):
+    frontier, seen = list(deps[start]), set()
+    while frontier:
+        j = frontier.pop()
+        if j == target:
+            return True
+        if j not in seen:
+            seen.add(j)
+            frontier.extend(deps[j])
+    return False
+
+
+@settings(max_examples=60, deadline=None)
+@given(trace=traces, policy=st.sampled_from(sorted(POLICIES)))
+def test_deps_are_well_formed(trace, policy):
+    deps = command_deps(trace, policy)
+    assert len(deps) == len(trace)
+    for i, dd in enumerate(deps):
+        assert all(0 <= j < i for j in dd)      # acyclic, past-only
+
+
+@settings(max_examples=60, deadline=None)
+@given(trace=traces, policy=st.sampled_from(HOISTING))
+def test_no_consumer_overtakes_any_producer(trace, policy):
+    """A non-prefetchable command transitively depends on EVERY earlier
+    command — in particular on whatever transfer produced its data."""
+    deps = command_deps(trace, policy)
+    for i, c in enumerate(trace):
+        if c.prefetchable:
+            continue
+        for j in range(i):
+            assert _reaches(deps, i, j), \
+                f"consumer {i} may overtake producer {j}"
+
+
+@settings(max_examples=60, deadline=None)
+@given(trace=traces, policy=st.sampled_from(HOISTING))
+def test_prefetch_respects_bus_order_and_depth(trace, policy):
+    deps = command_deps(trace, policy)
+    gbuf_path = [i for i, c in enumerate(trace)
+                 if c.kind in (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)]
+    for a, b in zip(gbuf_path, gbuf_path[1:]):
+        assert _reaches(deps, b, a)             # shared bus stays in-order
+    pref = [i for i, c in enumerate(trace) if c.prefetchable]
+    solid = [i for i, c in enumerate(trace) if not c.prefetchable]
+    for p_prev, p_cur in zip(pref, pref[1:]):
+        owners = [k for k in solid if k < p_prev]
+        if owners:                              # prefetch depth ≤ 1
+            assert _reaches(deps, p_cur, owners[-1])
+
+
+@settings(max_examples=30, deadline=None)
+@given(trace=traces, policy=st.sampled_from(HOISTING),
+       system=st.sampled_from(("AiM-like", "Fused16", "Fused4")),
+       row_reuse=st.booleans())
+def test_engine_issue_times_respect_hazards(trace, policy, system,
+                                            row_reuse):
+    """The replay realises the closure: no consumer starts before any
+    earlier non-prefetchable command finishes, whatever the row-reuse
+    mode or batching policy."""
+    arch = SYSTEMS[system](gbuf_bytes=2 * KB, lbuf_bytes=256)
+    res = simulate(trace, arch, policy, row_reuse=row_reuse)
+    solid = [i for i, c in enumerate(trace) if not c.prefetchable]
+    for a, b in zip(solid, solid[1:]):
+        assert res.cmd_start[b] >= res.cmd_finish[a]
+    # serial is the reference: hoisting may only ever help
+    assert res.makespan <= simulate(trace, arch, "serial",
+                                    row_reuse=row_reuse).makespan
