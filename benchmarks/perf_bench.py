@@ -1,0 +1,122 @@
+"""Simulator performance bench: lowering + engine throughput and the
+end-to-end sim_sweep wall-clock for both engines, persisted as
+``BENCH_sim.json`` at the repo root (the bench trajectory CI uploads).
+
+Measured in one run, so the speedup numbers are internally consistent:
+
+* **lowering** — bursts/sec for the object (``lower_trace``) and columnar
+  (``lower_trace_columnar``) lowerings of the ResNet18-Full AiM-like
+  trace (the burst-heaviest point of the default grid);
+* **engines** — replay bursts/sec per (engine × issue policy) on the same
+  pre-lowered trace (engine cost only — lowering is excluded, and the
+  columnar engine's order-only burst profile is warm across repeats,
+  exactly the regime a memoized multi-policy sweep runs in);
+* **sim_sweep** — wall-clock of :func:`benchmarks.sim_sweep.run_sweep` on
+  a fresh Experiment per engine (mapping + lowering + 4 replays × 3
+  systems + artifacts, i.e. what CI actually pays), and the
+  columnar-vs-reference speedup — the ISSUE gate is ≥ 10×.
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_bench
+"""
+
+from __future__ import annotations
+
+import contextlib
+import io
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.experiment import Experiment
+from repro.sim.burst import lower_trace, lower_trace_columnar
+from repro.sim.engine import simulate
+from repro.sim.engine_vec import simulate_columnar
+
+WORKLOAD = "ResNet18_Full"
+SYSTEM = "AiM-like"
+POLICIES = ("serial", "overlap", "row-aware")
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
+
+
+def _best_of(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_lowering(trace, arch) -> dict:
+    n = sum(len(ops) for ops in lower_trace(trace, arch))
+    t_obj = _best_of(lambda: lower_trace(trace, arch))
+    t_col = _best_of(lambda: lower_trace_columnar(trace, arch))
+    return {
+        "bursts": n,
+        "object_s": round(t_obj, 4),
+        "columnar_s": round(t_col, 4),
+        "object_bursts_per_s": round(n / t_obj),
+        "columnar_bursts_per_s": round(n / t_col),
+        "speedup": round(t_obj / t_col, 2),
+    }
+
+
+def bench_engines(trace, arch) -> dict:
+    lowered = lower_trace(trace, arch)
+    cols = lower_trace_columnar(trace, arch)
+    n = sum(len(ops) for ops in lowered)
+    out: dict[str, dict] = {"reference": {}, "columnar": {}}
+    for policy in POLICIES:
+        t_ref = _best_of(lambda p=policy: simulate(trace, arch, p,
+                                                   lowered=lowered))
+        t_col = _best_of(lambda p=policy: simulate_columnar(trace, arch, p,
+                                                            cols=cols))
+        assert simulate(trace, arch, policy, lowered=lowered) == \
+            simulate_columnar(trace, arch, policy, cols=cols)
+        out["reference"][policy] = {"s": round(t_ref, 4),
+                                    "bursts_per_s": round(n / t_ref)}
+        out["columnar"][policy] = {"s": round(t_col, 4),
+                                   "bursts_per_s": round(n / t_col)}
+    return out
+
+
+def bench_sim_sweep() -> dict:
+    from benchmarks.sim_sweep import run_sweep
+    times = {}
+    for engine in ("reference", "columnar"):
+        t0 = time.perf_counter()
+        with contextlib.redirect_stderr(io.StringIO()):
+            run_sweep(engine=engine, exp=Experiment())
+        times[engine] = time.perf_counter() - t0
+    return {
+        "workload": WORKLOAD,
+        "reference_s": round(times["reference"], 3),
+        "columnar_s": round(times["columnar"], 3),
+        "speedup": round(times["reference"] / times["columnar"], 2),
+    }
+
+
+def main() -> None:
+    exp = Experiment()
+    spec = exp.systems.get(SYSTEM)
+    arch = spec.make_arch(*spec.default_buffers)
+    trace = exp.trace(WORKLOAD, SYSTEM, *spec.default_buffers)
+    bench = {
+        "benchmark": "repro.sim columnar fast path",
+        "workload": WORKLOAD,
+        "system": SYSTEM,
+        "lowering": bench_lowering(trace, arch),
+        "engines": bench_engines(trace, arch),
+        "sim_sweep": bench_sim_sweep(),
+    }
+    BENCH_PATH.write_text(json.dumps(bench, indent=2) + "\n")
+    print(json.dumps(bench, indent=2))
+    print(f"[perf_bench] wrote {BENCH_PATH}", file=sys.stderr)
+    speedup = bench["sim_sweep"]["speedup"]
+    print(f"[perf_bench] sim_sweep columnar speedup: {speedup:.1f}x",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

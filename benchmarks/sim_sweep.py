@@ -21,9 +21,11 @@ lowering.  All grid points are persisted as a CSV artifact
 (``$REPRO_ARTIFACT_DIR``, default ``artifacts/sim_sweep.csv``) so figures
 regenerate without re-running.
 
-Run:  PYTHONPATH=src python -m benchmarks.sim_sweep
-CSV rows (``name,us_per_call,derived``) go to stdout, the human-readable
-report to stderr.
+Run:  PYTHONPATH=src python -m benchmarks.sim_sweep [engine]
+(``engine`` is ``columnar`` — the vectorized default — or ``reference``;
+both produce bit-identical results).  CSV rows
+(``name,us_per_call,derived``) go to stdout, the human-readable report to
+stderr.
 """
 
 from __future__ import annotations
@@ -31,15 +33,16 @@ from __future__ import annotations
 import sys
 import time
 
-from repro.experiment import default_experiment
+from repro.experiment import Experiment, default_experiment
 from repro.experiment.artifacts import default_artifact_dir, write_results_csv
 from repro.sim.report import assert_fidelity
 
 WORKLOAD = "ResNet18_Full"
 
 
-def run_sweep(workload: str = WORKLOAD) -> list[str]:
-    exp = default_experiment()
+def run_sweep(workload: str = WORKLOAD, engine: str = "columnar",
+              exp: Experiment | None = None) -> list[str]:
+    exp = exp if exp is not None else default_experiment()
     rows = []
     results = []
     for system in exp.systems.names():
@@ -47,9 +50,9 @@ def run_sweep(workload: str = WORKLOAD) -> list[str]:
         # the fidelity gate replays the row-reuse-DISABLED lowering
         gate = exp.run(workload=workload, system=system,
                        backend="burst-sim", policy="serial",
-                       row_reuse=False)
+                       row_reuse=False, engine=engine)
         reports = {p: exp.run(workload=workload, system=system,
-                              backend="burst-sim", policy=p)
+                              backend="burst-sim", policy=p, engine=engine)
                    for p in ("serial", "overlap", "row-aware")}
         us = (time.perf_counter() - t0) * 1e6
         serial = assert_fidelity(gate.detail["sim"])   # ±5 % + exact acts
@@ -84,8 +87,9 @@ def run_sweep(workload: str = WORKLOAD) -> list[str]:
 
 
 def main() -> None:
+    engine = sys.argv[1] if len(sys.argv) > 1 else "columnar"
     print("name,us_per_call,derived")
-    for row in run_sweep():
+    for row in run_sweep(engine=engine):
         print(row)
 
 

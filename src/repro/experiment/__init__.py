@@ -33,20 +33,23 @@ The legacy ``repro.pim.ppa`` entry points are thin shims over
 """
 
 from repro.experiment.artifacts import (default_artifact_dir,
-                                        read_results_csv, write_results_csv)
+                                        read_results_csv, write_pareto_csv,
+                                        write_results_csv)
 from repro.experiment.backends import (BACKENDS, AnalyticBackend,
                                        BurstSimBackend, EvalBackend,
-                                       EvalResult, EvalSpec)
+                                       EvalResult, EvalSpec, resolve_engine)
 from repro.experiment.registry import (Registry, SystemSpec, WorkloadSpec,
                                        SYSTEMS, WORKLOADS, register_system,
                                        register_workload)
 from repro.experiment.runner import (BASELINE_SYSTEM, Experiment,
-                                     default_experiment)
+                                     ParetoPoint, default_experiment,
+                                     pareto_tags)
 
 __all__ = [
     "BACKENDS", "BASELINE_SYSTEM", "AnalyticBackend", "BurstSimBackend",
-    "EvalBackend", "EvalResult", "EvalSpec", "Experiment", "Registry",
-    "SystemSpec", "WorkloadSpec", "SYSTEMS", "WORKLOADS",
-    "default_artifact_dir", "default_experiment", "read_results_csv",
-    "register_system", "register_workload", "write_results_csv",
+    "EvalBackend", "EvalResult", "EvalSpec", "Experiment", "ParetoPoint",
+    "Registry", "SystemSpec", "WorkloadSpec", "SYSTEMS", "WORKLOADS",
+    "default_artifact_dir", "default_experiment", "pareto_tags",
+    "read_results_csv", "register_system", "register_workload",
+    "resolve_engine", "write_pareto_csv", "write_results_csv",
 ]

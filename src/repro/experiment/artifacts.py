@@ -26,18 +26,22 @@ from typing import TYPE_CHECKING, Iterable
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.experiment.backends import EvalResult
-    from repro.experiment.runner import Experiment
+    from repro.experiment.runner import Experiment, ParetoPoint
 
 CSV_FIELDS = (
     "workload", "system", "config", "backend", "policy", "row_reuse",
-    "gbuf_bytes", "lbuf_bytes", "cycles", "energy_nj", "area_mm2",
+    "engine", "gbuf_bytes", "lbuf_bytes", "cycles", "energy_nj", "area_mm2",
     "cross_bank_bytes", "row_activations", "row_hits",
     "norm_cycles", "norm_energy", "norm_area",
 )
 
+# Pareto artifacts carry the sweep schema plus the dominated tag
+PARETO_FIELDS = CSV_FIELDS + ("dominated",)
+
 # how each column reads back from text (everything else stays str)
 _PARSERS = {
     "row_reuse": lambda s: s == "True",
+    "dominated": lambda s: s == "True",
     "gbuf_bytes": int, "lbuf_bytes": int, "cycles": int,
     "cross_bank_bytes": int, "row_activations": int, "row_hits": int,
     "energy_nj": float, "area_mm2": float,
@@ -63,6 +67,9 @@ def result_row(result: "EvalResult",
         "backend": spec.backend,
         "policy": spec.policy,
         "row_reuse": spec.row_reuse,
+        # the engine that actually ran: burst-sim detail carries the
+        # resolved engine (spec.engine may have fallen back without numpy)
+        "engine": result.detail.get("engine", spec.engine),
         "gbuf_bytes": spec.gbuf_bytes,
         "lbuf_bytes": spec.lbuf_bytes,
         "cycles": result.cycles,
@@ -93,6 +100,24 @@ def write_results_csv(path: str | Path, results: Iterable["EvalResult"],
         for r in results:
             norm = experiment.normalized(r) if experiment is not None else None
             writer.writerow(result_row(r, norm))
+    return path
+
+
+def write_pareto_csv(path: str | Path, points: Iterable["ParetoPoint"],
+                     experiment: "Experiment | None" = None) -> Path:
+    """Persist a tagged Pareto grid (:meth:`Experiment.pareto_frontier`
+    output): the sweep schema plus a ``dominated`` column, readable back
+    through :func:`read_results_csv`."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with path.open("w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=PARETO_FIELDS)
+        writer.writeheader()
+        for p in points:
+            norm = experiment.normalized(p.result) \
+                if experiment is not None else None
+            writer.writerow(dict(result_row(p.result, norm),
+                                 dominated=p.dominated))
     return path
 
 

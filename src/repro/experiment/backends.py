@@ -25,6 +25,7 @@ drivers and normalized reporting are backend-agnostic.  Register more via
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Mapping, Protocol
 
 from repro.core.commands import Trace, cross_bank_bytes
@@ -44,6 +45,10 @@ class EvalSpec:
     policy and ``row_reuse`` its lowering mode (both ignored by the
     analytic backend; ``row_reuse=False`` restores the legacy
     fresh-row-per-chunk addressing the fidelity contract is pinned to).
+    ``engine`` picks the burst-sim replay implementation — the vectorized
+    ``columnar`` fast path (the default; falls back to ``reference`` when
+    numpy is unavailable) or the ``reference`` object engine — the two are
+    bit-identical, so the knob never changes results, only throughput.
     """
 
     workload: str
@@ -53,6 +58,7 @@ class EvalSpec:
     backend: str = "analytic"
     policy: str = "serial"
     row_reuse: bool = True
+    engine: str = "columnar"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,12 +99,19 @@ class EvalResult:
 
 class EvalContext(Protocol):
     """Shared-work hooks a driver may offer backends (all optional):
-    memoized burst lowering (shared across issue policies, keyed by
-    row-reuse mode) and memoized policy-independent analytic cycle/energy
+    memoized burst lowerings (object and columnar, shared across issue
+    policies and keyed by row-reuse mode), memoized per-policy batched
+    burst orderings, and memoized policy-independent analytic cycle/energy
     reports."""
 
     def lowered(self, trace: Trace, arch: PIMArch,
                 row_reuse: bool = True) -> Any: ...
+
+    def columnar(self, trace: Trace, arch: PIMArch,
+                 row_reuse: bool = True) -> Any: ...
+
+    def batched(self, trace: Trace, arch: PIMArch, row_reuse: bool,
+                policy: str, engine: str) -> Any: ...
 
     def cycle_report(self, trace: Trace, arch: PIMArch) -> Any: ...
 
@@ -108,6 +121,26 @@ class EvalContext(Protocol):
 def _cycle_report(trace: Trace, arch: PIMArch, ctx: EvalContext | None):
     fn = getattr(ctx, "cycle_report", None)
     return fn(trace, arch) if fn is not None else simulate_cycles(trace, arch)
+
+
+@functools.lru_cache(maxsize=None)
+def have_numpy() -> bool:
+    """Whether the columnar fast path's only dependency is importable
+    (cached — availability cannot change mid-process)."""
+    import importlib.util
+    return importlib.util.find_spec("numpy") is not None
+
+
+def resolve_engine(engine: str) -> str:
+    """Validate the engine knob and apply the numpy fallback: ``columnar``
+    silently degrades to the bit-identical ``reference`` engine when numpy
+    is missing (results are unchanged — only throughput)."""
+    if engine not in ("columnar", "reference"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "choose from ['columnar', 'reference']")
+    if engine == "columnar" and not have_numpy():
+        return "reference"
+    return engine
 
 
 class EvalBackend(Protocol):
@@ -159,18 +192,53 @@ class AnalyticBackend:
 class BurstSimBackend:
     name = "burst-sim"
 
+    def _replay(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
+                engine: str, ctx: EvalContext | None):
+        """One burst replay under the RESOLVED engine, pulling the lowering
+        (and, for batching policies, the batched burst ordering) from the
+        driver's memo caches when a context is offered."""
+        from repro.sim.scheduler import BATCHING_POLICIES
+
+        batch_fn = getattr(ctx, "batched", None)
+        if engine == "columnar":
+            from repro.sim.burst import lower_trace_columnar
+            from repro.sim.engine_vec import simulate_columnar
+            from repro.sim.scheduler import batch_same_row_columnar
+
+            low_fn = getattr(ctx, "columnar", None)
+            cols = low_fn(trace, arch, spec.row_reuse) \
+                if low_fn is not None \
+                else lower_trace_columnar(trace, arch,
+                                          row_reuse=spec.row_reuse)
+            if spec.policy in BATCHING_POLICIES:
+                cols = batch_fn(trace, arch, spec.row_reuse, spec.policy,
+                                engine) if batch_fn is not None \
+                    else batch_same_row_columnar(cols)
+            return simulate_columnar(trace, arch, spec.policy, cols=cols,
+                                     prebatched=True)
+        from repro.sim.burst import lower_trace
+        from repro.sim.engine import simulate
+        from repro.sim.scheduler import batch_same_row
+
+        low_fn = getattr(ctx, "lowered", None)
+        lowered = low_fn(trace, arch, spec.row_reuse) \
+            if low_fn is not None \
+            else lower_trace(trace, arch, row_reuse=spec.row_reuse)
+        if spec.policy in BATCHING_POLICIES:
+            lowered = batch_fn(trace, arch, spec.row_reuse, spec.policy,
+                               engine) if batch_fn is not None \
+                else [batch_same_row(ops) for ops in lowered]
+        return simulate(trace, arch, spec.policy, lowered=lowered,
+                        prebatched=True)
+
     def evaluate(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
                  ctx: EvalContext | None = None) -> EvalResult:
         # local import: keeps the analytic path importable without repro.sim
         from repro.pim.energy import energy_from_counts
-        from repro.sim.burst import lower_trace
-        from repro.sim.engine import simulate
         from repro.sim.report import SimReport
 
-        lowered = ctx.lowered(trace, arch, spec.row_reuse) \
-            if ctx is not None \
-            else lower_trace(trace, arch, row_reuse=spec.row_reuse)
-        result = simulate(trace, arch, spec.policy, lowered=lowered)
+        engine = resolve_engine(spec.engine)
+        result = self._replay(trace, arch, spec, engine, ctx)
         analytic = _cycle_report(trace, arch, ctx)
         report = SimReport(system=arch.name, policy=spec.policy,
                            result=result,
@@ -180,8 +248,10 @@ class BurstSimBackend:
         # energy from what the replay OBSERVED (activations, hits), not the
         # analytic restream assumption
         energy = energy_from_counts(result.events, arch)
+        # detail records the engine that actually RAN (the numpy fallback
+        # may differ from spec.engine) — artifacts persist this one
         return _common(spec, trace, arch, result.makespan,
-                       {"sim": report}, ctx,
+                       {"sim": report, "engine": engine}, ctx,
                        energy=energy, events=result.events)
 
 

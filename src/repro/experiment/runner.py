@@ -40,6 +40,42 @@ BASELINE_SYSTEM = _systems.BASELINE_SYSTEM
 _ = _workloads  # imported for registration side effects
 
 
+@dataclasses.dataclass(frozen=True)
+class ParetoPoint:
+    """One design point of a :meth:`Experiment.pareto_frontier` sweep,
+    tagged with whether another grid point Pareto-dominates it on the
+    (cycles, energy, area) triple."""
+
+    result: EvalResult
+    dominated: bool
+
+
+def _dominates(a: tuple[float, ...], b: tuple[float, ...]) -> bool:
+    """True if ``a`` is no worse than ``b`` everywhere and strictly better
+    somewhere (ties dominate nothing — duplicate points both survive)."""
+    return all(x <= y for x, y in zip(a, b)) \
+        and any(x < y for x, y in zip(a, b))
+
+
+def pareto_tags(results: Sequence[EvalResult]) -> list[bool]:
+    """Per-result dominated flags over (cycles, energy_nj, area_mm2) —
+    smaller is better on every axis."""
+    metrics = [(r.cycles, r.energy_nj, r.area_mm2) for r in results]
+    return [any(_dominates(other, mine)
+                for j, other in enumerate(metrics) if j != i)
+            for i, mine in enumerate(metrics)]
+
+
+def _sweep_worker(specs: list[EvalSpec]) -> tuple[list[EvalResult],
+                                                  dict[str, int]]:
+    """Process-pool entry point for :meth:`Experiment.sweep`: evaluate one
+    chunk of grid points on a fresh Experiment (over the module-level
+    registries) and ship the results plus the build stats back for the
+    parent to merge."""
+    exp = Experiment()
+    return [exp.run(spec) for spec in specs], exp.stats
+
+
 class Experiment:
     """Declarative, memoizing evaluation driver over the registries."""
 
@@ -55,6 +91,7 @@ class Experiment:
         self.stats: dict[str, int] = {
             "graph_builds": 0, "plan_builds": 0, "tiling_builds": 0,
             "trace_maps": 0, "trace_hits": 0, "lowerings": 0,
+            "columnar_lowerings": 0, "batchings": 0,
             "cycle_models": 0, "energy_models": 0,
             "backend_evals": 0, "result_hits": 0,
         }
@@ -68,6 +105,8 @@ class Experiment:
         # id() stable and lets the lookup verify it still names the same
         # trace object
         self._lowered: dict[tuple, tuple[Trace, Any]] = {}
+        self._columnar: dict[tuple, tuple[Trace, Any]] = {}
+        self._batched: dict[tuple, tuple[Trace, Any]] = {}
         self._cycle_reports: dict[tuple, tuple[Trace, Any]] = {}
         self._energy_reports: dict[tuple, tuple[Trace, Any]] = {}
         self._results: dict[EvalSpec, EvalResult] = {}
@@ -149,6 +188,34 @@ class Experiment:
                                                    row_reuse=row_reuse),
                                "lowerings", extra=row_reuse)
 
+    def columnar(self, trace: Trace, arch: PIMArch,
+                 row_reuse: bool = True) -> Any:
+        """Columnar (structure-of-arrays) burst lowering for the fast-path
+        engine — cached like :meth:`lowered`, and built directly from the
+        trace (vectorized emission, no intermediate ``BurstOp`` objects)."""
+        from repro.sim.burst import lower_trace_columnar
+        return self._per_trace(self._columnar, trace, arch,
+                               lambda: lower_trace_columnar(
+                                   trace, arch, row_reuse=row_reuse),
+                               "columnar_lowerings", extra=row_reuse)
+
+    def batched(self, trace: Trace, arch: PIMArch, row_reuse: bool,
+                policy: str, engine: str) -> Any:
+        """Batched burst ordering for a batching policy (``row-aware``),
+        cached per (lowering, policy) so a multi-policy sweep sorts each
+        command's bursts once instead of once per ``simulate()`` call."""
+        def build():
+            if engine == "columnar":
+                from repro.sim.scheduler import batch_same_row_columnar
+                return batch_same_row_columnar(
+                    self.columnar(trace, arch, row_reuse))
+            from repro.sim.scheduler import batch_same_row
+            return [batch_same_row(ops)
+                    for ops in self.lowered(trace, arch, row_reuse)]
+        return self._per_trace(self._batched, trace, arch, build,
+                               "batchings",
+                               extra=(row_reuse, policy, engine))
+
     def cycle_report(self, trace: Trace, arch: PIMArch) -> Any:
         """Analytic cycle report, policy-independent — computed once per
         (trace, arch) however many backends/policies consume it."""
@@ -200,14 +267,15 @@ class Experiment:
 
     def baseline(self, workload: str, backend: str = "analytic",
                  policy: str = "serial",
-                 row_reuse: bool = True) -> EvalResult:
+                 row_reuse: bool = True,
+                 engine: str = "columnar") -> EvalResult:
         """The paper's 1.0: the baseline system at its own design point,
-        evaluated under the SAME backend/policy/row-reuse mode as the
-        results it scales."""
+        evaluated under the SAME backend/policy/row-reuse/engine mode as
+        the results it scales."""
         return self.run(EvalSpec(workload=workload,
                                  system=self.baseline_system,
                                  backend=backend, policy=policy,
-                                 row_reuse=row_reuse))
+                                 row_reuse=row_reuse, engine=engine))
 
     def normalized(self, result: EvalResult) -> dict[str, float]:
         """Normalize one result to its workload's baseline (memoized — the
@@ -215,7 +283,8 @@ class Experiment:
         return result.normalized(self.baseline(result.workload,
                                                backend=result.spec.backend,
                                                policy=result.spec.policy,
-                                               row_reuse=result.spec.row_reuse))
+                                               row_reuse=result.spec.row_reuse,
+                                               engine=result.spec.engine))
 
     def sweep(self,
               workloads: str | Iterable[str] | None = None,
@@ -224,13 +293,20 @@ class Experiment:
               backend: str = "analytic",
               policy: str = "serial",
               row_reuse: bool = True,
+              engine: str = "columnar",
+              workers: int = 1,
               csv_path: str | None = None) -> list[EvalResult]:
         """Evaluate the cross product workloads × systems × buffer points.
 
         ``None`` axes default to every registered workload / system / the
         per-system default buffer point.  Returns results in grid order.
-        ``csv_path`` additionally persists the results (with normalized
-        PPA columns) as a CSV artifact via
+        ``workers > 1`` farms not-yet-cached points out to a process pool
+        (:func:`concurrent.futures.ProcessPoolExecutor`), merges the
+        returned results and build stats back into this Experiment's memo
+        caches, and still returns deterministic grid order; ``workers <=
+        1`` (the default) runs serially in-process.  ``csv_path``
+        additionally persists the results (with normalized PPA columns) as
+        a CSV artifact via
         :func:`repro.experiment.artifacts.write_results_csv`, so figures
         regenerate without re-running the sweep.
         """
@@ -243,14 +319,114 @@ class Experiment:
         elif isinstance(systems, str):
             systems = (systems,)
         points = buffers if buffers is not None else ((None, None),)
-        results = [self.run(EvalSpec(workload=w, system=s, gbuf_bytes=g,
-                                     lbuf_bytes=l, backend=backend,
-                                     policy=policy, row_reuse=row_reuse))
-                   for w in workloads for s in systems for g, l in points]
+        specs = [EvalSpec(workload=w, system=s, gbuf_bytes=g,
+                          lbuf_bytes=l, backend=backend,
+                          policy=policy, row_reuse=row_reuse,
+                          engine=engine)
+                 for w in workloads for s in systems for g, l in points]
+        if workers > 1:
+            batch = list(specs)
+            if csv_path is not None:
+                # the CSV's normalized columns need each workload's
+                # baseline — evaluate those on the pool too instead of
+                # serially in the parent afterwards
+                batch += [EvalSpec(workload=w, system=self.baseline_system,
+                                   backend=backend, policy=policy,
+                                   row_reuse=row_reuse, engine=engine)
+                          for w in workloads]
+            self._run_parallel(batch, workers)
+        results = [self.run(spec) for spec in specs]
         if csv_path is not None:
             from repro.experiment.artifacts import write_results_csv
             write_results_csv(csv_path, results, experiment=self)
         return results
+
+    def _run_parallel(self, specs: Sequence[EvalSpec], workers: int) -> None:
+        """Evaluate not-yet-cached specs on a process pool and merge the
+        results (and the workers' build stats) into this Experiment.
+
+        Workers rebuild their own Experiment over the MODULE-LEVEL
+        registries, so custom in-process registries fall back to the
+        serial path (their entries would not exist in a fresh worker).
+        Points are chunked by fully-resolved grid point — (workload,
+        system, gbuf, lbuf, row-reuse) — the unit that actually shares a
+        mapped trace and burst lowering across its specs (policies /
+        backends); distinct buffer points share nothing, so they
+        parallelize freely even within one system.
+        """
+        if (self.workloads is not WORKLOADS or self.systems is not SYSTEMS
+                or self.backends is not BACKENDS):
+            return
+        seen: set[EvalSpec] = set()
+        chunks: dict[tuple, list[EvalSpec]] = {}
+        for spec in specs:
+            spec = self.resolve(spec)
+            if spec in self._results or spec in seen:
+                continue
+            seen.add(spec)
+            chunks.setdefault(
+                (spec.workload, spec.system, spec.gbuf_bytes,
+                 spec.lbuf_bytes, spec.row_reuse), []).append(spec)
+        if not chunks:
+            return
+        import concurrent.futures
+        import multiprocessing
+        import os
+        import sys
+        # spawn, not fork: the surrounding process may hold JAX (or other
+        # multithreaded) state that a forked child would deadlock on; the
+        # worker only needs the importable module-level registries anyway.
+        # Spawn re-executes __main__.__file__ in each worker — mask it
+        # when it is a pseudo-file (stdin / REPL pipes), which cannot be
+        # re-run and is not needed: _sweep_worker lives in this module.
+        main = sys.modules.get("__main__")
+        main_file = getattr(main, "__file__", None)
+        masked = main_file is not None and not os.path.exists(main_file)
+        if masked:
+            del main.__file__
+        try:
+            with concurrent.futures.ProcessPoolExecutor(
+                    max_workers=workers,
+                    mp_context=multiprocessing.get_context("spawn")) as pool:
+                for results, stats in pool.map(_sweep_worker,
+                                               list(chunks.values())):
+                    for r in results:
+                        self._results.setdefault(r.spec, r)
+                    for key, count in stats.items():
+                        self.stats[key] = self.stats.get(key, 0) + count
+        finally:
+            if masked:
+                main.__file__ = main_file
+
+    def pareto_frontier(self,
+                        workload: str,
+                        systems: str | Iterable[str] | None = None,
+                        gbufs: Sequence[int | None] = (None,),
+                        lbufs: Sequence[int | None] = (None,),
+                        backend: str = "burst-sim",
+                        policy: str = "row-aware",
+                        row_reuse: bool = True,
+                        engine: str = "columnar",
+                        workers: int = 1,
+                        csv_path: str | None = None) -> list[ParetoPoint]:
+        """Sweep the (GBUF, LBUF, system) design grid for one workload and
+        tag each point as Pareto-dominated or not over the PPA triple
+        (cycles, energy, area) — the frontier the paper's buffer-sizing
+        argument walks.  Returns every grid point in sweep order (filter
+        on ``dominated`` for the frontier); ``csv_path`` persists the
+        tagged grid via
+        :func:`repro.experiment.artifacts.write_pareto_csv`."""
+        results = self.sweep(workloads=workload, systems=systems,
+                             buffers=[(g, l) for g in gbufs for l in lbufs],
+                             backend=backend, policy=policy,
+                             row_reuse=row_reuse, engine=engine,
+                             workers=workers)
+        points = [ParetoPoint(result=r, dominated=d)
+                  for r, d in zip(results, pareto_tags(results))]
+        if csv_path is not None:
+            from repro.experiment.artifacts import write_pareto_csv
+            write_pareto_csv(csv_path, points, experiment=self)
+        return points
 
 
 # ---------------------------------------------------------------------------

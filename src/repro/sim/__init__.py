@@ -9,16 +9,23 @@ per-PIMcore operand-streaming occupancy.
 Modules:
 
 * :mod:`repro.sim.burst`     — ``Command`` → ``BurstOp`` lowering
-  (byte-conservation invariants).
-* :mod:`repro.sim.engine`    — event loop + per-bank / per-core / bus
-  resource timelines with per-row activation charges.
+  (byte-conservation invariants) plus the packed
+  :class:`~repro.sim.burst.ColumnarBursts` structure-of-arrays lowering
+  behind the fast path.
+* :mod:`repro.sim.engine`    — the reference event loop (per-bank /
+  per-core / bus resource timelines with per-row activation charges);
+  the golden oracle the fast path is checked against.
+* :mod:`repro.sim.engine_vec` — vectorized columnar replay, bit-identical
+  to the reference engine and ~10× faster end to end (requires numpy;
+  every other module here is pure stdlib).
 * :mod:`repro.sim.scheduler` — issue policies: ``serial`` (the paper's
   one-CMD-at-a-time controller), ``overlap`` (weight prefetch behind
   PIMcore compute) and ``row-aware`` (overlap plus per-bank same-row
-  burst batching).
+  burst batching — one lexsort per command on the columnar path).
 * :mod:`repro.sim.report`    — per-bank utilization, bus-occupancy
   breakdown, row activation/hit accounting, cross-check against the
-  analytic :func:`repro.pim.timing.simulate_cycles` model.
+  analytic :func:`repro.pim.timing.simulate_cycles` model (the ``engine``
+  knob runs the contract on either engine).
 
 The lowering is row-aware by default (restream payloads wrap onto their
 unique row footprint, so the engine's per-bank open-row tracker resolves
@@ -27,16 +34,33 @@ legacy fresh-row-per-chunk addressing the analytic cross-check contract
 is pinned to.
 """
 
-from repro.sim.burst import (BurstOp, Resource, check_conservation,
-                             check_row_geometry, lower_command, lower_trace)
+from repro.sim.burst import (BurstOp, ColumnarBursts, Resource,
+                             check_columnar, check_conservation,
+                             check_row_geometry, columnarize, lower_command,
+                             lower_trace, lower_trace_columnar)
 from repro.sim.engine import SimResult, simulate
 from repro.sim.report import (SimReport, assert_fidelity, cross_check,
                               make_report, policy_reports)
-from repro.sim.scheduler import POLICIES, batch_same_row, command_deps
+from repro.sim.scheduler import (POLICIES, batch_same_row,
+                                 batch_same_row_columnar, command_deps)
 
+# simulate_columnar is deliberately NOT in __all__: it resolves lazily via
+# __getattr__ (engine_vec imports numpy at module scope), and a star
+# import must stay pure-stdlib-safe
 __all__ = [
-    "BurstOp", "Resource", "lower_command", "lower_trace",
+    "BurstOp", "ColumnarBursts", "Resource", "lower_command", "lower_trace",
+    "lower_trace_columnar", "columnarize", "check_columnar",
     "check_conservation", "check_row_geometry", "SimResult", "simulate",
-    "POLICIES", "batch_same_row", "command_deps", "SimReport",
-    "assert_fidelity", "cross_check", "make_report", "policy_reports",
+    "POLICIES", "batch_same_row", "batch_same_row_columnar",
+    "command_deps", "SimReport", "assert_fidelity", "cross_check",
+    "make_report", "policy_reports",
 ]
+
+
+def __getattr__(name: str):
+    # engine_vec imports numpy at module scope; defer so the reference
+    # engine (pure stdlib) stays importable without it
+    if name == "simulate_columnar":
+        from repro.sim.engine_vec import simulate_columnar
+        return simulate_columnar
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -47,11 +47,15 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
+from typing import TYPE_CHECKING
 
 from repro.core.commands import CMD, Command, Trace
 from repro.pim.arch import PIMArch
 from repro.pim.events import core_banks, even_split, row_chunks
 from repro.pim.timing import banks_touched
+
+if TYPE_CHECKING:  # pragma: no cover - typing only (numpy is optional)
+    import numpy as np
 
 _SEQ = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)
 _PAR = (CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK)
@@ -70,6 +74,17 @@ class Resource(enum.Enum):
     BANK_PORT = "bank"     # a bank's 256-bit near-bank I/O port
     CORE_PORT = "core"     # a PIMcore's aggregate streaming port
     GBCORE = "gbcore"      # channel-level GBcore
+
+
+# Integer codes for the columnar lowering, ordered like the resource VALUE
+# strings ("bank" < "bus" < "core" < "gbcore") so a lexsort over codes
+# reproduces :func:`repro.sim.scheduler.batch_same_row`'s tuple sort
+# exactly.
+RES_SORT_CODE = {Resource.BANK_PORT: 0, Resource.BUS: 1,
+                 Resource.CORE_PORT: 2, Resource.GBCORE: 3}
+# code → Resource (index = code), for decoding and bandwidth lookup
+RES_BY_CODE = (Resource.BANK_PORT, Resource.BUS, Resource.CORE_PORT,
+               Resource.GBCORE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,3 +270,299 @@ def lower_trace(trace: Trace, arch: PIMArch, check: bool = True,
             check_row_geometry(c, ops, arch)
         lowered.append(ops)
     return lowered
+
+
+# ---------------------------------------------------------------------------
+# columnar lowering (structure-of-arrays fast path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ColumnarBursts:
+    """Packed structure-of-arrays lowering of a whole trace.
+
+    Burst *i* of command *c* lives at flat index ``offsets[c] + i`` in each
+    per-burst array; the arrays are exactly the :class:`BurstOp` fields
+    (``kind`` is recoverable from ``cmd_index`` + the source trace, so it
+    is not duplicated per burst).  ``rescode`` uses :data:`RES_SORT_CODE`
+    so a single lexsort reproduces the ``row-aware`` policy's per-command
+    batching.  Built by :func:`lower_trace_columnar` (vectorized, no
+    intermediate objects) or :func:`columnarize` (from an existing object
+    lowering); replayed by :func:`repro.sim.engine_vec.simulate_columnar`,
+    which is bit-identical to the reference object engine.
+
+    Equality is identity (``eq=False``) — compare arrays explicitly
+    (e.g. via ``np.array_equal``) where needed.
+    """
+
+    offsets: "np.ndarray"      # int64[n_cmds+1]: command segment bounds
+    cmd_index: "np.ndarray"    # int64[n]: source Command index (monotone)
+    rescode: "np.ndarray"      # int64[n]: RES_SORT_CODE of the resource
+    unit: "np.ndarray"         # int64[n]: bank/core id, 0 for BUS/GBCORE
+    bank: "np.ndarray"         # int64[n]: DRAM bank attribution (-1: none)
+    row: "np.ndarray"          # int64[n]: row id (-1: none)
+    nbytes: "np.ndarray"       # int64[n]
+    switch: "np.ndarray"       # int64[n]: bus re-target penalty cycles
+
+    @property
+    def n_cmds(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def n_bursts(self) -> int:
+        return int(self.offsets[-1])
+
+    def segment(self, idx: int) -> slice:
+        """Flat-index slice holding command ``idx``'s bursts."""
+        return slice(int(self.offsets[idx]), int(self.offsets[idx + 1]))
+
+    def permuted(self, order: "np.ndarray") -> "ColumnarBursts":
+        """A copy with the per-burst arrays reordered by ``order`` (the
+        offsets are kept — callers must permute within command segments
+        only, as :func:`repro.sim.scheduler.batch_same_row_columnar`
+        does)."""
+        return dataclasses.replace(
+            self, cmd_index=self.cmd_index[order],
+            rescode=self.rescode[order], unit=self.unit[order],
+            bank=self.bank[order], row=self.row[order],
+            nbytes=self.nbytes[order], switch=self.switch[order])
+
+
+def columnarize(lowered: list[list[BurstOp]]) -> ColumnarBursts:
+    """Pack an object lowering (``lower_trace`` output) into the columnar
+    layout, preserving burst order exactly."""
+    import numpy as np
+
+    n = sum(len(ops) for ops in lowered)
+    offsets = np.zeros(len(lowered) + 1, dtype=np.int64)
+    cmd_index = np.empty(n, dtype=np.int64)
+    rescode = np.empty(n, dtype=np.int64)
+    unit = np.empty(n, dtype=np.int64)
+    bank = np.empty(n, dtype=np.int64)
+    row = np.empty(n, dtype=np.int64)
+    nbytes = np.empty(n, dtype=np.int64)
+    switch = np.empty(n, dtype=np.int64)
+    pos = 0
+    for seg, ops in enumerate(lowered):
+        offsets[seg + 1] = offsets[seg] + len(ops)
+        for op in ops:
+            cmd_index[pos] = op.cmd_index
+            rescode[pos] = RES_SORT_CODE[op.resource]
+            unit[pos] = op.unit
+            bank[pos] = op.bank
+            row[pos] = op.row
+            nbytes[pos] = op.nbytes
+            switch[pos] = op.switch_cycles
+            pos += 1
+    return ColumnarBursts(offsets=offsets, cmd_index=cmd_index,
+                          rescode=rescode, unit=unit, bank=bank, row=row,
+                          nbytes=nbytes, switch=switch)
+
+
+def _emit_sequential(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
+                     out: list, np) -> None:
+    """Vectorized :func:`_lower_sequential`: same chunks, bank round-robin,
+    rows and first-visit switch charges, without per-burst objects."""
+    banks = np.asarray(list(c.banks) if c.banks
+                       else range(banks_touched(c, arch)), dtype=np.int64)
+    full, tail = divmod(c.bytes_total, arch.row_bytes)
+    n = full + (1 if tail else 0)
+    nbytes = np.full(n, arch.row_bytes, dtype=np.int64)
+    if tail:
+        nbytes[-1] = tail
+    i = np.arange(n, dtype=np.int64)
+    fr = _footprint_rows(c.bytes_total - c.restream_bytes, arch.row_bytes)
+    lr = i % fr if row_reuse else i
+    bank = banks[lr % len(banks)]
+    switch = np.zeros(n, dtype=np.int64)
+    _, first = np.unique(bank, return_index=True)
+    switch[first] = arch.bank_switch_cycles
+    out.append((np.full(n, idx, dtype=np.int64),
+                np.full(n, RES_SORT_CODE[Resource.BUS], dtype=np.int64),
+                np.zeros(n, dtype=np.int64), bank,
+                idx * _ROW_SPAN + lr, nbytes, switch))
+
+
+def _emit_parallel(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
+                   out: list, np) -> None:
+    """Vectorized :func:`_lower_parallel`: per-core then per-lane even
+    split; each lane's chunks stream through its own bank port."""
+    cores = max(c.concurrent_cores, 1)
+    base = idx * _ROW_SPAN
+    core_restream = even_split(c.restream_bytes, cores)
+    code = RES_SORT_CODE[Resource.BANK_PORT]
+    for core, core_bytes in enumerate(even_split(c.bytes_total, cores)):
+        banks = core_banks(core, arch, c)
+        lane_restream = even_split(core_restream[core], len(banks))
+        for lane, bank_bytes in enumerate(even_split(core_bytes,
+                                                     len(banks))):
+            full, tail = divmod(bank_bytes, arch.row_bytes)
+            n = full + (1 if tail else 0)
+            if not n:
+                continue
+            nbytes = np.full(n, arch.row_bytes, dtype=np.int64)
+            if tail:
+                nbytes[-1] = tail
+            i = np.arange(n, dtype=np.int64)
+            fr = _footprint_rows(bank_bytes - lane_restream[lane],
+                                 arch.row_bytes)
+            lr = i % fr if row_reuse else i
+            bank = banks[lane]
+            out.append((np.full(n, idx, dtype=np.int64),
+                        np.full(n, code, dtype=np.int64),
+                        np.full(n, bank, dtype=np.int64),
+                        np.full(n, bank, dtype=np.int64),
+                        base + lr, nbytes, np.zeros(n, dtype=np.int64)))
+
+
+def _emit_cmp(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
+              out: list, np) -> None:
+    """Vectorized :func:`_lower_cmp`: every core streams the same chunk
+    pattern through its own port; only the bank mapping differs per core."""
+    cores = max(c.concurrent_cores, 1)
+    full, tail = divmod(c.bank_stream_bytes, arch.row_bytes)
+    n = full + (1 if tail else 0)
+    if not n:
+        return
+    nbytes = np.full(n, arch.row_bytes, dtype=np.int64)
+    if tail:
+        nbytes[-1] = tail
+    i = np.arange(n, dtype=np.int64)
+    fr = _footprint_rows(c.bank_stream_bytes - c.restream_bytes,
+                         arch.row_bytes)
+    lr = i % fr if row_reuse else i
+    row = idx * _ROW_SPAN + lr
+    code = RES_SORT_CODE[Resource.CORE_PORT]
+    for core in range(cores):
+        banks = np.asarray(core_banks(core, arch, c), dtype=np.int64)
+        out.append((np.full(n, idx, dtype=np.int64),
+                    np.full(n, code, dtype=np.int64),
+                    np.full(n, core, dtype=np.int64),
+                    banks[lr % len(banks)], row, nbytes,
+                    np.zeros(n, dtype=np.int64)))
+
+
+def lower_trace_columnar(trace: Trace, arch: PIMArch, check: bool = True,
+                         row_reuse: bool = True) -> ColumnarBursts:
+    """Lower a full trace directly to the packed columnar layout.
+
+    Emits, per command, the same burst sequence as :func:`lower_trace` —
+    ``columnarize(lower_trace(trace, arch, row_reuse=rr))`` and
+    ``lower_trace_columnar(trace, arch, row_reuse=rr)`` are array-equal —
+    but builds NumPy arrays per stream instead of one Python object per
+    row chunk, which is what makes O(100)-point sweeps tractable.
+    ``check`` runs the vectorized equivalents of
+    :func:`check_conservation` / :func:`check_row_geometry`.
+    """
+    import numpy as np
+
+    parts: list[tuple] = []
+    offsets = np.zeros(len(trace) + 1, dtype=np.int64)
+    gb_code = RES_SORT_CODE[Resource.GBCORE]
+    zero = np.zeros(1, dtype=np.int64)
+    for idx, c in enumerate(trace):
+        c.validate()
+        mark = len(parts)
+        if c.kind in _SEQ:
+            if c.bytes_total:
+                _emit_sequential(idx, c, arch, row_reuse, parts, np)
+        elif c.kind in _PAR:
+            if c.bytes_total:
+                _emit_parallel(idx, c, arch, row_reuse, parts, np)
+        elif c.kind is CMD.PIMCORE_CMP:
+            _emit_cmp(idx, c, arch, row_reuse, parts, np)
+        elif c.kind is CMD.GBCORE_CMP:
+            parts.append((np.full(1, idx, dtype=np.int64),
+                          np.full(1, gb_code, dtype=np.int64),
+                          zero, zero - 1, zero - 1, zero, zero))
+        else:  # pragma: no cover - Command.validate rejects unknown kinds
+            raise ValueError(f"unknown command kind {c.kind}")
+        offsets[idx + 1] = offsets[idx] + sum(len(p[0])
+                                              for p in parts[mark:])
+    if parts:
+        cols = [np.concatenate([p[f] for p in parts]) for f in range(7)]
+    else:
+        cols = [np.empty(0, dtype=np.int64) for _ in range(7)]
+    packed = ColumnarBursts(offsets=offsets, cmd_index=cols[0],
+                            rescode=cols[1], unit=cols[2], bank=cols[3],
+                            row=cols[4], nbytes=cols[5], switch=cols[6])
+    if check:
+        check_columnar(trace, packed, arch)
+    return packed
+
+
+def check_columnar(trace: Trace, cols: ColumnarBursts,
+                   arch: PIMArch) -> None:
+    """Vectorized byte-conservation and row-geometry checks over a whole
+    columnar lowering — the same invariants :func:`check_conservation` and
+    :func:`check_row_geometry` enforce per command on object lowerings."""
+    import numpy as np
+
+    if len(cols.offsets) != len(trace) + 1:
+        raise AssertionError(
+            f"columnar lowering has {len(cols.offsets) - 1} segments for "
+            f"{len(trace)} commands")
+    csum = np.concatenate([np.zeros(1, dtype=np.int64),
+                           np.cumsum(cols.nbytes)])
+    moved = csum[cols.offsets[1:]] - csum[cols.offsets[:-1]]
+    over = cols.nbytes > arch.row_bytes
+    if over.any():
+        i = int(np.argmax(over))
+        c = trace[int(cols.cmd_index[i])]
+        raise AssertionError(
+            f"{c.kind.value} '{c.layer}': {int(cols.nbytes[i])} B chunk "
+            f"exceeds the {arch.row_bytes} B DRAM row")
+    # first visits: earliest burst per (cmd, bank, row) in emission order
+    m = cols.row >= 0
+    mi = np.flatnonzero(m)
+    first_visit = np.zeros(len(trace), dtype=np.int64)
+    if mi.size:
+        kc = cols.cmd_index[mi]
+        kb = cols.bank[mi]
+        kr = cols.row[mi]
+        bspan = int(kb.max()) + 1
+        rspan = int(kr.max()) + 1
+        if (int(kc.max()) + 1) * bspan * rspan < 1 << 62:
+            # pack the triple into one int64 key: a single stable argsort
+            # instead of a three-key lexsort
+            order = np.argsort((kc * bspan + kb) * rspan + kr,
+                               kind="stable")
+        else:  # pragma: no cover - needs astronomically sparse ids
+            order = np.lexsort((kr, kb, kc))
+        sc, sb, sr = kc[order], kb[order], kr[order]
+        first = np.ones(mi.size, dtype=bool)
+        first[1:] = ((sc[1:] != sc[:-1]) | (sb[1:] != sb[:-1])
+                     | (sr[1:] != sr[:-1]))
+        np.add.at(first_visit, sc[first], cols.nbytes[mi][order][first])
+        # distinct rows per (cmd, bank) must fit the bank
+        pair_first = np.ones(mi.size, dtype=bool)
+        pair_first[1:] = (sc[1:] != sc[:-1]) | (sb[1:] != sb[:-1])
+        grp = np.cumsum(pair_first) - 1          # (cmd, bank) group id
+        rows_in_grp = np.bincount(grp[first])    # distinct rows per group
+        bad = np.flatnonzero(rows_in_grp > arch.rows_per_bank)
+        if bad.size:
+            g = int(bad[0])
+            at = int(np.flatnonzero(grp == g)[0])
+            c = trace[int(sc[at])]
+            raise AssertionError(
+                f"{c.kind.value} '{c.layer}': {int(rows_in_grp[g])} rows "
+                f"assigned to bank {int(sb[at])} > "
+                f"rows_per_bank={arch.rows_per_bank}")
+    for idx, c in enumerate(trace):
+        if c.kind in _SEQ or c.kind in _PAR:
+            want = c.bytes_total
+            unique = c.bytes_total - c.restream_bytes
+        elif c.kind is CMD.PIMCORE_CMP:
+            want = c.bank_stream_bytes * max(c.concurrent_cores, 1)
+            unique = (c.bank_stream_bytes - c.restream_bytes) \
+                * max(c.concurrent_cores, 1)
+        else:
+            want = unique = 0
+        if int(moved[idx]) != want:
+            raise AssertionError(
+                f"{c.kind.value} '{c.layer}': bursts carry "
+                f"{int(moved[idx])} B, command describes {want} B")
+        if int(first_visit[idx]) < unique:
+            raise AssertionError(
+                f"{c.kind.value} '{c.layer}': first-visit bytes "
+                f"{int(first_visit[idx])} < unique footprint {unique} — "
+                f"row reuse folded non-restream data onto shared rows")

@@ -106,14 +106,17 @@ class SimResult:
 
 def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
              lowered: list[list[BurstOp]] | None = None,
-             row_reuse: bool = True) -> SimResult:
+             row_reuse: bool = True,
+             prebatched: bool = False) -> SimResult:
     """Replay a trace.  ``row_reuse`` selects the lowering's row addressing
     when ``lowered`` is not supplied (callers passing a pre-lowered trace
-    have already made that choice)."""
+    have already made that choice).  ``prebatched=True`` marks a lowering
+    whose ``row-aware`` same-row batching was already applied (e.g. the
+    Experiment's memoized ordering) so it is not re-sorted per call."""
     deps = command_deps(trace, policy)
     if lowered is None:
         lowered = lower_trace(trace, arch, row_reuse=row_reuse)
-    if policy in BATCHING_POLICIES:
+    if policy in BATCHING_POLICIES and not prebatched:
         lowered = [batch_same_row(ops) for ops in lowered]
 
     free: dict[tuple[Resource, int], int] = {}

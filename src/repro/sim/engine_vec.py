@@ -1,0 +1,310 @@
+"""Vectorized columnar burst replay — the fast path of :mod:`repro.sim`.
+
+Replays a :class:`repro.sim.burst.ColumnarBursts` lowering with NumPy
+kernels instead of the reference engine's per-burst Python loop, producing
+a :class:`repro.sim.engine.SimResult` **bit-identical** to
+:func:`repro.sim.engine.simulate` (makespan, per-command start/finish,
+:class:`~repro.pim.events.EventCounts`, per-bank row and busy breakdowns).
+The reference object engine stays as the golden oracle; this module is the
+throughput engine behind O(100)-point Pareto sweeps.
+
+Why vectorization is exact, not approximate: the reference engine's state
+decomposes into three independent computations.
+
+1. **Row resolution is order-only.**  ACTIVATE / HIT / CONFLICT depend
+   only on the burst *sequence*, never on timing: a burst HITs iff the
+   previous row-carrying burst on the same bank (in replay order) used the
+   same row (the open-row tracker always holds exactly that row), and a
+   non-hit is a CONFLICT iff an earlier non-hit of the same
+   ``(command, bank, row)`` exists (the command's ``opened`` set).  Both
+   reduce to run-length comparisons on sorted views: one stable sort by
+   bank for hits, one lexsort by ``(command, bank, row)`` for conflicts.
+
+2. **Per-resource timelines advance by segment sums.**  Within a command,
+   bursts on one resource timeline chain head-to-tail from
+   ``max(t0, free[resource])``, so each timeline's finish is that anchor
+   plus the *sum* of its burst durations — a segmented reduction per
+   ``(command, resource)`` group.  Only the tiny cross-command recursion
+   (ready-time ← dependency finishes, ``free`` carry-over) stays a Python
+   loop: O(commands × resources-per-command), not O(bursts).
+
+3. **Busy counters are masked sums** over the duration vector (bus
+   occupancy split, per-bank bus/port cycles, per-core streaming, per-kind
+   totals), independent of issue times entirely.
+
+The ``row-aware`` policy's same-row batching becomes a single lexsort per
+command segment (:func:`repro.sim.scheduler.batch_same_row_columnar`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.commands import CMD, Trace
+from repro.pim.arch import PIMArch
+from repro.pim.events import trace_events
+from repro.sim.burst import RES_SORT_CODE, ColumnarBursts, Resource, \
+    lower_trace_columnar
+from repro.sim.engine import SimResult
+from repro.sim.scheduler import BATCHING_POLICIES, batch_same_row_columnar, \
+    command_deps
+
+_TRANSFER = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK,
+             CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK)
+
+_BUS = RES_SORT_CODE[Resource.BUS]
+_CORE = RES_SORT_CODE[Resource.CORE_PORT]
+
+
+def _sum_by(keys: np.ndarray, vals: np.ndarray) -> dict[int, int]:
+    """``{key: vals.sum() over key}`` with exact integer sums — mirrors the
+    reference engine's dict accumulation (a key appears iff touched, even
+    when its total is 0).  Keys are bank/core ids — small non-negative
+    ints — so two bincounts beat a sort; the unique-based path covers
+    pathological id ranges."""
+    if keys.size == 0:
+        return {}
+    kmax = int(keys.max())
+    if kmax <= 1 << 20:
+        sums = np.bincount(keys, weights=vals, minlength=kmax + 1)
+        touched = np.bincount(keys, minlength=kmax + 1) > 0
+        # cycle sums stay far below 2**53, so the float weights are exact
+        return {int(k): int(sums[k]) for k in np.flatnonzero(touched)}
+    uk, inv = np.unique(keys, return_inverse=True)
+    sums = np.zeros(uk.size, dtype=np.int64)
+    np.add.at(sums, inv, vals)
+    return {int(k): int(s) for k, s in zip(uk, sums)}
+
+
+def _resolve_rows(cols: ColumnarBursts, arch: PIMArch):
+    """Classify every row-carrying burst as HIT / fresh ACTIVATE / CONFLICT
+    in replay order (see module docstring for why this is order-only) and
+    return the per-burst row-overhead cycles plus the aggregate counts."""
+    n = cols.n_bursts
+    row_cyc = np.zeros(n, dtype=np.int64)
+    m = (cols.row >= 0) & (cols.nbytes > 0)
+    mi = np.flatnonzero(m)
+    if mi.size == 0:
+        return row_cyc, 0, 0, 0, 0, {}
+    mb, mr, mc = cols.bank[mi], cols.row[mi], cols.cmd_index[mi]
+
+    # HIT ⇔ previous row-carrying burst on the same bank used the same row
+    o = np.argsort(mb, kind="stable")       # per-bank runs, replay-ordered
+    sb, sr = mb[o], mr[o]
+    hit_s = np.zeros(mi.size, dtype=bool)
+    hit_s[1:] = (sb[1:] == sb[:-1]) & (sr[1:] == sr[:-1])
+    hit = np.empty(mi.size, dtype=bool)
+    hit[o] = hit_s
+
+    # CONFLICT ⇔ non-hit with an earlier non-hit of the same (cmd,bank,row)
+    nh = np.flatnonzero(~hit)
+    kc, kb, kr = mc[nh], mb[nh], mr[nh]
+    cspan = int(kc.max()) + 1 if nh.size else 1
+    bspan = int(kb.max()) + 1 if nh.size else 1
+    rspan = int(kr.max()) + 1 if nh.size else 1
+    if cspan * bspan * rspan < 1 << 62:
+        # the common case: the triple packs into one int64 key, and a
+        # single stable argsort replaces the three-key lexsort
+        key = (kc * bspan + kb) * rspan + kr
+        o2 = np.argsort(key, kind="stable")
+        sk = key[o2]
+        first_s = np.ones(nh.size, dtype=bool)
+        first_s[1:] = sk[1:] != sk[:-1]
+    else:  # pragma: no cover - needs astronomically sparse ids
+        o2 = np.lexsort((kr, kb, kc))       # stable: replay order in groups
+        first_s = np.ones(nh.size, dtype=bool)
+        first_s[1:] = ((kc[o2][1:] != kc[o2][:-1])
+                       | (kb[o2][1:] != kb[o2][:-1])
+                       | (kr[o2][1:] != kr[o2][:-1]))
+    conflict_nh = np.empty(nh.size, dtype=bool)
+    conflict_nh[o2] = ~first_s
+    conflict = np.zeros(mi.size, dtype=bool)
+    conflict[nh] = conflict_nh
+
+    row_cyc[mi[~hit]] = arch.row_overhead_cycles
+    row_cyc[mi[conflict]] += arch.row_precharge_cycles
+
+    if int(mb.min()) >= 0 and int(mb.max()) <= 1 << 20:
+        nb = int(mb.max()) + 1
+        per_hit = np.bincount(mb[hit], minlength=nb)
+        per_conf = np.bincount(mb[conflict], minlength=nb)
+        per_act = np.bincount(mb[~hit & ~conflict], minlength=nb)
+        bank_rows = {int(b): {"act": int(per_act[b]),
+                              "hit": int(per_hit[b]),
+                              "conflict": int(per_conf[b])}
+                     for b in np.flatnonzero(per_act + per_hit + per_conf)}
+    else:  # pragma: no cover - pathological bank ids
+        ub, inv = np.unique(mb, return_inverse=True)
+        per_hit = np.bincount(inv[hit], minlength=ub.size)
+        per_conf = np.bincount(inv[conflict], minlength=ub.size)
+        per_act = np.bincount(inv[~hit & ~conflict], minlength=ub.size)
+        bank_rows = {int(b): {"act": int(a), "hit": int(h),
+                              "conflict": int(cf)}
+                     for b, a, h, cf in zip(ub, per_act, per_hit, per_conf)}
+    hit_bits = int(cols.nbytes[mi[hit]].sum()) * 8
+    return (row_cyc, int((~hit).sum()), int(hit.sum()),
+            int(conflict.sum()), hit_bits, bank_rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class _BurstProfile:
+    """Everything about a replay that depends only on burst ORDER and the
+    arch's per-burst charges — independent of the issue policy and of the
+    dependency DAG.  Memoized on the :class:`ColumnarBursts` instance so
+    replaying one lowering under several policies (the sweep's hot loop)
+    pays for row resolution, durations and busy counters once."""
+
+    grp_sum: np.ndarray        # per-(cmd, timeline) run duration sums
+    grp_res: np.ndarray
+    grp_unit: np.ndarray
+    g_lo: np.ndarray           # run-index range per command
+    g_hi: np.ndarray
+    per_cmd_dur: np.ndarray    # total burst cycles per command
+    activations: int
+    hits: int
+    conflicts: int
+    hit_bits: int
+    bank_rows: dict[int, dict[str, int]]
+    bus_busy: dict[str, int]
+    bank_bus_busy: dict[int, int]
+    bank_port_busy: dict[int, int]
+    core_busy: dict[int, int]
+
+
+def _burst_profile(cols: ColumnarBursts, arch: PIMArch) -> _BurstProfile:
+    key = (arch.bank_io_bytes_per_cycle, arch.bus_bytes_per_cycle,
+           arch.core_bank_bytes_per_cycle, arch.row_overhead_cycles,
+           arch.row_precharge_cycles)
+    cache = getattr(cols, "_profile_cache", None)
+    if cache is not None and key in cache:
+        return cache[key]
+
+    # per-burst durations: data phase + bus re-target + row overhead
+    bw = np.array([arch.bank_io_bytes_per_cycle, arch.bus_bytes_per_cycle,
+                   arch.core_bank_bytes_per_cycle, 1],
+                  dtype=np.int64)[cols.rescode]
+    transfer = np.where(cols.nbytes > 0, -(-cols.nbytes // bw), 0)
+    (row_cyc, activations, hits, conflicts, hit_bits,
+     bank_rows) = _resolve_rows(cols, arch)
+    dur = transfer + cols.switch + row_cyc
+
+    # segmented per-timeline duration sums.  No sort: the lowering emits
+    # each (resource, unit) stream contiguously, so timelines appear as
+    # runs — and even if a timeline recurs later in a command, chaining
+    # the runs through the ``free`` carry-over gives the same finishes
+    # (each run anchors at max(t0, free), which IS the previous run's
+    # finish once any burst ran).
+    n = cols.n_bursts
+    new_grp = np.ones(n, dtype=bool)
+    if n:
+        new_grp[1:] = ((cols.rescode[1:] != cols.rescode[:-1])
+                       | (cols.unit[1:] != cols.unit[:-1]))
+        interior = cols.offsets[1:-1]
+        new_grp[interior[interior < n]] = True   # never span a command
+    starts = np.flatnonzero(new_grp)
+    grp_sum = np.add.reduceat(dur, starts) if starts.size \
+        else np.empty(0, dtype=np.int64)
+
+    # busy counters: masked sums over the duration vector
+    bus_m = cols.rescode == _BUS
+    bus_busy = {"xfer": int(transfer[bus_m].sum()),
+                "switch": int(cols.switch[bus_m].sum()),
+                "row": int(row_cyc[bus_m].sum())}
+    has_bank = cols.bank >= 0
+    core_m = cols.rescode == _CORE
+    csum = np.concatenate([np.zeros(1, dtype=np.int64), np.cumsum(dur)])
+
+    profile = _BurstProfile(
+        grp_sum=grp_sum,
+        grp_res=cols.rescode[starts],
+        grp_unit=cols.unit[starts],
+        g_lo=np.searchsorted(starts, cols.offsets[:-1], side="left"),
+        g_hi=np.searchsorted(starts, cols.offsets[1:], side="left"),
+        per_cmd_dur=csum[cols.offsets[1:]] - csum[cols.offsets[:-1]],
+        activations=activations, hits=hits, conflicts=conflicts,
+        hit_bits=hit_bits, bank_rows=bank_rows, bus_busy=bus_busy,
+        bank_bus_busy=_sum_by(cols.bank[bus_m & has_bank],
+                              dur[bus_m & has_bank]),
+        bank_port_busy=_sum_by(cols.bank[~bus_m & has_bank],
+                               dur[~bus_m & has_bank]),
+        core_busy=_sum_by(cols.unit[core_m], dur[core_m]),
+    )
+    if cache is None:
+        cache = {}
+        object.__setattr__(cols, "_profile_cache", cache)  # frozen instance
+    cache[key] = profile
+    return profile
+
+
+def simulate_columnar(trace: Trace, arch: PIMArch, policy: str = "serial",
+                      cols: ColumnarBursts | None = None,
+                      row_reuse: bool = True,
+                      prebatched: bool = False) -> SimResult:
+    """Drop-in vectorized equivalent of :func:`repro.sim.engine.simulate`
+    over a columnar lowering.  ``cols`` of ``None`` lowers the trace here
+    (``row_reuse`` selecting the addressing mode, as in the reference);
+    ``prebatched=True`` marks a lowering whose ``row-aware`` batching was
+    already applied (e.g. the Experiment's memoized ordering)."""
+    deps = command_deps(trace, policy)      # validates the policy name too
+    if cols is None:
+        cols = lower_trace_columnar(trace, arch, row_reuse=row_reuse)
+    if policy in BATCHING_POLICIES and not prebatched:
+        cols = batch_same_row_columnar(cols)
+    p = _burst_profile(cols, arch)
+
+    # the only remaining sequential state: ready-time recursion over the
+    # dependency DAG and the per-timeline free-time carry-over
+    free: dict[tuple[int, int], int] = {}
+    cmd_start = [0] * len(trace)
+    cmd_finish = [0] * len(trace)
+    issue = arch.cmd_issue_cycles
+    grp_sum, grp_res, grp_unit = p.grp_sum, p.grp_res, p.grp_unit
+    for i, c in enumerate(trace):
+        ready = max((cmd_finish[j] for j in deps[i]), default=0)
+        if p.g_lo[i] == p.g_hi[i]:
+            # zero-byte transfer: not billed (mirrors the analytic model);
+            # an op-less compute command still pays controller issue.
+            cost = 0 if c.kind in _TRANSFER else issue
+            cmd_start[i] = ready
+            cmd_finish[i] = ready + cost
+            continue
+        t0 = ready + issue
+        end = t0
+        for g in range(p.g_lo[i], p.g_hi[i]):
+            key = (int(grp_res[g]), int(grp_unit[g]))
+            finish = max(t0, free.get(key, 0)) + int(grp_sum[g])
+            free[key] = finish
+            if finish > end:
+                end = finish
+        cmd_start[i] = t0
+        cmd_finish[i] = end
+
+    busy_by_kind: dict[str, int] = {}
+    for i, c in enumerate(trace):
+        if cols.offsets[i + 1] > cols.offsets[i]:
+            busy_by_kind[c.kind.value] = \
+                busy_by_kind.get(c.kind.value, 0) + int(p.per_cmd_dur[i])
+
+    events = dataclasses.replace(trace_events(trace, arch),
+                                 row_activations=p.activations,
+                                 row_hits=p.hits,
+                                 dram_hit_bits=p.hit_bits)
+
+    # dict results are copied out of the memoized profile so callers may
+    # mutate a SimResult without corrupting later replays of the lowering
+    return SimResult(
+        policy=policy,
+        makespan=max(cmd_finish, default=0),
+        cmd_start=cmd_start,
+        cmd_finish=cmd_finish,
+        bank_bus_busy=dict(p.bank_bus_busy),
+        bank_port_busy=dict(p.bank_port_busy),
+        core_busy=dict(p.core_busy),
+        bus_busy=dict(p.bus_busy),
+        row_conflicts=p.conflicts,
+        bank_rows={b: dict(v) for b, v in p.bank_rows.items()},
+        busy_by_kind=busy_by_kind,
+        events=events,
+    )

@@ -77,13 +77,27 @@ class SimReport:
         return out
 
 
+def _engine_fn(engine: str):
+    """The validated replay callable for an engine name.  ``columnar`` and
+    ``reference`` are bit-identical (enforced by tests/test_engine_vec.py);
+    the knob only picks the throughput implementation."""
+    if engine == "columnar":
+        from repro.sim.engine_vec import simulate_columnar
+        return simulate_columnar
+    if engine == "reference":
+        return simulate
+    raise ValueError(f"unknown engine {engine!r}; "
+                     "choose from ['columnar', 'reference']")
+
+
 def make_report(trace: Trace, arch: PIMArch, policy: str = "serial",
-                row_reuse: bool = True) -> SimReport:
+                row_reuse: bool = True,
+                engine: str = "reference") -> SimReport:
     analytic = simulate_cycles(trace, arch)
     return SimReport(
         system=arch.name,
         policy=policy,
-        result=simulate(trace, arch, policy, row_reuse=row_reuse),
+        result=_engine_fn(engine)(trace, arch, policy, row_reuse=row_reuse),
         analytic_total=analytic.total,
         analytic_activations=analytic.row_activations,
         row_reuse=row_reuse,
@@ -93,13 +107,21 @@ def make_report(trace: Trace, arch: PIMArch, policy: str = "serial",
 def policy_reports(trace: Trace, arch: PIMArch,
                    policies: tuple[str, ...] = ("serial", "overlap",
                                                 "row-aware"),
-                   row_reuse: bool = True) -> dict[str, SimReport]:
+                   row_reuse: bool = True,
+                   engine: str = "reference") -> dict[str, SimReport]:
     """Reports for several policies, lowering the trace and running the
     analytic model once (the lowering dominates the cost on big traces)."""
-    lowered = lower_trace(trace, arch, row_reuse=row_reuse)
+    replay = _engine_fn(engine)         # validates the engine name
     analytic = simulate_cycles(trace, arch)
-    return {p: SimReport(system=arch.name, policy=p,
-                         result=simulate(trace, arch, p, lowered=lowered),
+    if engine == "columnar":
+        from repro.sim.burst import lower_trace_columnar
+        cols = lower_trace_columnar(trace, arch, row_reuse=row_reuse)
+        results = {p: replay(trace, arch, p, cols=cols) for p in policies}
+    else:
+        lowered = lower_trace(trace, arch, row_reuse=row_reuse)
+        results = {p: replay(trace, arch, p, lowered=lowered)
+                   for p in policies}
+    return {p: SimReport(system=arch.name, policy=p, result=results[p],
                          analytic_total=analytic.total,
                          analytic_activations=analytic.row_activations,
                          row_reuse=row_reuse)
@@ -126,9 +148,12 @@ def assert_fidelity(rep: SimReport, tolerance: float = 0.05) -> SimReport:
 
 
 def cross_check(trace: Trace, arch: PIMArch,
-                tolerance: float = 0.05) -> SimReport:
+                tolerance: float = 0.05,
+                engine: str = "reference") -> SimReport:
     """Run the ``serial`` policy with row reuse disabled and assert
     agreement with the analytic model within ``tolerance`` (cycle totals)
-    and exactly (activation counts)."""
+    and exactly (activation counts).  ``engine`` extends the contract to
+    the columnar fast path — both engines must honour it independently."""
     return assert_fidelity(make_report(trace, arch, "serial",
-                                       row_reuse=False), tolerance)
+                                       row_reuse=False, engine=engine),
+                           tolerance)

@@ -32,10 +32,13 @@ controller ordering and data hazards.
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import TYPE_CHECKING, Callable
 
 from repro.core.commands import CMD, Trace
 from repro.sim.burst import BurstOp
+
+if TYPE_CHECKING:  # pragma: no cover - typing only (numpy is optional)
+    from repro.sim.burst import ColumnarBursts
 
 _GBUF_PATH = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)
 
@@ -82,6 +85,21 @@ def batch_same_row(ops: list[BurstOp]) -> list[BurstOp]:
     the command (the bounded reordering window)."""
     return sorted(ops, key=lambda op: (op.resource.value, op.unit, op.bank,
                                        op.row))
+
+
+def batch_same_row_columnar(cols: "ColumnarBursts") -> "ColumnarBursts":
+    """:func:`batch_same_row` over a columnar lowering: ONE stable lexsort
+    with the command segment as primary key reorders every command's bursts
+    by ``(resource, unit, bank, row)`` at once.  ``rescode`` is ordered
+    like ``Resource.value`` strings (:data:`repro.sim.burst.RES_SORT_CODE`),
+    so the resulting per-command order is identical to mapping
+    :func:`batch_same_row` over the object lowering — same invariants, same
+    bounded (intra-command) reordering window."""
+    import numpy as np
+
+    order = np.lexsort((cols.row, cols.bank, cols.unit, cols.rescode,
+                        cols.cmd_index))
+    return cols.permuted(order)
 
 
 POLICIES: dict[str, Callable[[Trace], list[list[int]]]] = {

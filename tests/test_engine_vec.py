@@ -1,0 +1,207 @@
+"""Tests for the columnar fast path (repro.sim.engine_vec + the packed
+ColumnarBursts lowering).
+
+The contract under test is BIT-IDENTITY with the reference object engine:
+the columnar lowering must emit the exact burst sequence ``lower_trace``
+emits, the columnar batching must reproduce ``batch_same_row``'s
+per-command order, and ``simulate_columnar`` must return a ``SimResult``
+equal field-for-field to ``simulate`` — makespan, per-command
+start/finish, EventCounts, per-bank row and busy breakdowns — across the
+full sim_sweep grid (every system × policy × row-reuse mode on
+end-to-end ResNet18), hand-crafted edge traces, and the strengthened
+fidelity contract (``cross_check(engine="columnar")``).
+
+Skips cleanly when numpy is not installed — the columnar path is the only
+part of repro.sim that needs it.
+"""
+
+import dataclasses
+
+import pytest
+
+np = pytest.importorskip("numpy")
+
+from repro.core.commands import CMD, Command  # noqa: E402
+from repro.pim.ppa import (HEADLINE_CONFIGS, SYSTEMS, build_workload,  # noqa: E402
+                           trace_for)
+from repro.sim.burst import (ColumnarBursts, check_columnar,  # noqa: E402
+                             columnarize, lower_trace, lower_trace_columnar)
+from repro.sim.engine import simulate  # noqa: E402
+from repro.sim.engine_vec import simulate_columnar  # noqa: E402
+from repro.sim.report import cross_check  # noqa: E402
+from repro.sim.scheduler import (batch_same_row,  # noqa: E402
+                                 batch_same_row_columnar)
+
+KB = 1024
+POLICIES = ("serial", "overlap", "row-aware")
+
+_FIELDS = ("offsets", "cmd_index", "rescode", "unit", "bank", "row",
+           "nbytes", "switch")
+
+
+def _system_trace(system, workload="ResNet18_First8Layers"):
+    gbuf, lbuf = HEADLINE_CONFIGS[system]
+    arch = SYSTEMS[system](gbuf_bytes=gbuf, lbuf_bytes=lbuf)
+    return trace_for(system, build_workload(workload), arch), arch
+
+
+def _assert_cols_equal(a: ColumnarBursts, b: ColumnarBursts, ctx=""):
+    for f in _FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), (ctx, f)
+
+
+def _edge_traces():
+    row = 2 * KB
+    return {
+        "empty": [],
+        "zero_byte": [Command(CMD.PIM_BK2GBUF, "z", bytes_total=0),
+                      Command(CMD.GBCORE_CMP, "p", flag="POOL", alu_ops=8)],
+        "hits": [Command(CMD.PIM_BK2GBUF, "w", bytes_total=3 * row,
+                         restream_bytes=2 * row, banks=(0,))],
+        "conflicts": [Command(CMD.PIM_BK2GBUF, "w", bytes_total=4 * row,
+                              restream_bytes=2 * row, banks=(0,))],
+        "mixed": [
+            Command(CMD.PIM_BK2GBUF, "w", bytes_total=5 * row + 7,
+                    prefetchable=True, banks=(0, 1, 2)),
+            Command(CMD.PIM_BK2LBUF, "t", bytes_total=9 * row + 3,
+                    concurrent_cores=4),
+            Command(CMD.PIMCORE_CMP, "c", flag="CONV_BN", macs=64,
+                    bank_stream_bytes=3 * row, restream_bytes=row,
+                    concurrent_cores=4),
+            Command(CMD.PIM_GBUF2BK, "o", bytes_total=2 * row, banks=(3,)),
+            Command(CMD.GBCORE_CMP, "p", flag="POOL", alu_ops=32),
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# lowering identity: the packed layout IS the object lowering
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", sorted(HEADLINE_CONFIGS))
+@pytest.mark.parametrize("row_reuse", [True, False])
+def test_columnar_lowering_matches_object_lowering(system, row_reuse):
+    trace, arch = _system_trace(system)
+    want = columnarize(lower_trace(trace, arch, row_reuse=row_reuse))
+    got = lower_trace_columnar(trace, arch, row_reuse=row_reuse)
+    _assert_cols_equal(want, got, system)
+    assert got.n_cmds == len(trace)
+    assert got.n_bursts == want.offsets[-1]
+
+
+@pytest.mark.parametrize("name,trace", sorted(_edge_traces().items()))
+def test_columnar_lowering_matches_on_edges(name, trace):
+    arch = SYSTEMS["Fused16"](32 * KB, 256)
+    for row_reuse in (True, False):
+        want = columnarize(lower_trace(trace, arch, row_reuse=row_reuse))
+        got = lower_trace_columnar(trace, arch, row_reuse=row_reuse)
+        _assert_cols_equal(want, got, name)
+
+
+def test_check_columnar_rejects_bad_lowerings():
+    arch = SYSTEMS["Fused16"](2 * KB, 0)
+    row = arch.row_bytes
+    trace = [Command(CMD.PIM_BK2GBUF, "w", bytes_total=2 * row, banks=(0,))]
+    cols = lower_trace_columnar(trace, arch)
+    check_columnar(trace, cols, arch)   # the real lowering passes
+    oversize = dataclasses.replace(cols, nbytes=cols.nbytes + 1)
+    with pytest.raises(AssertionError, match="exceeds the"):
+        check_columnar(trace, oversize, arch)
+    with pytest.raises(AssertionError, match="bursts carry"):
+        check_columnar(trace, dataclasses.replace(
+            cols, nbytes=cols.nbytes - 1), arch)
+    # folding unique data onto one shared row must be caught
+    folded = dataclasses.replace(cols, row=np.zeros_like(cols.row))
+    with pytest.raises(AssertionError, match="unique footprint"):
+        check_columnar(trace, folded, arch)
+
+
+# ---------------------------------------------------------------------------
+# batching identity: one lexsort == batch_same_row per command
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", sorted(HEADLINE_CONFIGS))
+def test_columnar_batching_matches_batch_same_row(system):
+    trace, arch = _system_trace(system)
+    lowered = lower_trace(trace, arch)
+    want = columnarize([batch_same_row(ops) for ops in lowered])
+    got = batch_same_row_columnar(columnarize(lowered))
+    _assert_cols_equal(want, got, system)
+
+
+# ---------------------------------------------------------------------------
+# engine bit-identity on the full sim_sweep grid (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", sorted(HEADLINE_CONFIGS))
+def test_columnar_engine_bit_identical_full_grid(system):
+    """Every sim_sweep grid point — end-to-end ResNet18, all policies,
+    both row-reuse modes — produces a SimResult EQUAL to the reference
+    engine's (dataclass equality covers makespan, cmd_start/cmd_finish,
+    busy breakdowns, bank_rows, conflicts and EventCounts)."""
+    trace, arch = _system_trace(system, "ResNet18_Full")
+    for row_reuse in (True, False):
+        lowered = lower_trace(trace, arch, row_reuse=row_reuse)
+        cols = lower_trace_columnar(trace, arch, row_reuse=row_reuse)
+        for policy in POLICIES:
+            ref = simulate(trace, arch, policy, lowered=lowered)
+            vec = simulate_columnar(trace, arch, policy, cols=cols)
+            assert vec == ref, (system, row_reuse, policy)
+            assert isinstance(vec.makespan, int)
+            assert all(isinstance(t, int) for t in vec.cmd_finish)
+
+
+@pytest.mark.parametrize("name,trace", sorted(_edge_traces().items()))
+@pytest.mark.parametrize("policy", POLICIES)
+def test_columnar_engine_bit_identical_on_edges(name, trace, policy):
+    arch = SYSTEMS["Fused4"](32 * KB, 256)
+    for row_reuse in (True, False):
+        ref = simulate(trace, arch, policy, row_reuse=row_reuse)
+        vec = simulate_columnar(trace, arch, policy, row_reuse=row_reuse)
+        assert vec == ref, (name, policy, row_reuse)
+
+
+def test_columnar_engine_with_precharge_knob():
+    """Conflict precharge charges flow through the vectorized row
+    resolution identically."""
+    arch = dataclasses.replace(SYSTEMS["Fused16"](32 * KB, 256),
+                               row_precharge_cycles=24)
+    row = arch.row_bytes
+    thrash = [Command(CMD.PIM_BK2GBUF, "w", bytes_total=4 * row,
+                      restream_bytes=2 * row, banks=(0,))]
+    ref = simulate(thrash, arch, "serial")
+    vec = simulate_columnar(thrash, arch, "serial")
+    assert vec == ref
+    assert vec.row_conflicts == 2
+
+
+def test_columnar_unknown_policy_raises():
+    trace, arch = _system_trace("Fused16")
+    with pytest.raises(ValueError, match="unknown policy"):
+        simulate_columnar(trace, arch, "speculative")
+
+
+# ---------------------------------------------------------------------------
+# the strengthened fidelity contract runs on the columnar engine too
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("system", sorted(HEADLINE_CONFIGS))
+def test_columnar_cross_check_fidelity(system):
+    trace, arch = _system_trace(system, "ResNet18_Full")
+    rep = cross_check(trace, arch, engine="columnar")
+    assert abs(rep.relative_error) <= 0.05
+    assert rep.result.row_activations == rep.analytic_activations
+    # and the reference engine agrees with the columnar gate to the cycle
+    ref = cross_check(trace, arch, engine="reference")
+    assert ref.simulated_total == rep.simulated_total
+
+
+def test_unknown_engine_raises():
+    trace, arch = _system_trace("Fused16")
+    with pytest.raises(ValueError, match="unknown engine"):
+        cross_check(trace, arch, engine="ramulator")
+    from repro.experiment import resolve_engine
+    with pytest.raises(ValueError, match="unknown engine"):
+        resolve_engine("ramulator")
+    assert resolve_engine("reference") == "reference"
+    assert resolve_engine("columnar") in ("columnar", "reference")

@@ -209,12 +209,16 @@ def test_buffer_sweep_reuses_graph_plan_and_tilings(monkeypatch):
 
 
 def test_burst_sim_policies_share_one_lowering():
+    pytest.importorskip("numpy")      # the columnar default needs it
     exp = Experiment()
     serial = exp.run(workload="ResNet18_First8Layers", system="Fused16",
                      backend="burst-sim", policy="serial")
     overlap = exp.run(workload="ResNet18_First8Layers", system="Fused16",
                       backend="burst-sim", policy="overlap")
-    assert exp.stats["lowerings"] == 1        # shared across policies
+    # the default engine is columnar: one columnar lowering shared across
+    # policies, and no object lowering at all
+    assert exp.stats["columnar_lowerings"] == 1
+    assert exp.stats["lowerings"] == 0
     assert exp.stats["trace_maps"] == 1       # and one trace mapping
     # the policy-independent analytic cycle model also ran once; energy now
     # comes from each replay's OBSERVED EventCounts, not the analytic model
@@ -224,7 +228,12 @@ def test_burst_sim_policies_share_one_lowering():
     # a different row-reuse mode is a different lowering (separate cache key)
     exp.run(workload="ResNet18_First8Layers", system="Fused16",
             backend="burst-sim", policy="serial", row_reuse=False)
-    assert exp.stats["lowerings"] == 2
+    assert exp.stats["columnar_lowerings"] == 2
+    # the reference engine shares ITS object lowering the same way
+    for policy in ("serial", "overlap"):
+        exp.run(workload="ResNet18_First8Layers", system="Fused16",
+                backend="burst-sim", policy=policy, engine="reference")
+    assert exp.stats["lowerings"] == 1
 
 
 # ---------------------------------------------------------------------------
@@ -407,6 +416,141 @@ def test_csv_round_trip_burst_sim_row_counts(tmp_path):
     assert row["row_reuse"] is True
     assert row["row_hits"] == r.events.row_hits > 0
     assert row["norm_cycles"] is None       # no experiment → no baseline
+
+
+# ---------------------------------------------------------------------------
+# engine knob, batched-ordering cache, parallel sweep, Pareto frontier
+# ---------------------------------------------------------------------------
+
+def test_engine_knob_results_identical():
+    """The columnar default and the reference engine are bit-identical
+    through the backend: same cycles, same events, same energy."""
+    pytest.importorskip("numpy")
+    exp = Experiment()
+    for policy in ("serial", "row-aware"):
+        col = exp.run(workload="ResNet18_First8Layers", system="Fused4",
+                      backend="burst-sim", policy=policy)
+        ref = exp.run(workload="ResNet18_First8Layers", system="Fused4",
+                      backend="burst-sim", policy=policy,
+                      engine="reference")
+        assert col.spec != ref.spec           # distinct grid points...
+        assert col.cycles == ref.cycles       # ...identical physics
+        assert col.energy_nj == ref.energy_nj
+        assert col.events == ref.events
+        assert col.detail["sim"].result == ref.detail["sim"].result
+
+
+def test_batched_ordering_cached_across_policy_runs():
+    """Perf micro-fix: the row-aware batched burst ordering is sorted once
+    per (lowering, policy, engine) and reused by later runs instead of
+    re-sorting inside every simulate() call."""
+    pytest.importorskip("numpy")
+    exp = Experiment()
+    r1 = exp.run(workload="ResNet18_First8Layers", system="Fused16",
+                 backend="burst-sim", policy="row-aware")
+    assert exp.stats["batchings"] == 1
+    # a fresh spec on the same lowering hits the cached ordering
+    exp._results.clear()
+    r2 = exp.run(workload="ResNet18_First8Layers", system="Fused16",
+                 backend="burst-sim", policy="row-aware")
+    assert exp.stats["batchings"] == 1
+    assert r1.cycles == r2.cycles
+    # non-batching policies never touch the batch cache
+    exp.run(workload="ResNet18_First8Layers", system="Fused16",
+            backend="burst-sim", policy="serial")
+    exp.run(workload="ResNet18_First8Layers", system="Fused16",
+            backend="burst-sim", policy="overlap")
+    assert exp.stats["batchings"] == 1
+
+
+def test_sweep_parallel_matches_serial(tmp_path):
+    """Experiment.sweep(workers=N): deterministic grid order, results
+    identical to the serial path, worker build stats merged back."""
+    pytest.importorskip("numpy")
+    grid = dict(workloads="ResNet18_First8Layers",
+                systems=("AiM-like", "Fused16"),
+                buffers=[(2 * KB, 0), (32 * KB, 256)],
+                backend="burst-sim", policy="row-aware")
+    serial = Experiment().sweep(**grid)
+    par_exp = Experiment()
+    parallel = par_exp.sweep(**grid, workers=2,
+                             csv_path=tmp_path / "par.csv")
+    assert [r.spec for r in parallel] == [r.spec for r in serial]
+    for s, p in zip(serial, parallel):
+        assert p.cycles == s.cycles
+        assert p.energy_nj == s.energy_nj
+        assert p.events == s.events
+    # worker stats were merged: the evaluations happened SOMEWHERE and
+    # were counted, and the parent then served every point from cache
+    assert par_exp.stats["backend_evals"] >= len(parallel)
+    assert par_exp.stats["result_hits"] >= len(parallel)
+    assert (tmp_path / "par.csv").exists()
+    # workers<=1 falls back to the serial path on the same Experiment
+    again = par_exp.sweep(**grid, workers=1)
+    assert [r.cycles for r in again] == [r.cycles for r in serial]
+
+
+def test_sweep_parallel_custom_registry_falls_back_to_serial():
+    """Workers rebuild Experiments over the module registries, so custom
+    in-process registries must take the serial path (and still work)."""
+    reg: Registry[WorkloadSpec] = Registry("workload")
+    reg.register("Tiny", WorkloadSpec("Tiny", _tiny_graph))
+    exp = Experiment(workloads=reg)
+    results = exp.sweep(workloads="Tiny", systems="Fused16", workers=4)
+    assert len(results) == 1 and results[0].cycles > 0
+
+
+def test_pareto_tags_synthetic():
+    """Dominance over (cycles, energy, area): strictly-better-somewhere,
+    no-worse-everywhere; ties dominate nothing."""
+    from repro.experiment import pareto_tags
+
+    class P:
+        def __init__(self, c, e, a):
+            self.cycles, self.energy_nj, self.area_mm2 = c, e, a
+
+    pts = [P(10, 10.0, 1.0),    # dominated by the next point
+           P(5, 5.0, 1.0),      # frontier
+           P(4, 9.0, 2.0),      # frontier (best cycles)
+           P(5, 5.0, 1.0),      # duplicate of the frontier point: kept
+           P(6, 5.0, 1.0)]      # dominated (worse cycles, same rest)
+    assert pareto_tags(pts) == [True, False, False, False, True]
+
+
+def test_pareto_frontier_grid_and_csv(tmp_path):
+    """pareto_frontier over a (GBUF × LBUF × system) grid under the
+    burst-sim backend: grid order preserved, dominance tags consistent,
+    CSV artifact round-trips with the dominated column."""
+    pytest.importorskip("numpy")
+    from repro.experiment import pareto_tags, read_results_csv
+    exp = Experiment()
+    path = tmp_path / "pareto" / "frontier.csv"
+    points = exp.pareto_frontier("ResNet18_First8Layers",
+                                 gbufs=(2 * KB, 8 * KB, 32 * KB),
+                                 lbufs=(0, 64, 256),
+                                 workers=1, csv_path=path)
+    assert len(points) == len(SYSTEMS) * 9
+    frontier = [p for p in points if not p.dominated]
+    assert frontier                          # something always survives
+    assert [p.dominated for p in points] == \
+        pareto_tags([p.result for p in points])
+    # no frontier point is dominated by ANY grid point (brute force)
+    for p in frontier:
+        for q in points:
+            better_all = (q.result.cycles <= p.result.cycles
+                          and q.result.energy_nj <= p.result.energy_nj
+                          and q.result.area_mm2 <= p.result.area_mm2)
+            strictly = (q.result.cycles < p.result.cycles
+                        or q.result.energy_nj < p.result.energy_nj
+                        or q.result.area_mm2 < p.result.area_mm2)
+            assert not (better_all and strictly)
+    rows = read_results_csv(path)
+    assert len(rows) == len(points)
+    for row, p in zip(rows, points):
+        assert row["dominated"] is p.dominated
+        assert row["cycles"] == p.result.cycles
+        assert row["engine"] == "columnar"
+        assert row["norm_cycles"] is not None
 
 
 # ---------------------------------------------------------------------------

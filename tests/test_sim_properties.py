@@ -11,7 +11,10 @@ before the transfer that produces its data retires:
   (the shared bus is in-order) and keeps prefetch depth ≤ 1,
 * the engine's issue times realise the dependency closure: a consumer's
   start time is never before any earlier non-prefetchable command's
-  finish, under either hoisting policy and either row-reuse mode.
+  finish, under either hoisting policy and either row-reuse mode,
+* the columnar fast-path engine (repro.sim.engine_vec) is bit-identical
+  to the reference object engine on random traces across all three
+  policies and both row-reuse modes (skipped without numpy).
 
 Skips cleanly when hypothesis is not installed (see requirements-dev.txt).
 """
@@ -118,6 +121,24 @@ def test_prefetch_respects_bus_order_and_depth(trace, policy):
         owners = [k for k in solid if k < p_prev]
         if owners:                              # prefetch depth ≤ 1
             assert _reaches(deps, p_cur, owners[-1])
+
+
+@settings(max_examples=40, deadline=None)
+@given(trace=traces, policy=st.sampled_from(sorted(POLICIES)),
+       system=st.sampled_from(("AiM-like", "Fused16", "Fused4")),
+       row_reuse=st.booleans())
+def test_columnar_engine_agrees_with_reference(trace, policy, system,
+                                               row_reuse):
+    """The vectorized columnar engine is bit-identical to the reference
+    object engine on random traces: same makespan, same per-command
+    start/finish, same activation/hit/conflict counts and per-bank
+    breakdown, for every policy and row-reuse mode."""
+    pytest.importorskip("numpy")
+    from repro.sim.engine_vec import simulate_columnar
+    arch = SYSTEMS[system](gbuf_bytes=2 * KB, lbuf_bytes=256)
+    ref = simulate(trace, arch, policy, row_reuse=row_reuse)
+    vec = simulate_columnar(trace, arch, policy, row_reuse=row_reuse)
+    assert vec == ref
 
 
 @settings(max_examples=30, deadline=None)
