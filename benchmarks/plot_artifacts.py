@@ -1,0 +1,167 @@
+"""Regenerate figures directly from persisted artifacts — no re-running.
+
+Every sweep driver persists its grid as CSV (``Experiment.sweep(csv_path=
+...)`` / ``pareto_frontier``) and every plan search as JSON
+(``benchmarks/plan_search.py``); this driver turns whatever it finds under
+the artifact directory (``$REPRO_ARTIFACT_DIR``, default ``artifacts/``)
+back into figures under ``<artifact_dir>/figs/``:
+
+* results CSVs  → normalized-cycles bar chart per workload (systems ×
+  buffer configs), falling back to absolute cycles when the artifact has
+  no normalized columns;
+* Pareto CSVs (a ``dominated`` column) → cycles-vs-energy scatter with
+  the frontier highlighted;
+* plan JSONs    → searched-vs-greedy cost bar chart across workloads.
+
+matplotlib is OPTIONAL: without it the driver prints the same summaries
+as text and exits 0 (CI's pure-stdlib entry-points job runs it that way),
+so artifact introspection never depends on a plotting stack.
+
+Run:  PYTHONPATH=src python -m benchmarks.plot_artifacts [artifact_dir]
+"""
+
+from __future__ import annotations
+
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+from repro.experiment.artifacts import default_artifact_dir, read_results_csv
+from repro.plan import read_plan_json
+
+
+def _matplotlib():
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+        return plt
+    except ImportError:
+        return None
+
+
+def _label(row: dict) -> str:
+    return row.get("config") or f"G{row['gbuf_bytes']}_L{row['lbuf_bytes']}"
+
+
+def plot_results_csv(path: Path, plt, out_dir: Path) -> str:
+    """One grouped bar chart per workload in a sweep artifact."""
+    rows = read_results_csv(path)
+    if not rows:
+        return f"{path.name}: empty"
+    is_pareto = "dominated" in rows[0]
+    if is_pareto:
+        return plot_pareto_csv(path, rows, plt, out_dir)
+    by_wl: dict[str, list[dict]] = defaultdict(list)
+    for r in rows:
+        by_wl[r["workload"]].append(r)
+    metric = "norm_cycles" if rows[0].get("norm_cycles") is not None \
+        else "cycles"
+    summary = []
+    for wl, wrows in by_wl.items():
+        points = [(f"{r['system']}/{_label(r)}", r[metric]) for r in wrows]
+        summary.append(f"{wl}: " + ", ".join(
+            f"{k}={v:.3g}" for k, v in points[:6])
+            + ("…" if len(points) > 6 else ""))
+        if plt is not None:
+            fig, ax = plt.subplots(
+                figsize=(max(6, 0.6 * len(points)), 4))
+            ax.bar(range(len(points)), [v for _, v in points])
+            ax.set_xticks(range(len(points)))
+            ax.set_xticklabels([k for k, _ in points], rotation=60,
+                               ha="right", fontsize=7)
+            ax.set_ylabel(metric)
+            ax.set_title(f"{path.stem} — {wl}")
+            fig.tight_layout()
+            fig.savefig(out_dir / f"{path.stem}_{wl}.png", dpi=120)
+            plt.close(fig)
+    return f"{path.name} [{metric}]: " + " | ".join(summary)
+
+
+def plot_pareto_csv(path: Path, rows: list[dict], plt,
+                    out_dir: Path) -> str:
+    frontier = [r for r in rows if r["dominated"] is False]
+    if plt is not None:
+        fig, ax = plt.subplots(figsize=(6, 4.5))
+        dom = [r for r in rows if r["dominated"]]
+        ax.scatter([r["cycles"] for r in dom],
+                   [r["energy_nj"] for r in dom],
+                   s=18, alpha=0.4, label="dominated")
+        ax.scatter([r["cycles"] for r in frontier],
+                   [r["energy_nj"] for r in frontier],
+                   s=36, marker="D", label="frontier")
+        for r in frontier:
+            ax.annotate(f"{r['system']}/{_label(r)}",
+                        (r["cycles"], r["energy_nj"]), fontsize=6,
+                        xytext=(3, 3), textcoords="offset points")
+        ax.set_xlabel("cycles")
+        ax.set_ylabel("energy (nJ)")
+        ax.set_title(f"{path.stem} — Pareto over (cycles, energy, area)")
+        ax.legend()
+        fig.tight_layout()
+        fig.savefig(out_dir / f"{path.stem}.png", dpi=120)
+        plt.close(fig)
+    return (f"{path.name}: {len(rows)} points, {len(frontier)} on the "
+            "frontier")
+
+
+def plot_plan_jsons(paths: list[Path], plt, out_dir: Path) -> str:
+    records = [read_plan_json(p) for p in paths]
+    records.sort(key=lambda r: (r["workload"], r["system"]))
+    summary = []
+    labels, greedy, searched = [], [], []
+    for rec in records:
+        labels.append(f"{rec['workload']}\n{rec['system']}")
+        greedy.append(rec.get("greedy_cost") or 0)
+        searched.append(rec["cost"])
+        summary.append(f"{rec['workload']}/{rec['system']}: "
+                       f"{rec['improvement']:.1%} vs greedy")
+    if plt is not None and records:
+        import numpy as np  # matplotlib implies numpy
+        x = np.arange(len(labels))
+        fig, ax = plt.subplots(figsize=(max(6, 1.1 * len(labels)), 4))
+        ax.bar(x - 0.2, greedy, width=0.4, label="greedy")
+        ax.bar(x + 0.2, searched, width=0.4, label="searched (DP)")
+        ax.set_xticks(x)
+        ax.set_xticklabels(labels, fontsize=7)
+        ax.set_ylabel(records[0].get("cost_metric", "cost"))
+        ax.set_title("fusion-partition search: greedy vs DP")
+        ax.legend()
+        fig.tight_layout()
+        fig.savefig(out_dir / "plan_search.png", dpi=120)
+        plt.close(fig)
+    return f"{len(records)} plan artifacts: " + "; ".join(summary)
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    art_dir = Path(argv[0]) if argv else default_artifact_dir()
+    if not art_dir.is_dir():
+        print(f"no artifact directory at {art_dir} — run a sweep or "
+              "benchmarks/plan_search first", file=sys.stderr)
+        return 1
+    plt = _matplotlib()
+    out_dir = art_dir / "figs"
+    if plt is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+    else:
+        print("matplotlib not available — printing artifact summaries "
+              "only, no figures rendered")
+
+    csvs = sorted(art_dir.glob("*.csv"))
+    plans = sorted(art_dir.glob("plan_*.json"))
+    if not csvs and not plans:
+        print(f"no artifacts under {art_dir}", file=sys.stderr)
+        return 1
+    for path in csvs:
+        print(plot_results_csv(path, plt, out_dir))
+    if plans:
+        print(plot_plan_jsons(plans, plt, out_dir))
+    if plt is not None:
+        made = sorted(p.name for p in out_dir.glob("*.png"))
+        print(f"wrote {len(made)} figures to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,73 @@
+"""Fusion-partition search walkthrough: from greedy rule to autotuned plan.
+
+Shows the `repro.plan` subsystem end to end on ResNet18:
+
+1. the paper's greedy splits (what every figure uses by default),
+2. the split-point DP finding a cheaper partition under the same cost
+   model the figures are built on,
+3. pinning the searched plan as a `SystemSpec` per-workload override and
+   proving pinned == freshly-searched parity,
+4. the JSON artifact round trip,
+5. the beam autotuner over the joint (grid × buffer) space.
+
+Pure stdlib — run:  PYTHONPATH=src python examples/plan_search.py
+"""
+
+from repro.experiment import Experiment, SYSTEMS
+from repro.plan import beam_search, load_plan, plan_record, read_plan_json, \
+    write_plan_json
+
+KB = 1024
+
+
+def main() -> None:
+    # a cloned system registry: overrides pinned here never leak into the
+    # process-wide registry other entry points share
+    exp = Experiment(systems=SYSTEMS.clone())
+
+    print("=== 1. the greedy rule (the paper's hand-derived splits) ===")
+    greedy = exp.run(workload="ResNet18_Full", system="Fused16",
+                     plan="greedy")
+    print(exp.plan("ResNet18_Full", (4, 4)).describe())
+    print(f"analytic cycles: {greedy.cycles}\n")
+
+    print("=== 2. split-point DP over the legal partition space ===")
+    sr = exp.search_plan("ResNet18_Full", "Fused16")
+    print(sr.plan.describe())
+    print(f"searched {sr.cost:.0f} vs greedy {sr.greedy_cost:.0f} cycles "
+          f"({sr.improvement:.1%} cheaper; {sr.evaluated_groups} candidate "
+          "groups priced)")
+    print("note: the searched split ≠ the paper's hand split — under this "
+          "reproduction's cost model\nthe hand split is in the search "
+          "space and is beaten (see README).\n")
+
+    print("=== 3. pin the searched plan as a per-workload override ===")
+    exp.pin_plan("ResNet18_Full", "Fused16", sr.plan)
+    pinned = exp.run(workload="ResNet18_Full", system="Fused16")
+    searched = exp.run(workload="ResNet18_Full", system="Fused16",
+                       plan="searched")
+    print(f"pinned(default)={pinned.cycles}  searched={searched.cycles}  "
+          f"parity: {pinned.cycles == searched.cycles}\n")
+
+    print("=== 4. JSON artifact round trip ===")
+    path = write_plan_json(
+        "artifacts/plan_example.json",
+        plan_record(sr, workload="ResNet18_Full", system="Fused16",
+                    gbuf_bytes=32 * KB, lbuf_bytes=256))
+    rec = read_plan_json(path)
+    reloaded = load_plan(rec, exp.graph("ResNet18_Full"))
+    print(f"wrote {path}; reloaded plan == searched plan: "
+          f"{reloaded.signature() == sr.plan.signature()}\n")
+
+    print("=== 5. beam over the joint (tile grid × GBUF/LBUF) space ===")
+    for c in beam_search(exp.graph("ResNet18_Full"),
+                         exp.systems.get("Fused16").arch_factory,
+                         buffers=[(8 * KB, 256), (32 * KB, 256)],
+                         beam_width=16, keep=3):
+        print(f"  grid={c.tile_grid} G{c.gbuf_bytes // KB}K_L"
+              f"{c.lbuf_bytes}: {c.cost:.0f} cycles  "
+              f"{c.plan.describe()}")
+
+
+if __name__ == "__main__":
+    main()

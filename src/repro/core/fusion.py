@@ -12,6 +12,15 @@ divisibility rule reproduces the paper's ResNet18 splits exactly:
 A fused group must also end at a "clean" tensor: no later layer may consume a
 tensor produced strictly inside the group (residual edges must not cross the
 boundary), which is why groups align with ResNet stage boundaries.
+
+Two planners share the legality rules here:
+
+* :func:`plan_fused` — the paper's greedy rule (grow the largest legal group
+  from the front, stage-aligned).  This reproduces the hand-derived splits.
+* :mod:`repro.plan` — the search subsystem (DP / beam) that treats the
+  partition as a decision variable; it enumerates groups through the public
+  :func:`is_legal_group` / :func:`group_legality` checks below, so greedy
+  plans are always inside its search space.
 """
 
 from __future__ import annotations
@@ -19,6 +28,11 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.graph import Graph, OpKind
+
+# Hashable identity of a plan's decisions (groups + tail), independent of the
+# Graph object: what `SystemSpec` per-workload overrides pin and what the
+# experiment driver keys its tiling/trace caches by.
+PlanSig = tuple[tuple[tuple[int, int, int, int], ...], int]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +62,67 @@ class FusionPlan:
         ]
         parts.append(f"layer-by-layer[{self.tail_start}:{len(self.graph)})")
         return " | ".join(parts)
+
+    def signature(self) -> PlanSig:
+        """Hashable plan identity: group tuples + tail start (graph-free)."""
+        return (tuple((g.start, g.stop, g.tiles_y, g.tiles_x)
+                      for g in self.groups), self.tail_start)
+
+    def to_dict(self) -> dict:
+        """JSON-friendly serialization (see :mod:`repro.plan.artifacts`)."""
+        return {
+            "graph": self.graph.name,
+            "num_layers": len(self.graph),
+            "groups": [[g.start, g.stop, g.tiles_y, g.tiles_x]
+                       for g in self.groups],
+            "tail_start": self.tail_start,
+        }
+
+
+def plan_from_signature(graph: Graph, sig: PlanSig, *,
+                        validate: bool = True) -> FusionPlan:
+    """Rebuild a :class:`FusionPlan` from its :meth:`~FusionPlan.signature`.
+
+    With ``validate`` (default) every group is re-checked against the
+    legality rules on THIS graph — a signature pinned for one workload
+    cannot silently be applied to another.
+    """
+    group_tuples, tail_start = sig
+    groups = tuple(FusedGroup(*t) for t in group_tuples)
+    pos = 0
+    for g in groups:
+        if g.start != pos:
+            raise ValueError(
+                f"plan signature is not contiguous from layer 0: group "
+                f"[{g.start}:{g.stop}) follows position {pos}")
+        pos = g.stop
+    if tail_start != pos or tail_start > len(graph):
+        raise ValueError(
+            f"plan signature tail_start={tail_start} inconsistent with "
+            f"groups ending at {pos} (graph has {len(graph)} layers)")
+    if validate:
+        for g in groups:
+            reason = group_legality(graph, g.start, g.stop, g.tiles_y,
+                                    g.tiles_x, min_group_len=1)
+            if reason is not None:
+                raise ValueError(
+                    f"plan signature illegal on graph {graph.name!r}: "
+                    f"group [{g.start}:{g.stop}) {reason}")
+    return FusionPlan(graph=graph, groups=groups, tail_start=tail_start)
+
+
+def plan_from_dict(graph: Graph, d: dict, *,
+                   validate: bool = True) -> FusionPlan:
+    """Inverse of :meth:`FusionPlan.to_dict`, checked against ``graph``."""
+    if d.get("graph") not in (None, graph.name):
+        raise ValueError(f"plan was serialized for graph {d['graph']!r}, "
+                         f"not {graph.name!r}")
+    if d.get("num_layers") not in (None, len(graph)):
+        raise ValueError(
+            f"plan was serialized for a {d['num_layers']}-layer graph; "
+            f"{graph.name!r} has {len(graph)} layers")
+    sig: PlanSig = (tuple(tuple(g) for g in d["groups"]), d["tail_start"])
+    return plan_from_signature(graph, sig, validate=validate)
 
 
 def _residual_crossings(g: Graph, start: int, stop: int) -> bool:
@@ -79,61 +154,129 @@ def _residual_crossings(g: Graph, start: int, stop: int) -> bool:
     return False
 
 
+# Machine-readable legality failure codes (see group_legality_coded).
+# "divide" and "residual" can RECOVER at a larger stop; every other code
+# only gets worse as the candidate group grows (prefix-monotone) — the
+# distinction repro.plan.space.legal_stops prunes its scan by.
+RECOVERABLE_CODES = frozenset({"divide", "residual"})
+
+
+def group_legality_coded(graph: Graph, start: int, stop: int, tiles_y: int,
+                         tiles_x: int, min_group_len: int = 2,
+                         stage_aligned: bool = True
+                         ) -> tuple[str, str] | None:
+    """Why [start, stop) is NOT a legal fused group, as a
+    ``(code, message)`` pair — ``None`` if it is legal.
+
+    The rules (shared by the greedy planner and the search subsystem):
+
+    (a) ``"divide"`` — the group's final output extent must divide the
+        tile grid evenly,
+    (b) ``"extent"`` — every layer keeps an output extent ≥ the tile grid,
+    (c) ``"residual"`` — no residual edge crosses the group boundary (the
+        "clean tensor" rule of §IV),
+    (d) ``"head"`` — every layer is PIMcore-executable (no FC / global
+        pools),
+    (e) ``"len"`` — the group spans at least ``min_group_len`` layers,
+    (f) ``"stage"`` — with ``stage_aligned``, the group closes before a
+        strided conv once it already contains a residual ADD — halo stays
+        bounded by one stage's downsampling (the rule behind the paper's
+        stage splits).
+
+    (``"bounds"`` flags indices outside the graph.)
+    """
+    if not (0 <= start < stop <= len(graph)):
+        return ("bounds",
+                f"bounds [{start}:{stop}) outside graph [0:{len(graph)})")
+    if stop - start < min_group_len:
+        return ("len", f"shorter than min_group_len={min_group_len}")
+    seen_add = False
+    for j in range(start, stop):
+        l = graph[j]
+        if l.kind is OpKind.FC or (l.kind.is_pool and l.oy == 1):
+            return ("head", f"layer {j} ({l.name}) is classifier-head "
+                            "work, never fused")
+        if l.oy < tiles_y or l.ox < tiles_x:
+            return ("extent",
+                    f"layer {j} ({l.name}) output {l.oy}x{l.ox} smaller "
+                    f"than {tiles_y}x{tiles_x} tile grid")
+        if l.kind is OpKind.ADD_RELU:
+            seen_add = True
+        if stage_aligned and j > start and seen_add and l.kind.is_conv \
+                and l.stride > 1:
+            return ("stage",
+                    f"layer {j} ({l.name}) strided conv after a residual "
+                    "ADD (stage-aligned rule)")
+    last = graph[stop - 1]
+    if last.oy % tiles_y or last.ox % tiles_x:
+        return ("divide",
+                f"layer {stop - 1} ({last.name}) output {last.oy}x{last.ox} "
+                f"does not divide the {tiles_y}x{tiles_x} tile grid")
+    if _residual_crossings(graph, start, stop):
+        return ("residual", "a residual edge crosses the group boundary")
+    return None
+
+
+def group_legality(graph: Graph, start: int, stop: int, tiles_y: int,
+                   tiles_x: int, min_group_len: int = 2,
+                   stage_aligned: bool = True) -> str | None:
+    """Why [start, stop) is NOT a legal fused group — ``None`` if it is
+    (the human-readable view of :func:`group_legality_coded`)."""
+    coded = group_legality_coded(graph, start, stop, tiles_y, tiles_x,
+                                 min_group_len=min_group_len,
+                                 stage_aligned=stage_aligned)
+    return None if coded is None else coded[1]
+
+
+def is_legal_group(graph: Graph, start: int, stop: int, tiles_y: int,
+                   tiles_x: int, min_group_len: int = 2,
+                   stage_aligned: bool = True) -> bool:
+    """Whether [start, stop) may execute as one fused kernel on a
+    ``tiles_y × tiles_x`` grid (see :func:`group_legality` for the rules)."""
+    return group_legality(graph, start, stop, tiles_y, tiles_x,
+                          min_group_len=min_group_len,
+                          stage_aligned=stage_aligned) is None
+
+
 def plan_fused(graph: Graph, tiles_y: int, tiles_x: int,
                min_group_len: int = 2, stage_aligned: bool = True) -> FusionPlan:
-    """Greedy planner: grow fused groups from the front of the graph while
-    (a) the group's final output extent divides the tile grid evenly,
-    (b) every spatial layer keeps an output extent ≥ the tile grid,
-    (c) no residual edge crosses the group boundary, and
-    (d) the layer is PIMcore-executable (everything except FC/global pools).
+    """Greedy planner: grow fused groups from the front of the graph, each
+    the LARGEST stop that passes :func:`is_legal_group` (rules a–f there).
 
-    With ``stage_aligned`` (default), a group also closes before a strided
-    conv once the group already contains a residual ADD — i.e. groups align
-    with ResNet stage boundaries, which keeps the receptive-field halo of a
+    With ``stage_aligned`` (default), a group closes before a strided conv
+    once the group already contains a residual ADD — i.e. groups align with
+    ResNet stage boundaries, which keeps the receptive-field halo of a
     group bounded by one stage's downsampling.  This reproduces the paper's
     ResNet18 splits exactly: 8+7 fused layers for Fused16 (4×4 tiles) and
     8+7+7 for Fused4 (2×2 tiles), with the remainder layer-by-layer (§V-3).
 
     Falls back to layer-by-layer for the rest (the paper's hybrid, §IV).
+    Raises ``ValueError`` when the tile grid admits NO fused prefix at all
+    (e.g. a grid that divides no layer's output): a silently degenerate
+    all-tail plan would defeat the point of a fused system — callers that
+    want pure layer-by-layer should use the baseline dataflow instead.
     """
     groups: list[FusedGroup] = []
     i = 0
     n = len(graph)
     while i < n:
-        # hard boundary from the stage-alignment rule
-        limit = n
-        if stage_aligned:
-            seen_add = False
-            for j in range(i, n):
-                l = graph[j]
-                if l.kind is OpKind.ADD_RELU:
-                    seen_add = True
-                if j > i and seen_add and l.kind.is_conv and l.stride > 1:
-                    limit = j
-                    break
-        # find the largest valid stop > i
         best_stop = None
-        for stop in range(limit, i + min_group_len - 1, -1):
-            seg_ok = True
-            for j in range(i, stop):
-                l = graph[j]
-                if l.kind is OpKind.FC or (l.kind.is_pool and l.oy == 1):
-                    seg_ok = False  # classifier head: never fused
-                    break
-                if l.oy < tiles_y or l.ox < tiles_x:
-                    seg_ok = False
-                    break
-            if not seg_ok:
-                continue
-            last = graph[stop - 1]
-            if last.oy % tiles_y or last.ox % tiles_x:
-                continue
-            if _residual_crossings(graph, i, stop):
-                continue
-            best_stop = stop
-            break
+        for stop in range(n, i + min_group_len - 1, -1):
+            if is_legal_group(graph, i, stop, tiles_y, tiles_x,
+                              min_group_len=min_group_len,
+                              stage_aligned=stage_aligned):
+                best_stop = stop
+                break
         if best_stop is None:
             break
         groups.append(FusedGroup(i, best_stop, tiles_y, tiles_x))
         i = best_stop
+    if not groups:
+        reason = group_legality(graph, 0, min(n, min_group_len), tiles_y,
+                                tiles_x, min_group_len=min_group_len,
+                                stage_aligned=stage_aligned)
+        raise ValueError(
+            f"{graph.name}: {tiles_y}x{tiles_x} tile grid admits no fused "
+            f"prefix (first candidate group [0:{min(n, min_group_len)}): "
+            f"{reason})")
     return FusionPlan(graph=graph, groups=tuple(groups), tail_start=i)

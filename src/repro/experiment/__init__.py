@@ -28,6 +28,13 @@ Modules:
   (``Experiment.sweep(..., csv_path=...)``), so figures regenerate
   without re-running.
 
+The fusion partition is itself an experiment axis: ``EvalSpec.plan``
+selects the plan source (``"default"`` honors per-workload
+``SystemSpec.plan_overrides``; ``"searched"`` runs the
+:mod:`repro.plan` DP at the spec's buffer point), and
+``Experiment.search_plan()`` / ``Experiment.pin_plan()`` drive the
+autotuner directly.
+
 The legacy ``repro.pim.ppa`` entry points are thin shims over
 :func:`default_experiment`.
 """

@@ -30,8 +30,8 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 
 CSV_FIELDS = (
     "workload", "system", "config", "backend", "policy", "row_reuse",
-    "engine", "gbuf_bytes", "lbuf_bytes", "cycles", "energy_nj", "area_mm2",
-    "cross_bank_bytes", "row_activations", "row_hits",
+    "engine", "plan", "gbuf_bytes", "lbuf_bytes", "cycles", "energy_nj",
+    "area_mm2", "cross_bank_bytes", "row_activations", "row_hits",
     "norm_cycles", "norm_energy", "norm_area",
 )
 
@@ -70,6 +70,7 @@ def result_row(result: "EvalResult",
         # the engine that actually ran: burst-sim detail carries the
         # resolved engine (spec.engine may have fallen back without numpy)
         "engine": result.detail.get("engine", spec.engine),
+        "plan": spec.plan,
         "gbuf_bytes": spec.gbuf_bytes,
         "lbuf_bytes": spec.lbuf_bytes,
         "cycles": result.cycles,

@@ -49,6 +49,11 @@ class EvalSpec:
     ``columnar`` fast path (the default; falls back to ``reference`` when
     numpy is unavailable) or the ``reference`` object engine — the two are
     bit-identical, so the knob never changes results, only throughput.
+    ``plan`` selects the fusion-partition source for fused systems:
+    ``"default"`` (the system's per-workload override when pinned, else
+    the greedy rule), ``"greedy"`` (always the greedy rule), or
+    ``"searched"`` (the DP optimum of :mod:`repro.plan`, searched at this
+    spec's resolved buffer point).  Ignored by layer-by-layer systems.
     """
 
     workload: str
@@ -59,6 +64,7 @@ class EvalSpec:
     policy: str = "serial"
     row_reuse: bool = True
     engine: str = "columnar"
+    plan: str = "default"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Generic, Iterator, TypeVar
 
+from repro.core.fusion import PlanSig
 from repro.core.graph import Graph
 from repro.pim.arch import PIMArch
 
@@ -52,6 +53,14 @@ class Registry(Generic[T]):
 
     def names(self) -> tuple[str, ...]:
         return tuple(self._items)
+
+    def clone(self) -> "Registry[T]":
+        """A shallow copy: same entries, independent mutation — the way to
+        pin per-workload plan overrides without touching the process-wide
+        registry (pass the clone to ``Experiment(systems=...)``)."""
+        out: Registry[T] = Registry(self.kind)
+        out._items = dict(self._items)
+        return out
 
     def items(self) -> Iterator[tuple[str, T]]:
         return iter(self._items.items())
@@ -115,6 +124,11 @@ class SystemSpec:
     grid (its tile count must equal the arch's PIMcore count).
     ``default_buffers`` is the system's headline (gbuf_bytes, lbuf_bytes)
     design point (§V-3 / §V-D), used when an EvalSpec leaves them unset.
+    ``plan_overrides`` pins a fusion-plan signature per workload name
+    (:data:`repro.core.fusion.PlanSig`, as (workload, signature) pairs):
+    when present, the ``"default"`` plan source maps that workload with
+    the pinned partition instead of the greedy rule — how a searched plan
+    (``Experiment.search_plan`` / ``pin_plan``) is reproduced exactly.
     """
 
     name: str
@@ -122,6 +136,7 @@ class SystemSpec:
     tile_grid: tuple[int, int] | None = None
     default_buffers: tuple[int, int] = (2 * 1024, 0)
     description: str = ""
+    plan_overrides: tuple[tuple[str, PlanSig], ...] = ()
 
     def make_arch(self, gbuf_bytes: int | None = None,
                   lbuf_bytes: int | None = None) -> PIMArch:
@@ -129,6 +144,30 @@ class SystemSpec:
         return self.arch_factory(
             gbuf_bytes=g0 if gbuf_bytes is None else gbuf_bytes,
             lbuf_bytes=l0 if lbuf_bytes is None else lbuf_bytes)
+
+    def plan_override(self, workload: str) -> PlanSig | None:
+        """The pinned plan signature for ``workload``, if any."""
+        for name, sig in self.plan_overrides:
+            if name == workload:
+                return sig
+        return None
+
+    def with_plan_override(self, workload: str,
+                           sig: PlanSig | None) -> "SystemSpec":
+        """A copy of this spec with ``workload``'s plan pinned to ``sig``
+        (``None`` unpins).  The tile grid of every group must match the
+        system's grid — an override cannot smuggle in a different grid."""
+        if sig is not None:
+            for start, stop, ty, tx in sig[0]:
+                if (ty, tx) != self.tile_grid:
+                    raise ValueError(
+                        f"override group [{start}:{stop}) grid {ty}x{tx} "
+                        f"!= system {self.name} grid {self.tile_grid}")
+        kept = tuple((w, s) for w, s in self.plan_overrides
+                     if w != workload)
+        if sig is not None:
+            kept += ((workload, sig),)
+        return dataclasses.replace(self, plan_overrides=kept)
 
 
 SYSTEMS: Registry[SystemSpec] = Registry("system")

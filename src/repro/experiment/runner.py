@@ -26,7 +26,8 @@ from typing import Any, Iterable, Sequence
 
 from repro.core import dataflow
 from repro.core.commands import Trace
-from repro.core.fusion import FusionPlan, plan_fused
+from repro.core.fusion import (FusionPlan, PlanSig, plan_from_signature,
+                               plan_fused)
 from repro.core.graph import Graph
 from repro.pim.arch import PIMArch
 from repro.experiment import systems as _systems  # registers built-ins
@@ -89,16 +90,18 @@ class Experiment:
         self.backends = backends
         self.baseline_system = baseline_system
         self.stats: dict[str, int] = {
-            "graph_builds": 0, "plan_builds": 0, "tiling_builds": 0,
+            "graph_builds": 0, "plan_builds": 0, "plan_searches": 0,
+            "tiling_builds": 0,
             "trace_maps": 0, "trace_hits": 0, "lowerings": 0,
             "columnar_lowerings": 0, "batchings": 0,
             "cycle_models": 0, "energy_models": 0,
             "backend_evals": 0, "result_hits": 0,
         }
         self._graphs: dict[str, Graph] = {}
-        self._plans: dict[tuple[str, int, int], FusionPlan] = {}
-        self._tilings: dict[tuple[str, int, int], dict] = {}
-        self._traces: dict[tuple[str, str, int, int], Trace] = {}
+        self._plans: dict[tuple, FusionPlan] = {}
+        self._searches: dict[tuple[str, str, int, int], Any] = {}
+        self._tilings: dict[tuple[str, PlanSig], dict] = {}
+        self._traces: dict[tuple, Trace] = {}
         # identity-keyed per-(trace, arch[, extra]) derivations (lowered
         # bursts keyed by row-reuse mode, analytic cycle/energy reports):
         # {key: (trace_ref, value)} — the stored strong ref both keeps the
@@ -125,8 +128,43 @@ class Experiment:
             self._graphs[workload] = g
         return g
 
-    def plan(self, workload: str, tile_grid: tuple[int, int]) -> FusionPlan:
-        key = (workload, *tile_grid)
+    def plan(self, workload: str, tile_grid: tuple[int, int],
+             system: str | None = None, source: str = "default",
+             gbuf_bytes: int | None = None,
+             lbuf_bytes: int | None = None) -> FusionPlan:
+        """The fusion plan for a workload on a tile grid.
+
+        ``source`` selects how the partition is decided (the
+        ``EvalSpec.plan`` knob): ``"greedy"`` is the paper's rule;
+        ``"default"`` additionally honors the system's pinned per-workload
+        override (:attr:`SystemSpec.plan_overrides`) when ``system`` is
+        given; ``"searched"`` is the DP optimum of
+        :meth:`search_plan` at the (resolved) buffer point — the only
+        source whose plan depends on buffer sizes.
+        """
+        if source == "searched":
+            if system is None:
+                raise ValueError("plan source 'searched' needs the system "
+                                 "(the search costs its arch)")
+            return self.search_plan(workload, system, gbuf_bytes,
+                                    lbuf_bytes).plan
+        if source not in ("default", "greedy"):
+            raise ValueError(f"unknown plan source {source!r}; choose from "
+                             "['default', 'greedy', 'searched']")
+        if source == "default" and system is not None:
+            sig = self.systems.get(system).plan_override(workload)
+            if sig is not None:
+                # keyed by the SIGNATURE, not the system: re-registering a
+                # spec with a different override can never serve a stale
+                # plan, and systems sharing an override share the build
+                key = ("override", workload, sig)
+                p = self._plans.get(key)
+                if p is None:
+                    p = plan_from_signature(self.graph(workload), sig)
+                    self.stats["plan_builds"] += 1
+                    self._plans[key] = p
+                return p
+        key = ("greedy", workload, *tile_grid)
         p = self._plans.get(key)
         if p is None:
             p = plan_fused(self.graph(workload), *tile_grid)
@@ -134,34 +172,106 @@ class Experiment:
             self._plans[key] = p
         return p
 
-    def tilings(self, workload: str, tile_grid: tuple[int, int]) -> dict:
+    def search_plan(self, workload: str, system: str,
+                    gbuf_bytes: int | None = None,
+                    lbuf_bytes: int | None = None,
+                    trace_cost=None) -> Any:
+        """DP-search the fusion partition for (workload, system) at a
+        buffer point (defaults: the system's design point) — returns the
+        :class:`repro.plan.dp.SearchResult` (memoized per resolved point;
+        custom ``trace_cost`` callables bypass the memo)."""
+        spec = self.systems.get(system)
+        if spec.tile_grid is None:
+            raise ValueError(f"system {system!r} runs the layer-by-layer "
+                             "dataflow; there is no partition to search")
+        g0, l0 = spec.default_buffers
+        gbuf = g0 if gbuf_bytes is None else gbuf_bytes
+        lbuf = l0 if lbuf_bytes is None else lbuf_bytes
+        key = (workload, system, gbuf, lbuf)
+        if trace_cost is None:
+            hit = self._searches.get(key)
+            if hit is not None:
+                return hit
+        from repro.plan.dp import search_partition
+        sr = search_partition(self.graph(workload),
+                              spec.make_arch(gbuf, lbuf),
+                              *spec.tile_grid, trace_cost=trace_cost)
+        self.stats["plan_searches"] += 1
+        if trace_cost is None:
+            self._searches[key] = sr
+        return sr
+
+    def pin_plan(self, workload: str, system: str,
+                 plan: FusionPlan | None = None) -> "SystemSpec":
+        """Pin a fusion plan as the system's per-workload override, so
+        ``plan="default"`` specs reproduce it from now on.  ``plan=None``
+        searches first (:meth:`search_plan` at the system's design point).
+        Re-registers the system spec (in THIS experiment's registry — pass
+        ``SYSTEMS.clone()`` to the constructor to keep the process-wide
+        registry untouched) and drops the caches the override invalidates.
+        """
+        spec = self.systems.get(system)
+        if plan is None:
+            plan = self.search_plan(workload, system).plan
+        graph = self.graph(workload)
+        if plan.graph.name != graph.name or len(plan.graph) != len(graph):
+            raise ValueError(
+                f"plan was built for graph {plan.graph.name!r} "
+                f"({len(plan.graph)} layers), not workload {workload!r} "
+                f"({graph.name!r}, {len(graph)} layers)")
+        new_spec = spec.with_plan_override(workload, plan.signature())
+        self.systems.register(system, new_spec, replace=True)
+        self._traces = {k: v for k, v in self._traces.items()
+                        if not (k[0] == workload and k[1] == system)}
+        self._results = {s: r for s, r in self._results.items()
+                         if not (s.workload == workload
+                                 and s.system == system
+                                 and s.plan == "default")}
+        return new_spec
+
+    def tilings(self, workload: str, tile_grid: tuple[int, int],
+                plan: FusionPlan | None = None) -> dict:
         """Buffer-independent tiling solutions for every fused group —
-        the expensive geometry a (GBUF, LBUF) sweep must never redo."""
-        key = (workload, *tile_grid)
+        the expensive geometry a (GBUF, LBUF) sweep must never redo.
+        Keyed by the plan's signature, so every plan source (greedy,
+        override, searched) shares tilings for identical partitions."""
+        if plan is None:
+            plan = self.plan(workload, tile_grid)
+        key = (workload, plan.signature())
         t = self._tilings.get(key)
         if t is None:
-            t = dataflow.plan_tilings(self.plan(workload, tile_grid))
+            t = dataflow.plan_tilings(plan)
             self.stats["tiling_builds"] += 1
             self._tilings[key] = t
         return t
 
     def trace(self, workload: str, system: str, gbuf_bytes: int,
-              lbuf_bytes: int) -> Trace:
-        """The mapped command trace for one fully-resolved grid point."""
-        key = (workload, system, gbuf_bytes, lbuf_bytes)
+              lbuf_bytes: int, plan: str = "default") -> Trace:
+        """The mapped command trace for one fully-resolved grid point.
+        Keyed by the RESOLVED plan signature, so plan sources that agree
+        on the partition share one trace."""
+        spec = self.systems.get(system)
+        fused_plan: FusionPlan | None = None
+        if spec.tile_grid is None:
+            plan_key = None
+        else:
+            fused_plan = self.plan(workload, spec.tile_grid, system=system,
+                                   source=plan, gbuf_bytes=gbuf_bytes,
+                                   lbuf_bytes=lbuf_bytes)
+            plan_key = fused_plan.signature()
+        key = (workload, system, gbuf_bytes, lbuf_bytes, plan_key)
         tr = self._traces.get(key)
         if tr is not None:
             self.stats["trace_hits"] += 1
             return tr
-        spec = self.systems.get(system)
         arch = spec.make_arch(gbuf_bytes, lbuf_bytes)
-        if spec.tile_grid is None:
+        if fused_plan is None:
             tr = dataflow.map_baseline(self.graph(workload), arch)
         else:
-            tr = dataflow.map_pimfused(self.plan(workload, spec.tile_grid),
-                                       arch,
-                                       tilings=self.tilings(workload,
-                                                            spec.tile_grid))
+            tr = dataflow.map_pimfused(
+                fused_plan, arch,
+                tilings=self.tilings(workload, spec.tile_grid,
+                                     plan=fused_plan))
         self.stats["trace_maps"] += 1
         self._traces[key] = tr
         return tr
@@ -259,7 +369,7 @@ class Experiment:
         sys_spec = self.systems.get(spec.system)
         arch = sys_spec.make_arch(spec.gbuf_bytes, spec.lbuf_bytes)
         trace = self.trace(spec.workload, spec.system, spec.gbuf_bytes,
-                           spec.lbuf_bytes)
+                           spec.lbuf_bytes, plan=spec.plan)
         result = backend.evaluate(trace, arch, spec, ctx=self)
         self.stats["backend_evals"] += 1
         self._results[spec] = result
@@ -294,6 +404,7 @@ class Experiment:
               policy: str = "serial",
               row_reuse: bool = True,
               engine: str = "columnar",
+              plan: str = "default",
               workers: int = 1,
               csv_path: str | None = None) -> list[EvalResult]:
         """Evaluate the cross product workloads × systems × buffer points.
@@ -322,24 +433,27 @@ class Experiment:
         specs = [EvalSpec(workload=w, system=s, gbuf_bytes=g,
                           lbuf_bytes=l, backend=backend,
                           policy=policy, row_reuse=row_reuse,
-                          engine=engine)
+                          engine=engine, plan=plan)
                  for w in workloads for s in systems for g, l in points]
-        if workers > 1:
-            batch = list(specs)
-            if csv_path is not None:
-                # the CSV's normalized columns need each workload's
-                # baseline — evaluate those on the pool too instead of
-                # serially in the parent afterwards
-                batch += [EvalSpec(workload=w, system=self.baseline_system,
-                                   backend=backend, policy=policy,
-                                   row_reuse=row_reuse, engine=engine)
-                          for w in workloads]
-            self._run_parallel(batch, workers)
-        results = [self.run(spec) for spec in specs]
+        baselines = [EvalSpec(workload=w, system=self.baseline_system,
+                              backend=backend, policy=policy,
+                              row_reuse=row_reuse, engine=engine)
+                     for w in workloads] if csv_path is not None else []
+        results = self._dispatch(specs, workers, baselines)
         if csv_path is not None:
             from repro.experiment.artifacts import write_results_csv
             write_results_csv(csv_path, results, experiment=self)
         return results
+
+    def _dispatch(self, specs: Sequence[EvalSpec], workers: int,
+                  baselines: Sequence[EvalSpec] = ()) -> list[EvalResult]:
+        """Evaluate specs in order: one pool pass over the whole batch
+        when ``workers > 1`` (plus the ``baselines`` a CSV's normalized
+        columns will need — evaluated on the pool rather than serially in
+        the parent afterwards), then serve everything from the memo."""
+        if workers > 1:
+            self._run_parallel(list(specs) + list(baselines), workers)
+        return [self.run(spec) for spec in specs]
 
     def _run_parallel(self, specs: Sequence[EvalSpec], workers: int) -> None:
         """Evaluate not-yet-cached specs on a process pool and merge the
@@ -357,6 +471,12 @@ class Experiment:
         if (self.workloads is not WORKLOADS or self.systems is not SYSTEMS
                 or self.backends is not BACKENDS):
             return
+        # runtime-pinned plan overrides live only in THIS process's
+        # registry objects; a spawned worker re-imports the module
+        # registrations and would silently plan without them
+        if any(self.systems.get(s).plan_overrides
+               for s in {spec.system for spec in specs}):
+            return
         seen: set[EvalSpec] = set()
         chunks: dict[tuple, list[EvalSpec]] = {}
         for spec in specs:
@@ -366,7 +486,8 @@ class Experiment:
             seen.add(spec)
             chunks.setdefault(
                 (spec.workload, spec.system, spec.gbuf_bytes,
-                 spec.lbuf_bytes, spec.row_reuse), []).append(spec)
+                 spec.lbuf_bytes, spec.row_reuse, spec.plan),
+                []).append(spec)
         if not chunks:
             return
         import concurrent.futures
@@ -404,23 +525,75 @@ class Experiment:
                         gbufs: Sequence[int | None] = (None,),
                         lbufs: Sequence[int | None] = (None,),
                         backend: str = "burst-sim",
-                        policy: str = "row-aware",
-                        row_reuse: bool = True,
+                        policy: str | Sequence[str] = "row-aware",
+                        row_reuse: bool | Sequence[bool] = True,
                         engine: str = "columnar",
+                        plan: str | Sequence[str] = "default",
                         workers: int = 1,
                         csv_path: str | None = None) -> list[ParetoPoint]:
         """Sweep the (GBUF, LBUF, system) design grid for one workload and
         tag each point as Pareto-dominated or not over the PPA triple
         (cycles, energy, area) — the frontier the paper's buffer-sizing
-        argument walks.  Returns every grid point in sweep order (filter
-        on ``dominated`` for the frontier); ``csv_path`` persists the
-        tagged grid via
-        :func:`repro.experiment.artifacts.write_pareto_csv`."""
-        results = self.sweep(workloads=workload, systems=systems,
-                             buffers=[(g, l) for g in gbufs for l in lbufs],
-                             backend=backend, policy=policy,
-                             row_reuse=row_reuse, engine=engine,
-                             workers=workers)
+        argument walks.  ``policy`` / ``row_reuse`` / ``plan`` also accept
+        sequences, extending the grid along the issue-policy, row-reuse
+        and fusion-plan axes (dominance is tagged across the WHOLE grid,
+        so e.g. a searched plan can knock a greedy point off the
+        frontier).  Returns every grid point in sweep order (filter on
+        ``dominated`` for the frontier); ``csv_path`` persists the tagged
+        grid via :func:`repro.experiment.artifacts.write_pareto_csv`.
+
+        The plan axis only emits plan values that RESOLVE to distinct
+        partitions at each (system, buffer) point (a layer-by-layer
+        system ignores the knob entirely; on fused systems e.g.
+        ``"default"`` with no pinned override ≡ ``"greedy"``, and the
+        searched optimum sometimes IS the greedy plan) — otherwise the
+        grid would carry physically identical duplicate points, each
+        shielding the other from dominance (ties dominate nothing)."""
+        policies = (policy,) if isinstance(policy, str) else tuple(policy)
+        modes = (row_reuse,) if isinstance(row_reuse, bool) \
+            else tuple(row_reuse)
+        plans = (plan,) if isinstance(plan, str) else tuple(plan)
+        if systems is None:
+            systems = self.systems.names()
+        elif isinstance(systems, str):
+            systems = (systems,)
+        # plan values deduped by the partition they resolve to, per
+        # (system, resolved buffer point); plan resolution is independent
+        # of policy/row-reuse, so this is computed once per point
+        combos: list[tuple[str, int | None, int | None, str]] = []
+        seen: set[tuple] = set()
+        for s in systems:
+            sys_spec = self.systems.get(s)
+            g0, l0 = sys_spec.default_buffers
+            for g in gbufs:
+                for l in lbufs:
+                    rg = g0 if g is None else g
+                    rl = l0 if l is None else l
+                    for pl in plans:
+                        sig = None if sys_spec.tile_grid is None else \
+                            self.plan(workload, sys_spec.tile_grid,
+                                      system=s, source=pl, gbuf_bytes=rg,
+                                      lbuf_bytes=rl).signature()
+                        key = (s, rg, rl, sig)
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        combos.append((s, g, l, pl))
+        specs = [EvalSpec(workload=workload, system=s, gbuf_bytes=g,
+                          lbuf_bytes=l, backend=backend, policy=pol,
+                          row_reuse=rr, engine=engine, plan=pl)
+                 for pol in policies for rr in modes
+                 for s, g, l, pl in combos]
+        # ONE pool pass over the whole extended grid: specs differing
+        # only in policy chunk onto the same worker (shared trace +
+        # lowering), instead of a fresh pool per axis combo
+        baselines = [EvalSpec(workload=workload,
+                              system=self.baseline_system,
+                              backend=backend, policy=pol, row_reuse=rr,
+                              engine=engine)
+                     for pol in policies for rr in modes] \
+            if csv_path is not None else []
+        results = self._dispatch(specs, workers, baselines)
         points = [ParetoPoint(result=r, dominated=d)
                   for r, d in zip(results, pareto_tags(results))]
         if csv_path is not None:

@@ -1,0 +1,49 @@
+"""`repro.plan` — fusion-partition search: DP + beam autotuner.
+
+Turns the fused-layer partition from a hard-coded greedy rule
+(:func:`repro.core.fusion.plan_fused`) into a searched decision:
+
+* :mod:`repro.plan.space` — the legal plan space, enumerated through the
+  same :func:`~repro.core.fusion.is_legal_group` checks the greedy obeys
+  (so greedy plans are always inside it).
+* :mod:`repro.plan.dp` — exact split-point DP over layer boundaries; the
+  analytic cost decomposes additively over groups / boundary reorgs /
+  tail, so the optimum is found in O(boundaries²) group evaluations and
+  is ≤ the greedy plan's cost by construction.
+* :mod:`repro.plan.beam` — beam search over the joint (partition × tile
+  grid × GBUF/LBUF) space when the DP's single-combo axis is too narrow.
+* :mod:`repro.plan.artifacts` — JSON persistence for searched plans
+  (pin them via ``SystemSpec`` per-workload overrides).
+
+Driver entry points: ``Experiment.search_plan()`` / ``Experiment.pin_plan()``
+and the ``EvalSpec.plan`` knob (``"default"`` / ``"greedy"`` /
+``"searched"``); see ``benchmarks/plan_search.py`` for the searched-vs-
+greedy comparison including a burst-sim spot check.
+
+A scientific note (measured, see README "How the fusion split is chosen"):
+on this reproduction's calibrated cost model the DP does NOT rediscover
+the paper's hand-derived ResNet18 splits — it finds strictly cheaper
+partitions (the hand splits are in the search space and are beaten), both
+under the analytic model and under burst-sim replay.  The greedy rule
+therefore remains the default plan source everywhere; searched plans are
+an opt-in axis.
+"""
+
+from repro.core.fusion import (RECOVERABLE_CODES, group_legality,
+                               group_legality_coded, is_legal_group)
+from repro.plan.artifacts import (SCHEMA, load_plan, plan_record,
+                                  read_plan_json, write_plan_json)
+from repro.plan.beam import BeamCandidate, beam_search
+from repro.plan.dp import (PlanCost, SearchResult, analytic_cycles,
+                           analytic_energy, search_partition)
+from repro.plan.space import (candidate_grids, count_partitions,
+                              enumerate_partitions, legal_stops)
+
+__all__ = [
+    "RECOVERABLE_CODES", "SCHEMA", "BeamCandidate", "PlanCost",
+    "SearchResult", "analytic_cycles", "analytic_energy", "beam_search",
+    "candidate_grids", "count_partitions", "enumerate_partitions",
+    "group_legality", "group_legality_coded", "is_legal_group",
+    "legal_stops", "load_plan", "plan_record", "read_plan_json",
+    "search_partition", "write_plan_json",
+]

@@ -1,0 +1,83 @@
+"""JSON artifacts for searched fusion plans.
+
+Sits next to the CSV sweep artifacts (:mod:`repro.experiment.artifacts`):
+a searched plan persists as one JSON file carrying the plan signature, the
+search coordinates (workload, system, tile grid, buffer point), and the
+searched-vs-greedy costs, so a plan can be audited, re-pinned via
+``SystemSpec`` overrides, or replotted without re-running the search.
+
+::
+
+    sr = exp.search_plan("VGG11", "Fused16")
+    path = write_plan_json("artifacts/plan_vgg11_fused16.json",
+                           plan_record(sr, workload="VGG11",
+                                       system="Fused16"))
+    rec = read_plan_json(path)
+    plan = load_plan(rec, exp.graph(rec["workload"]))   # legality re-checked
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import TYPE_CHECKING
+
+from repro.core.fusion import FusionPlan, plan_from_dict
+from repro.core.graph import Graph
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.plan.dp import SearchResult
+
+SCHEMA = "repro.plan/1"
+
+__all__ = ["SCHEMA", "plan_record", "write_plan_json", "read_plan_json",
+           "load_plan"]
+
+
+def plan_record(search: "SearchResult", *, workload: str, system: str,
+                gbuf_bytes: int | None = None,
+                lbuf_bytes: int | None = None,
+                cost_metric: str = "analytic-cycles") -> dict:
+    """Flatten one :class:`~repro.plan.dp.SearchResult` into the artifact
+    schema (plan + search coordinates + searched/greedy costs)."""
+    rec = {
+        "schema": SCHEMA,
+        "workload": workload,
+        "system": system,
+        "tile_grid": list(search.tile_grid),
+        "gbuf_bytes": gbuf_bytes,
+        "lbuf_bytes": lbuf_bytes,
+        "cost_metric": cost_metric,
+        "cost": search.cost,
+        "greedy_cost": search.greedy_cost,
+        "improvement": search.improvement,
+        "describe": search.plan.describe(),
+        **search.plan.to_dict(),
+    }
+    return rec
+
+
+def write_plan_json(path: str | Path, record: dict) -> Path:
+    """Persist a plan record (parent directories created)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(record, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def read_plan_json(path: str | Path) -> dict:
+    """Read a plan record back, checking the schema tag."""
+    record = json.loads(Path(path).read_text())
+    if record.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: not a {SCHEMA} artifact "
+                         f"(schema={record.get('schema')!r})")
+    return record
+
+
+def load_plan(record: dict, graph: Graph, *,
+              validate: bool = True) -> FusionPlan:
+    """Rebuild the :class:`~repro.core.fusion.FusionPlan` of a record on
+    ``graph`` — graph name/length and (by default) group legality are
+    re-checked, so a stale artifact fails loudly instead of silently
+    mapping a wrong partition."""
+    return plan_from_dict(graph, record, validate=validate)

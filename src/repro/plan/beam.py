@@ -1,0 +1,105 @@
+"""Beam search over the joint (partition × tile grid × GBUF/LBUF) space.
+
+The DP (:mod:`repro.plan.dp`) is exact along the partition axis but fixes
+the tile grid and the buffer point.  The autotuner's outer axes — which
+grid factorization of the core count, which (GBUF, LBUF) design point —
+multiply the space; the beam explores all of it in one frontier:
+
+* a **state** is a partial partition of one (grid, buffers) combo — the
+  position reached, the groups chosen so far, and the accumulated cost;
+* expansion either *closes* the state into the layer-by-layer tail
+  (a finished plan) or appends any legal fused group;
+* pruning keeps the globally best ``beam_width`` open states ranked by
+  ``accumulated + close(position)`` — a *feasible* completion (finish
+  layer-by-layer now), so states from different combos and different
+  depths are compared on an achievable total, never an underestimate.
+
+With a wide enough beam the search is exhaustive and matches the DP on
+every combo (a property the tests pin); narrow beams trade optimality for
+a bounded number of group evaluations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.fusion import FusedGroup, FusionPlan
+from repro.core.graph import Graph
+from repro.plan.dp import PlanCost, TraceCost
+from repro.plan.space import candidate_grids
+
+__all__ = ["BeamCandidate", "beam_search"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BeamCandidate:
+    """One finished plan of the joint search, cheapest first."""
+
+    plan: FusionPlan
+    cost: float
+    tile_grid: tuple[int, int]
+    gbuf_bytes: int
+    lbuf_bytes: int
+
+
+def beam_search(graph: Graph, arch_factory, *,
+                buffers: Sequence[tuple[int, int]],
+                grids: Sequence[tuple[int, int]] | None = None,
+                beam_width: int = 8, keep: int = 5,
+                trace_cost: TraceCost | None = None,
+                min_group_len: int = 2,
+                stage_aligned: bool = True) -> list[BeamCandidate]:
+    """Search plans jointly over grids × buffer points × partitions.
+
+    ``arch_factory`` is a :class:`~repro.experiment.registry.SystemSpec`
+    style factory (``arch_factory(gbuf_bytes=…, lbuf_bytes=…)``); ``grids``
+    defaults to every factorization of the arch's PIMcore count.  Returns
+    up to ``keep`` finished candidates sorted by cost — note costs across
+    buffer points share the objective but not the hardware, so the caller
+    decides whether the comparison is fair (e.g. add an area term, or pass
+    a single buffer point to tune the grid alone).
+    """
+    combos: list[tuple[PlanCost, int, int]] = []
+    for g, l in buffers:
+        arch = arch_factory(gbuf_bytes=g, lbuf_bytes=l)
+        for ty, tx in (grids or candidate_grids(arch.num_pimcores)):
+            if ty * tx != arch.num_pimcores:
+                raise ValueError(
+                    f"grid {ty}x{tx} = {ty * tx} tiles != "
+                    f"{arch.num_pimcores} PIMcores of {arch.name}")
+            combos.append((PlanCost(graph, arch, ty, tx,
+                                    trace_cost=trace_cost,
+                                    min_group_len=min_group_len,
+                                    stage_aligned=stage_aligned), g, l))
+
+    # state: (combo index, position, groups so far, accumulated cost)
+    State = tuple[int, int, tuple[tuple[int, int], ...], float]
+    open_states: list[State] = [(ci, 0, (), 0.0)
+                                for ci in range(len(combos))]
+    finished: list[tuple[float, int, tuple[tuple[int, int], ...], int]] = []
+    while open_states:
+        nxt: list[State] = []
+        for ci, pos, groups, acc in open_states:
+            cost = combos[ci][0]
+            finished.append((acc + cost.close(pos), ci, groups, pos))
+            for stop in cost.stops(pos):
+                step = (cost.reorg(pos, (pos, stop)) if pos > 0 else 0.0) \
+                    + cost.group(pos, stop)
+                nxt.append((ci, stop, groups + ((pos, stop),), acc + step))
+        nxt.sort(key=lambda s: s[3] + combos[s[0]][0].close(s[1]))
+        open_states = nxt[:beam_width]
+
+    finished.sort(key=lambda f: f[0])
+    out: list[BeamCandidate] = []
+    for total, ci, groups, tail in finished[:keep]:
+        cost, g, l = combos[ci]
+        plan = FusionPlan(
+            graph=graph,
+            groups=tuple(FusedGroup(a, b, cost.tiles_y, cost.tiles_x)
+                         for a, b in groups),
+            tail_start=tail)
+        out.append(BeamCandidate(plan=plan, cost=total,
+                                 tile_grid=(cost.tiles_y, cost.tiles_x),
+                                 gbuf_bytes=g, lbuf_bytes=l))
+    return out

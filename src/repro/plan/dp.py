@@ -1,0 +1,249 @@
+"""Optimal split-point DP over fused-layer partitions.
+
+The total cost of a plan under the analytic backend decomposes exactly —
+``map_pimfused`` concatenates per-group traces, boundary reorganisations
+and the layer-by-layer tail, and both ``simulate_cycles`` and
+``simulate_energy`` are plain sums over commands — so a partition's cost
+has optimal substructure over split points:
+
+    cost(plan) =   Σ_groups  group(g)
+                 + Σ_bounds  reorg(boundary → next group / tail)
+                 + tail(tail_start)
+
+:class:`PlanCost` memoizes each term (per-group traces are the expensive
+part; the per-layer tail costs are suffix sums computed once), and
+:func:`search_partition` runs the DP backwards over layer positions.  Any
+ADDITIVE trace cost works (cycles by default, energy via
+:func:`analytic_energy`); non-additive objectives (burst-sim makespan
+under overlapping issue policies) cannot ride the DP — rescore candidate
+plans through the simulator instead (see ``benchmarks/plan_search.py``).
+
+Because every greedy plan is a point of the legal space
+(:mod:`repro.plan.space`), the DP optimum is ≤ the greedy plan's cost by
+construction — the guarantee the acceptance tests pin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core import dataflow
+from repro.core.fusion import FusedGroup, FusionPlan, plan_fused
+from repro.core.graph import Graph
+from repro.core.tiling import GroupTiling, tile_group
+from repro.pim.arch import PIMArch
+from repro.plan.space import legal_stops
+
+__all__ = ["PlanCost", "SearchResult", "analytic_cycles", "analytic_energy",
+           "search_partition"]
+
+# A trace cost must be ADDITIVE over trace concatenation for the DP's
+# decomposition to equal the full-plan cost (both built-ins are).
+TraceCost = Callable[[list, PIMArch], float]
+
+
+def analytic_cycles(trace, arch: PIMArch) -> float:
+    """Default objective: the analytic memory-system cycle total (what the
+    paper's figures report and what the serial burst replay reproduces to
+    the cycle)."""
+    from repro.pim.timing import simulate_cycles
+    return simulate_cycles(trace, arch).total
+
+
+def analytic_energy(trace, arch: PIMArch) -> float:
+    """Alternative objective: analytic energy in nJ (also additive)."""
+    from repro.pim.energy import simulate_energy
+    return simulate_energy(trace, arch).total_nj
+
+
+class PlanCost:
+    """Memoized additive cost terms of fusion plans on one (arch, grid).
+
+    One instance per (graph, arch, tile grid, objective); the DP, the beam
+    and plan rescoring all pull from the same caches, so a candidate group
+    is tiled/mapped/priced at most once however many plans contain it.
+    """
+
+    def __init__(self, graph: Graph, arch: PIMArch, tiles_y: int,
+                 tiles_x: int, *, trace_cost: TraceCost | None = None,
+                 min_group_len: int = 2, stage_aligned: bool = True) -> None:
+        if tiles_y * tiles_x != arch.num_pimcores:
+            raise ValueError(
+                f"tile grid {tiles_y}x{tiles_x} = {tiles_y * tiles_x} tiles "
+                f"!= {arch.num_pimcores} PIMcores of {arch.name}")
+        self.graph = graph
+        self.arch = arch
+        self.tiles_y = tiles_y
+        self.tiles_x = tiles_x
+        self.trace_cost = trace_cost or analytic_cycles
+        self.min_group_len = min_group_len
+        self.stage_aligned = stage_aligned
+        self._tilings: dict[tuple[int, int], GroupTiling] = {}
+        self._groups: dict[tuple[int, int], float] = {}
+        self._halos: dict[tuple[int, int], int] = {}
+        self._reorgs: dict[tuple[int, int | None], float] = {}
+        self._stops: dict[int, list[int]] = {}
+        # per-layer layer-by-layer costs (map_layer_by_layer emits commands
+        # layer-independently, so the suffix sum IS the tail trace's cost)
+        per_layer = [self.trace_cost(
+            dataflow.map_layer_by_layer(graph, arch, start=i, stop=i + 1),
+            arch) for i in range(len(graph))]
+        self._tail = [0.0] * (len(graph) + 1)
+        for i in range(len(graph) - 1, -1, -1):
+            self._tail[i] = per_layer[i] + self._tail[i + 1]
+        self.stats = {"group_costs": 0, "tilings": 0}
+
+    # ------------------------------------------------------------------
+    # memoized terms
+    # ------------------------------------------------------------------
+
+    def stops(self, start: int) -> list[int]:
+        s = self._stops.get(start)
+        if s is None:
+            s = self._stops[start] = legal_stops(
+                self.graph, start, self.tiles_y, self.tiles_x,
+                min_group_len=self.min_group_len,
+                stage_aligned=self.stage_aligned)
+        return s
+
+    def tiling(self, start: int, stop: int) -> GroupTiling:
+        t = self._tilings.get((start, stop))
+        if t is None:
+            self.stats["tilings"] += 1
+            t = self._tilings[(start, stop)] = tile_group(
+                self.graph.slice(start, stop), self.tiles_y, self.tiles_x)
+        return t
+
+    def halo(self, start: int, stop: int) -> int:
+        """The group's receptive-field input halo in bytes (what the reorg
+        into this group moves, clamped by the mapper at one map pass)."""
+        h = self._halos.get((start, stop))
+        if h is None:
+            h = self._halos[(start, stop)] = dataflow.group_input_halo_bytes(
+                self.graph.slice(start, stop), self.tiling(start, stop),
+                self.arch.dtype_bytes)
+        return h
+
+    def group(self, start: int, stop: int) -> float:
+        """Cost of executing [start, stop) as one fused kernel."""
+        c = self._groups.get((start, stop))
+        if c is None:
+            self.stats["group_costs"] += 1
+            grp = FusedGroup(start, stop, self.tiles_y, self.tiles_x)
+            trace = dataflow.map_fused_group(self.graph, grp, self.arch,
+                                             tiling=self.tiling(start, stop))
+            c = self._groups[(start, stop)] = self.trace_cost(trace,
+                                                              self.arch)
+        return c
+
+    def reorg(self, boundary: int, next_group: tuple[int, int] | None
+              ) -> float:
+        """Boundary reorganisation after a group ending at ``boundary``:
+        into the next fused group (moves its tiling halo) or into the tail
+        (``next_group=None``, full-map redistribution).  Zero at the graph
+        edges (nothing precedes layer 0 / follows layer n)."""
+        if boundary <= 0 or boundary >= len(self.graph):
+            return 0.0
+        key = (boundary, next_group and next_group[1])
+        c = self._reorgs.get(key)
+        if c is None:
+            halo = None if next_group is None else self.halo(*next_group)
+            trace = dataflow.map_boundary_reorg(self.graph, boundary,
+                                                self.arch, halo)
+            c = self._reorgs[key] = self.trace_cost(trace, self.arch)
+        return c
+
+    def tail(self, start: int) -> float:
+        """Layer-by-layer cost of the suffix [start, len)."""
+        return self._tail[start]
+
+    def close(self, boundary: int) -> float:
+        """Cost of finishing layer-by-layer from ``boundary`` (reorg into
+        the tail + the tail itself) — also the DP's feasible-completion
+        bound the beam prunes by."""
+        return self.reorg(boundary, None) + self.tail(boundary)
+
+    # ------------------------------------------------------------------
+
+    def plan_cost(self, plan: FusionPlan) -> float:
+        """Score ANY plan by the same decomposition the DP optimizes —
+        exactly equals ``trace_cost(map_pimfused(plan, arch), arch)``."""
+        total = 0.0
+        for gi, g in enumerate(plan.groups):
+            if gi > 0:
+                total += self.reorg(g.start, (g.start, g.stop))
+            total += self.group(g.start, g.stop)
+        if plan.tail_start < len(plan.graph):
+            total += self.close(plan.tail_start)
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Outcome of one partition search on one (arch, grid) point."""
+
+    plan: FusionPlan
+    cost: float
+    tile_grid: tuple[int, int]
+    # the greedy rule's plan and cost under the SAME objective — None when
+    # the grid admits no greedy plan at all (plan_fused raises)
+    greedy_plan: FusionPlan | None
+    greedy_cost: float | None
+    evaluated_groups: int           # distinct fused groups priced
+
+    @property
+    def improvement(self) -> float:
+        """Fractional cost reduction vs the greedy plan (0.0 when greedy
+        is already optimal or does not exist)."""
+        if self.greedy_cost is None or self.greedy_cost <= 0:
+            return 0.0
+        return 1.0 - self.cost / self.greedy_cost
+
+
+def search_partition(graph: Graph, arch: PIMArch, tiles_y: int,
+                     tiles_x: int, *, trace_cost: TraceCost | None = None,
+                     min_group_len: int = 2, stage_aligned: bool = True,
+                     cost: PlanCost | None = None) -> SearchResult:
+    """Cost-optimal fusion partition by DP over split points.
+
+    ``F[i]`` = cheapest way to execute ``[i, n)`` given a group boundary at
+    ``i``; transitions either close into the layer-by-layer tail or open a
+    legal fused group ``[i, j)``, paying the boundary reorganisation into
+    it (charged at the transition, where both endpoints are known).
+    """
+    if cost is None:
+        cost = PlanCost(graph, arch, tiles_y, tiles_x,
+                        trace_cost=trace_cost, min_group_len=min_group_len,
+                        stage_aligned=stage_aligned)
+    n = len(graph)
+    # F[i] = (cost, best stop j or None-for-tail), computed backwards
+    best: list[tuple[float, int | None]] = [(0.0, None)] * (n + 1)
+    for i in range(n - 1, -1, -1):
+        c_best, choice = cost.close(i), None
+        for j in cost.stops(i):
+            c = (cost.reorg(i, (i, j)) if i > 0 else 0.0) \
+                + cost.group(i, j) + best[j][0]
+            if c < c_best:
+                c_best, choice = c, j
+        best[i] = (c_best, choice)
+
+    groups: list[FusedGroup] = []
+    i = 0
+    while i < n and best[i][1] is not None:
+        j = best[i][1]
+        groups.append(FusedGroup(i, j, tiles_y, tiles_x))
+        i = j
+    plan = FusionPlan(graph=graph, groups=tuple(groups), tail_start=i)
+
+    try:
+        greedy = plan_fused(graph, tiles_y, tiles_x,
+                            min_group_len=min_group_len,
+                            stage_aligned=stage_aligned)
+        greedy_cost = cost.plan_cost(greedy)
+    except ValueError:
+        greedy, greedy_cost = None, None
+    return SearchResult(plan=plan, cost=best[0][0],
+                        tile_grid=(tiles_y, tiles_x),
+                        greedy_plan=greedy, greedy_cost=greedy_cost,
+                        evaluated_groups=cost.stats["group_costs"])

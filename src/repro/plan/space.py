@@ -1,0 +1,111 @@
+"""The fusion-partition search space: what plans are LEGAL to consider.
+
+A plan (matching :class:`repro.core.fusion.FusionPlan`'s representational
+capacity and what :func:`repro.core.dataflow.map_pimfused` executes) is a
+sequence of fused groups covering a contiguous prefix ``[0, tail_start)``
+of the graph, followed by a layer-by-layer tail.  Every group must pass
+:func:`repro.core.fusion.is_legal_group` — the same residual-crossing /
+tile-divisibility / extent rules the greedy planner applies, so greedy
+plans are always points of this space and a cost-optimal search can never
+do worse than the greedy rule.
+
+This module only enumerates; costs live in :mod:`repro.plan.dp`.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+from repro.core.fusion import (RECOVERABLE_CODES, FusedGroup, FusionPlan,
+                               group_legality_coded)
+from repro.core.graph import Graph
+
+__all__ = ["legal_stops", "enumerate_partitions", "count_partitions",
+           "candidate_grids"]
+
+
+def legal_stops(graph: Graph, start: int, tiles_y: int, tiles_x: int, *,
+                min_group_len: int = 2,
+                stage_aligned: bool = True) -> list[int]:
+    """All ``stop`` positions such that [start, stop) is a legal fused
+    group — the branching factor of the split-point DP at ``start``.
+
+    Scans ascending and stops early once a group becomes irrecoverably
+    illegal (an unfusable layer entered the candidate range): every
+    failure code outside :data:`repro.core.fusion.RECOVERABLE_CODES` is
+    prefix-monotone, so no larger stop can become legal again.
+    """
+    stops: list[int] = []
+    for stop in range(start + min_group_len, len(graph) + 1):
+        coded = group_legality_coded(graph, start, stop, tiles_y, tiles_x,
+                                     min_group_len=min_group_len,
+                                     stage_aligned=stage_aligned)
+        if coded is None:
+            stops.append(stop)
+        elif coded[0] not in RECOVERABLE_CODES:
+            break
+    return stops
+
+
+def enumerate_partitions(graph: Graph, tiles_y: int, tiles_x: int, *,
+                         min_group_len: int = 2, stage_aligned: bool = True,
+                         max_plans: int | None = None,
+                         ) -> Iterator[FusionPlan]:
+    """Every legal plan: contiguous fused groups from layer 0 + tail.
+
+    Includes the all-tail plan (no fused group: ``map_pimfused`` then
+    degrades to pure layer-by-layer) and every greedy plan.  Exponential in
+    the number of legal split points — use for exhaustive validation on
+    real CNNs (ResNet18 has ~10² legal plans per grid) and small property
+    graphs; ``max_plans`` guards runaway spaces.
+    """
+    n = len(graph)
+    stops_from: dict[int, list[int]] = {}
+    emitted = 0
+
+    def stops(i: int) -> list[int]:
+        s = stops_from.get(i)
+        if s is None:
+            s = stops_from[i] = legal_stops(graph, i, tiles_y, tiles_x,
+                                            min_group_len=min_group_len,
+                                            stage_aligned=stage_aligned)
+        return s
+
+    def rec(i: int, acc: list[FusedGroup]) -> Iterator[FusionPlan]:
+        nonlocal emitted
+        if max_plans is not None and emitted >= max_plans:
+            return
+        emitted += 1
+        yield FusionPlan(graph=graph, groups=tuple(acc), tail_start=i)
+        for stop in stops(i):
+            acc.append(FusedGroup(i, stop, tiles_y, tiles_x))
+            yield from rec(stop, acc)
+            acc.pop()
+
+    yield from rec(0, [])
+
+
+def count_partitions(graph: Graph, tiles_y: int, tiles_x: int, *,
+                     min_group_len: int = 2,
+                     stage_aligned: bool = True) -> int:
+    """Size of the legal plan space (cheap: DP over split points)."""
+    n = len(graph)
+    counts = [0] * (n + 1)
+    for i in range(n, -1, -1):
+        counts[i] = 1  # close to tail here
+        for stop in legal_stops(graph, i, tiles_y, tiles_x,
+                                min_group_len=min_group_len,
+                                stage_aligned=stage_aligned):
+            counts[i] += counts[stop]
+    return counts[0]
+
+
+def candidate_grids(num_tiles: int) -> tuple[tuple[int, int], ...]:
+    """All (tiles_y, tiles_x) factorizations of a PIMcore count — the tile
+    count must equal the core count (§V-3), so these are the only grids a
+    system with ``num_tiles`` cores can run.  Squarest first (smallest
+    aspect ratio ⇒ smallest halo perimeter), which is the natural visit
+    order for the beam."""
+    grids = [(ty, num_tiles // ty) for ty in range(1, num_tiles + 1)
+             if num_tiles % ty == 0]
+    return tuple(sorted(grids, key=lambda g: (abs(g[0] - g[1]), g[0])))
