@@ -1,0 +1,87 @@
+"""Per-layer bottleneck report for one burst-sim grid point.
+
+Replays the point with a :class:`repro.obs.trace.TimelineCollector`
+attached and a profiler active, then writes the observability artifact
+set (``$REPRO_ARTIFACT_DIR``, default ``artifacts/``):
+
+* ``bottleneck_<workload>_<system>.trace.json`` — Chrome/Perfetto
+  ``trace_event`` timeline (one track per bank tap / bus / core; open at
+  ``ui.perfetto.dev``);
+* ``bottleneck_<workload>_<system>.counters.json`` — the unified counter
+  snapshot (experiment cache stats + replay breakdown + event counts);
+* ``bottleneck_<workload>_<system>.profile.json`` — the per-phase
+  profiling report of the evaluation itself;
+
+and prints the per-layer attribution table (bus vs near-bank port vs
+core-streaming cycles, row hit rate, cross-bank bytes — the paper's
+"where do the cycles go" argument, per layer).
+
+Run:  PYTHONPATH=src python benchmarks/bottleneck_report.py \
+          [workload] [system] [policy]
+      (defaults: ResNet18_Full Fused16 row-aware)
+
+Runs as a plain script (no ``benchmarks`` package import), so the
+acceptance command above works from a bare checkout.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.experiment import Experiment, EvalSpec
+from repro.experiment.artifacts import default_artifact_dir
+from repro.obs import (TimelineCollector, counters_from_sim_result,
+                       format_table, layer_attribution, profiled,
+                       validate_trace_events, write_perfetto)
+
+
+def build_report(workload: str, system: str, policy: str,
+                 out_dir: Path) -> dict[str, Path]:
+    """Evaluate one grid point with full observability attached and write
+    the three artifacts; returns their paths."""
+    # a fresh Experiment: memoized results never re-replay, so the
+    # collector must be attached before the point is first evaluated
+    exp = Experiment()
+    exp.collector = TimelineCollector()
+    with profiled() as prof:
+        result = exp.run(EvalSpec(workload=workload, system=system,
+                                  backend="burst-sim", policy=policy))
+
+    stem = f"bottleneck_{workload}_{system}"
+    label = f"{workload} on {system} ({policy})"
+    trace_path = write_perfetto(out_dir / f"{stem}.trace.json",
+                                exp.collector, label=label)
+    validate_trace_events(json.loads(trace_path.read_text()))
+
+    registry = exp.counters()
+    registry.merge(counters_from_sim_result(result.detail["sim"].result))
+    counters_path = registry.write_json(
+        out_dir / f"{stem}.counters.json",
+        meta={"workload": workload, "system": system, "policy": policy,
+              "config": result.config, "engine": result.detail["engine"]})
+
+    profile_path = prof.write_report(
+        out_dir / f"{stem}.profile.json",
+        meta={"workload": workload, "system": system, "policy": policy})
+
+    print(f"# {label} — config {result.config}, "
+          f"makespan {result.cycles} cycles, "
+          f"{len(exp.collector)} bursts collected")
+    print(format_table(layer_attribution(exp.collector), top=20))
+    return {"trace": trace_path, "counters": counters_path,
+            "profile": profile_path}
+
+
+def main(argv: list[str]) -> None:
+    workload = argv[1] if len(argv) > 1 else "ResNet18_Full"
+    system = argv[2] if len(argv) > 2 else "Fused16"
+    policy = argv[3] if len(argv) > 3 else "row-aware"
+    paths = build_report(workload, system, policy, default_artifact_dir())
+    for kind, path in paths.items():
+        print(f"[bottleneck_report] wrote {kind}: {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main(sys.argv)

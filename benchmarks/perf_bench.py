@@ -16,14 +16,25 @@ Measured in one run, so the speedup numbers are internally consistent:
   systems + artifacts, i.e. what CI actually pays), and the
   columnar-vs-reference speedup — the ISSUE gate is ≥ 10×.
 
-Run:  PYTHONPATH=src python -m benchmarks.perf_bench
+``BENCH_sim.json`` is a HISTORY: every run appends one entry stamped with
+the git commit and UTC date, so the bench trajectory rides along in the
+repo instead of each run overwriting the last (a legacy single-run file
+is migrated into ``history[0]`` on first touch).
+
+Run:    PYTHONPATH=src python -m benchmarks.perf_bench
+Check:  PYTHONPATH=src python -m benchmarks.perf_bench --check
+        additionally exits non-zero when this run's columnar ``sim_sweep``
+        wall-clock regresses past ``REGRESSION_FACTOR`` × the best
+        recorded run — the CI perf gate.
 """
 
 from __future__ import annotations
 
 import contextlib
+import datetime
 import io
 import json
+import subprocess
 import sys
 import time
 from pathlib import Path
@@ -37,6 +48,50 @@ WORKLOAD = "ResNet18_Full"
 SYSTEM = "AiM-like"
 POLICIES = ("serial", "overlap", "row-aware")
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
+REGRESSION_FACTOR = 2.0     # --check fails beyond this × the best run
+
+
+def _git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=BENCH_PATH.parent, capture_output=True, text=True,
+            check=True, timeout=10).stdout.strip() or "unknown"
+    except Exception:       # no git / not a checkout — still benchable
+        return "unknown"
+
+
+def load_history(path: Path = BENCH_PATH) -> dict:
+    """The bench document ``{"benchmark": ..., "history": [...]}``.
+    A legacy single-run flat file becomes ``history[0]`` (its run had no
+    commit/date stamp)."""
+    if not path.exists():
+        return {"benchmark": "repro.sim columnar fast path", "history": []}
+    doc = json.loads(path.read_text())
+    if "history" in doc:
+        return doc
+    legacy = {"commit": "unknown", "date": "unknown",
+              **{k: v for k, v in doc.items() if k != "benchmark"}}
+    return {"benchmark": doc.get("benchmark",
+                                 "repro.sim columnar fast path"),
+            "history": [legacy]}
+
+
+def check_regression(history: list[dict], entry: dict,
+                     factor: float = REGRESSION_FACTOR) -> str | None:
+    """The CI gate: ``entry``'s columnar sim_sweep wall-clock against the
+    best previously recorded run.  Returns the failure message, or None
+    when within ``factor`` × best (or with no prior runs to gate on)."""
+    prior = [e["sim_sweep"]["columnar_s"] for e in history
+             if e is not entry and "sim_sweep" in e]
+    if not prior:
+        return None
+    best = min(prior)
+    now = entry["sim_sweep"]["columnar_s"]
+    if now > factor * best:
+        return (f"columnar sim_sweep regressed: {now:.3f}s > "
+                f"{factor:g}x best recorded {best:.3f}s")
+    return None
 
 
 def _best_of(fn, repeats: int = 3) -> float:
@@ -97,26 +152,40 @@ def bench_sim_sweep() -> dict:
     }
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    check = "--check" in argv
     exp = Experiment()
     spec = exp.systems.get(SYSTEM)
     arch = spec.make_arch(*spec.default_buffers)
     trace = exp.trace(WORKLOAD, SYSTEM, *spec.default_buffers)
-    bench = {
-        "benchmark": "repro.sim columnar fast path",
+    entry = {
+        "commit": _git_commit(),
+        "date": datetime.datetime.now(datetime.timezone.utc)
+                        .strftime("%Y-%m-%dT%H:%M:%SZ"),
         "workload": WORKLOAD,
         "system": SYSTEM,
         "lowering": bench_lowering(trace, arch),
         "engines": bench_engines(trace, arch),
         "sim_sweep": bench_sim_sweep(),
     }
-    BENCH_PATH.write_text(json.dumps(bench, indent=2) + "\n")
-    print(json.dumps(bench, indent=2))
-    print(f"[perf_bench] wrote {BENCH_PATH}", file=sys.stderr)
-    speedup = bench["sim_sweep"]["speedup"]
+    doc = load_history()
+    doc["history"].append(entry)
+    BENCH_PATH.write_text(json.dumps(doc, indent=2) + "\n")
+    print(json.dumps(entry, indent=2))
+    print(f"[perf_bench] wrote {BENCH_PATH} "
+          f"({len(doc['history'])} runs recorded)", file=sys.stderr)
+    speedup = entry["sim_sweep"]["speedup"]
     print(f"[perf_bench] sim_sweep columnar speedup: {speedup:.1f}x",
           file=sys.stderr)
+    if check:
+        fail = check_regression(doc["history"], entry)
+        if fail:
+            print(f"[perf_bench] FAIL: {fail}", file=sys.stderr)
+            return 1
+        print("[perf_bench] regression check passed", file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

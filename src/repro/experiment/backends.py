@@ -108,7 +108,9 @@ class EvalContext(Protocol):
     memoized burst lowerings (object and columnar, shared across issue
     policies and keyed by row-reuse mode), memoized per-policy batched
     burst orderings, and memoized policy-independent analytic cycle/energy
-    reports."""
+    reports.  A context may also expose a ``collector`` attribute (a
+    :class:`repro.obs.trace.TraceCollector` or ``None``) — the burst-sim
+    backend streams replay events into it when present."""
 
     def lowered(self, trace: Trace, arch: PIMArch,
                 row_reuse: bool = True) -> Any: ...
@@ -206,6 +208,7 @@ class BurstSimBackend:
         from repro.sim.scheduler import BATCHING_POLICIES
 
         batch_fn = getattr(ctx, "batched", None)
+        collector = getattr(ctx, "collector", None)
         if engine == "columnar":
             from repro.sim.burst import lower_trace_columnar
             from repro.sim.engine_vec import simulate_columnar
@@ -221,7 +224,7 @@ class BurstSimBackend:
                                 engine) if batch_fn is not None \
                     else batch_same_row_columnar(cols)
             return simulate_columnar(trace, arch, spec.policy, cols=cols,
-                                     prebatched=True)
+                                     prebatched=True, collector=collector)
         from repro.sim.burst import lower_trace
         from repro.sim.engine import simulate
         from repro.sim.scheduler import batch_same_row
@@ -235,16 +238,18 @@ class BurstSimBackend:
                                engine) if batch_fn is not None \
                 else [batch_same_row(ops) for ops in lowered]
         return simulate(trace, arch, spec.policy, lowered=lowered,
-                        prebatched=True)
+                        prebatched=True, collector=collector)
 
     def evaluate(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
                  ctx: EvalContext | None = None) -> EvalResult:
         # local import: keeps the analytic path importable without repro.sim
+        from repro.obs.profile import span
         from repro.pim.energy import energy_from_counts
         from repro.sim.report import SimReport
 
         engine = resolve_engine(spec.engine)
-        result = self._replay(trace, arch, spec, engine, ctx)
+        with span("backend.replay", engine=engine, policy=spec.policy):
+            result = self._replay(trace, arch, spec, engine, ctx)
         analytic = _cycle_report(trace, arch, ctx)
         report = SimReport(system=arch.name, policy=spec.policy,
                            result=result,

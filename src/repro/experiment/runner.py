@@ -21,7 +21,11 @@ A process-wide :func:`default_experiment` backs the legacy
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import sys as _sys
+import time
+from pathlib import Path
 from typing import Any, Iterable, Sequence
 
 from repro.core import dataflow
@@ -35,6 +39,8 @@ from repro.experiment import workloads as _workloads  # registers built-ins
 from repro.experiment.backends import BACKENDS, EvalResult, EvalSpec
 from repro.experiment.registry import (Registry, SystemSpec, WorkloadSpec,
                                        SYSTEMS, WORKLOADS)
+from repro.obs.counters import CounterRegistry
+from repro.obs.profile import active_profiler, profiled, span
 
 BASELINE_SYSTEM = _systems.BASELINE_SYSTEM
 
@@ -89,14 +95,23 @@ class Experiment:
         self.systems = systems
         self.backends = backends
         self.baseline_system = baseline_system
-        self.stats: dict[str, int] = {
+        # a CounterRegistry IS a MutableMapping, so dict-style call sites
+        # (tests assert stats["trace_hits"], dict(exp.stats)) keep working
+        # while gaining the namespaced snapshot/JSON API of repro.obs
+        self.stats: CounterRegistry = CounterRegistry({
             "graph_builds": 0, "plan_builds": 0, "plan_searches": 0,
             "tiling_builds": 0,
             "trace_maps": 0, "trace_hits": 0, "lowerings": 0,
             "columnar_lowerings": 0, "batchings": 0,
             "cycle_models": 0, "energy_models": 0,
             "backend_evals": 0, "result_hits": 0,
-        }
+        })
+        # optional repro.obs.trace.TraceCollector: when set, the burst-sim
+        # backend streams replay events into it (EvalContext hook).  NOTE:
+        # memoized results do not re-replay — attach the collector before
+        # the point of interest is first evaluated (or use a fresh
+        # Experiment, as benchmarks/bottleneck_report.py does).
+        self.collector: Any = None
         self._graphs: dict[str, Graph] = {}
         self._plans: dict[tuple, FusionPlan] = {}
         self._searches: dict[tuple[str, str, int, int], Any] = {}
@@ -193,9 +208,10 @@ class Experiment:
             if hit is not None:
                 return hit
         from repro.plan.dp import search_partition
-        sr = search_partition(self.graph(workload),
-                              spec.make_arch(gbuf, lbuf),
-                              *spec.tile_grid, trace_cost=trace_cost)
+        with span("plan.search", workload=workload, system=system):
+            sr = search_partition(self.graph(workload),
+                                  spec.make_arch(gbuf, lbuf),
+                                  *spec.tile_grid, trace_cost=trace_cost)
         self.stats["plan_searches"] += 1
         if trace_cost is None:
             self._searches[key] = sr
@@ -265,13 +281,14 @@ class Experiment:
             self.stats["trace_hits"] += 1
             return tr
         arch = spec.make_arch(gbuf_bytes, lbuf_bytes)
-        if fused_plan is None:
-            tr = dataflow.map_baseline(self.graph(workload), arch)
-        else:
-            tr = dataflow.map_pimfused(
-                fused_plan, arch,
-                tilings=self.tilings(workload, spec.tile_grid,
-                                     plan=fused_plan))
+        with span("experiment.map", workload=workload, system=system):
+            if fused_plan is None:
+                tr = dataflow.map_baseline(self.graph(workload), arch)
+            else:
+                tr = dataflow.map_pimfused(
+                    fused_plan, arch,
+                    tilings=self.tilings(workload, spec.tile_grid,
+                                         plan=fused_plan))
         self.stats["trace_maps"] += 1
         self._traces[key] = tr
         return tr
@@ -282,7 +299,10 @@ class Experiment:
         hit = cache.get(key)
         if hit is not None and hit[0] is trace:
             return hit[1]
-        value = build()
+        # one span per derivation family: experiment.lowerings,
+        # experiment.batchings, experiment.cycle_models, ...
+        with span(f"experiment.{stat}"):
+            value = build()
         self.stats[stat] += 1
         cache[key] = (trace, value)
         return value
@@ -341,6 +361,16 @@ class Experiment:
                                lambda: simulate_energy(trace, arch),
                                "energy_models")
 
+    def counters(self) -> CounterRegistry:
+        """Point-in-time :class:`~repro.obs.counters.CounterRegistry` with
+        the experiment's cache stats under the ``experiment.*`` namespace
+        (a copy — mutate :attr:`stats` for live counting).  Callers merge
+        per-replay counters in via
+        :func:`repro.obs.counters.counters_from_sim_result`."""
+        reg = CounterRegistry()
+        reg.merge(self.stats, prefix="experiment")
+        return reg
+
     # ------------------------------------------------------------------
     # evaluation
     # ------------------------------------------------------------------
@@ -370,7 +400,9 @@ class Experiment:
         arch = sys_spec.make_arch(spec.gbuf_bytes, spec.lbuf_bytes)
         trace = self.trace(spec.workload, spec.system, spec.gbuf_bytes,
                            spec.lbuf_bytes, plan=spec.plan)
-        result = backend.evaluate(trace, arch, spec, ctx=self)
+        with span("experiment.evaluate", workload=spec.workload,
+                  system=spec.system, backend=spec.backend):
+            result = backend.evaluate(trace, arch, spec, ctx=self)
         self.stats["backend_evals"] += 1
         self._results[spec] = result
         return result
@@ -406,7 +438,8 @@ class Experiment:
               engine: str = "columnar",
               plan: str = "default",
               workers: int = 1,
-              csv_path: str | None = None) -> list[EvalResult]:
+              csv_path: str | None = None,
+              verbose: bool = False) -> list[EvalResult]:
         """Evaluate the cross product workloads × systems × buffer points.
 
         ``None`` axes default to every registered workload / system / the
@@ -419,7 +452,11 @@ class Experiment:
         additionally persists the results (with normalized PPA columns) as
         a CSV artifact via
         :func:`repro.experiment.artifacts.write_results_csv`, so figures
-        regenerate without re-running the sweep.
+        regenerate without re-running the sweep — plus a per-phase profile
+        report (``<csv>.profile.json``, see :mod:`repro.obs.profile`)
+        carrying the sweep's cache-stats delta.  ``verbose=True`` logs one
+        structured line per grid point to stderr (spec fields, cache
+        hit/miss, elapsed seconds) as the sweep progresses.
         """
         if workloads is None:
             workloads = self.workloads.names()
@@ -439,21 +476,57 @@ class Experiment:
                               backend=backend, policy=policy,
                               row_reuse=row_reuse, engine=engine)
                      for w in workloads] if csv_path is not None else []
-        results = self._dispatch(specs, workers, baselines)
+        # profile the sweep: an already-active profiler (the caller's
+        # ``with profiled():``) is reused; otherwise a csv_path sweep
+        # activates its own so the report artifact is never empty
+        stats_before = dict(self.stats)
+        prof = active_profiler()
+        scope = profiled() if csv_path is not None and prof is None \
+            else contextlib.nullcontext(prof)
+        with scope as prof:
+            with span("experiment.sweep", points=len(specs),
+                      workers=workers):
+                results = self._dispatch(specs, workers, baselines,
+                                         verbose=verbose)
         if csv_path is not None:
             from repro.experiment.artifacts import write_results_csv
             write_results_csv(csv_path, results, experiment=self)
+            if prof is not None:
+                delta = {k: v - stats_before.get(k, 0)
+                         for k, v in self.stats.items()
+                         if v != stats_before.get(k, 0)}
+                prof.write_report(
+                    Path(csv_path).with_suffix(".profile.json"),
+                    meta={"points": len(specs), "workers": workers,
+                          "stats_delta": delta})
         return results
 
     def _dispatch(self, specs: Sequence[EvalSpec], workers: int,
-                  baselines: Sequence[EvalSpec] = ()) -> list[EvalResult]:
+                  baselines: Sequence[EvalSpec] = (),
+                  verbose: bool = False) -> list[EvalResult]:
         """Evaluate specs in order: one pool pass over the whole batch
         when ``workers > 1`` (plus the ``baselines`` a CSV's normalized
         columns will need — evaluated on the pool rather than serially in
         the parent afterwards), then serve everything from the memo."""
         if workers > 1:
             self._run_parallel(list(specs) + list(baselines), workers)
-        return [self.run(spec) for spec in specs]
+        if not verbose:
+            return [self.run(spec) for spec in specs]
+        results = []
+        for k, spec in enumerate(specs):
+            resolved = self.resolve(spec)
+            cached = resolved in self._results
+            t = time.perf_counter()
+            results.append(self.run(resolved))
+            elapsed = time.perf_counter() - t
+            print(f"[sweep {k + 1}/{len(specs)}] "
+                  f"workload={resolved.workload} system={resolved.system} "
+                  f"gbuf={resolved.gbuf_bytes} lbuf={resolved.lbuf_bytes} "
+                  f"plan={resolved.plan} policy={resolved.policy} "
+                  f"backend={resolved.backend} "
+                  f"cached={'yes' if cached else 'no'} "
+                  f"elapsed_s={elapsed:.3f}", file=_sys.stderr)
+        return results
 
     def _run_parallel(self, specs: Sequence[EvalSpec], workers: int) -> None:
         """Evaluate not-yet-cached specs on a process pool and merge the
@@ -470,6 +543,11 @@ class Experiment:
         """
         if (self.workloads is not WORKLOADS or self.systems is not SYSTEMS
                 or self.backends is not BACKENDS):
+            return
+        # an attached trace collector cannot ship to spawn workers (and a
+        # worker-side copy would strand its events); keep replay observable
+        # by falling back to the serial path
+        if self.collector is not None:
             return
         # runtime-pinned plan overrides live only in THIS process's
         # registry objects; a spawned worker re-imports the module

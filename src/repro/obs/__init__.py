@@ -1,0 +1,44 @@
+"""``repro.obs`` — observability for the simulation/evaluation stack.
+
+Four pieces, all zero-overhead when off:
+
+* :mod:`repro.obs.trace` — the :class:`TraceCollector` protocol and the
+  standard :class:`TimelineCollector`: both simulator engines emit
+  identical per-burst event streams (placement, row verdict, timeline
+  window, command/layer provenance) when a collector is attached;
+* :mod:`repro.obs.perfetto` — Chrome/Perfetto ``trace_event`` JSON
+  export (one track per bank / bus tap / core), loadable in
+  ``ui.perfetto.dev``;
+* :mod:`repro.obs.counters` — the namespaced :class:`CounterRegistry`
+  unifying ``Experiment`` cache stats, :class:`EventCounts` and
+  :class:`SimResult` breakdowns behind one snapshot/JSON API;
+* :mod:`repro.obs.profile` — phase-scoped :func:`span` profiling over
+  ``Experiment.run/sweep``, the backends and the ``repro.plan`` search,
+  with aggregated per-phase reports.
+
+:mod:`repro.obs.bottleneck` folds a collected stream into the per-layer
+attribution table behind ``benchmarks/bottleneck_report.py``.
+
+Everything here is pure stdlib — attaching observability never adds a
+dependency the reference engine doesn't already have.
+"""
+
+from repro.obs.bottleneck import base_layer, format_table, layer_attribution
+from repro.obs.counters import (CounterNamespace, CounterRegistry,
+                                counters_from_events,
+                                counters_from_sim_result)
+from repro.obs.perfetto import (trace_event_json, validate_trace_events,
+                                write_perfetto)
+from repro.obs.profile import (Profiler, Span, active_profiler, profiled,
+                               span)
+from repro.obs.trace import (BurstEvent, CommandEvent, TimelineCollector,
+                             TraceCollector, VERDICT_NAMES)
+
+__all__ = [
+    "BurstEvent", "CommandEvent", "CounterNamespace", "CounterRegistry",
+    "Profiler", "Span", "TimelineCollector", "TraceCollector",
+    "VERDICT_NAMES", "active_profiler", "base_layer",
+    "counters_from_events", "counters_from_sim_result", "format_table",
+    "layer_attribution", "profiled", "span", "trace_event_json",
+    "validate_trace_events", "write_perfetto",
+]

@@ -1,0 +1,126 @@
+"""Per-layer bottleneck attribution from a collected burst stream.
+
+The paper's argument is about *where* cycles go — cross-bank transfers on
+the serialized bus vs bank-parallel near-bank streaming.  A collected
+:class:`~repro.obs.trace.TimelineCollector` carries exactly the data to
+settle that per layer: every burst's resource, duration, bank, verdict
+and issuing layer.  :func:`layer_attribution` folds the stream into one
+row per model layer:
+
+* ``bus_cycles`` / ``port_cycles`` / ``core_cycles`` — busy cycles the
+  layer's commands spent on the shared bus, the near-bank ports and the
+  PIMcore streaming ports (port/core cycles are summed across units, so
+  they can exceed the makespan — they measure parallel work);
+* ``activations`` / ``hits`` / ``conflicts`` and the row ``hit_rate``;
+* ``bytes`` moved and the layer's ``cross_bank_bytes`` share (bytes on
+  the sequential GBUF path — the paper's Fig. 1 metric);
+* ``span_cycles`` — the wall window from the layer's first command issue
+  to its last retire.
+
+Phase labels collapse onto their layer: the mappers emit one command per
+(layer × phase) labelled ``group:layer[:phase]`` (e.g. ``…:conv1:w`` for
+the weight fill feeding ``…:conv1``), and the attribution charges the
+phase to its layer so the table reads like the model, not the trace.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Iterable
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.obs.trace import TimelineCollector
+
+# resource values (repro.sim.burst.Resource) the attribution splits on
+_BUS, _BANK, _CORE = "bus", "bank", "core"
+_CROSS_BANK_KINDS = ("PIM_BK2GBUF", "PIM_GBUF2BK")
+
+
+def base_layer(label: str) -> str:
+    """Collapse a command's ``group:layer[:phase]`` label onto its layer
+    (two leading segments); group-level phases (``group:halo``) keep the
+    full label.  Group tags embed tile ranges with their own colon
+    (``resnet18_first8[0:8]``), so splitting skips bracketed spans."""
+    parts: list[str] = []
+    depth = 0
+    cur: list[str] = []
+    for ch in label:
+        if ch == ":" and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+            continue
+        if ch == "[":
+            depth += 1
+        elif ch == "]":
+            depth = max(depth - 1, 0)
+        cur.append(ch)
+    parts.append("".join(cur))
+    return ":".join(parts[:2]) if len(parts) > 2 else label
+
+
+def layer_attribution(collector: "TimelineCollector") -> list[dict]:
+    """One attribution row per layer, in first-appearance (trace) order."""
+    rows: dict[str, dict] = {}
+
+    def row(layer: str) -> dict:
+        return rows.setdefault(layer, {
+            "layer": layer, "bus_cycles": 0, "port_cycles": 0,
+            "core_cycles": 0, "activations": 0, "hits": 0, "conflicts": 0,
+            "bytes": 0, "cross_bank_bytes": 0,
+            "first_start": None, "last_finish": 0})
+
+    for b in collector.bursts:
+        r = row(base_layer(b.layer))
+        if b.resource == _BUS:
+            r["bus_cycles"] += b.duration
+        elif b.resource == _BANK:
+            r["port_cycles"] += b.duration
+        elif b.resource == _CORE:
+            r["core_cycles"] += b.duration
+        if b.verdict == "activate":
+            r["activations"] += 1
+        elif b.verdict == "hit":
+            r["hits"] += 1
+        elif b.verdict == "conflict":
+            r["conflicts"] += 1
+            r["activations"] += 1       # a conflict re-activates
+        r["bytes"] += b.nbytes
+        if b.kind in _CROSS_BANK_KINDS:
+            r["cross_bank_bytes"] += b.nbytes
+
+    for c in collector.commands:
+        r = row(base_layer(c.layer))
+        if r["first_start"] is None or c.start < r["first_start"]:
+            r["first_start"] = c.start
+        r["last_finish"] = max(r["last_finish"], c.finish)
+
+    out = []
+    for r in rows.values():
+        first = r.pop("first_start") or 0
+        last = r.pop("last_finish")
+        r["span_cycles"] = max(last - first, 0)
+        carried = r["activations"] + r["hits"]
+        r["hit_rate"] = r["hits"] / carried if carried else 0.0
+        out.append(r)
+    return out
+
+
+def format_table(rows: Iterable[dict], *, top: int | None = None,
+                 sort_by: str = "span_cycles") -> str:
+    """Render attribution rows as an aligned text table (largest
+    ``sort_by`` first; ``top`` truncates with a summary line)."""
+    rows = sorted(rows, key=lambda r: -r[sort_by])
+    shown = rows if top is None else rows[:top]
+    header = (f"{'layer':34s} {'span':>10s} {'bus':>10s} {'port':>10s} "
+              f"{'core':>10s} {'hit%':>6s} {'xbank KiB':>10s}")
+    lines = [header, "-" * len(header)]
+    for r in shown:
+        lines.append(
+            f"{r['layer'][:34]:34s} {r['span_cycles']:>10d} "
+            f"{r['bus_cycles']:>10d} {r['port_cycles']:>10d} "
+            f"{r['core_cycles']:>10d} {r['hit_rate']:>6.1%} "
+            f"{r['cross_bank_bytes'] / 1024:>10.1f}")
+    if top is not None and len(rows) > top:
+        rest = rows[top:]
+        lines.append(f"... and {len(rest)} more layers "
+                     f"({sum(r[sort_by] for r in rest)} {sort_by} total)")
+    return "\n".join(lines)

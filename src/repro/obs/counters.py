@@ -1,0 +1,142 @@
+"""Namespaced counter registry: one API over the stack's ad-hoc stats.
+
+Before this module the codebase kept three disjoint stat vocabularies:
+the :class:`~repro.pim.events.EventCounts` dataclass (hardware events),
+the per-replay breakdown dicts on :class:`~repro.sim.engine.SimResult`
+(busy cycles, per-bank rows), and the plain ``Experiment.stats`` dict
+(cache hit/miss bookkeeping).  :class:`CounterRegistry` unifies them:
+
+* it IS a ``MutableMapping[str, int | float]``, so existing call sites
+  (``stats["trace_hits"] += 1``, ``dict(exp.stats)``) keep working —
+  ``Experiment.stats`` is now one of these;
+* names are dot-namespaced (``experiment.trace_hits``,
+  ``sim.events.row_activations``); :meth:`namespace` returns a prefixed
+  view writing into the same store;
+* :func:`counters_from_events` / :func:`counters_from_sim_result`
+  flatten the existing structured stats into the shared vocabulary;
+* :meth:`snapshot` / :meth:`write_json` export a sorted point-in-time
+  copy — the counter-snapshot artifact CI uploads.
+"""
+
+from __future__ import annotations
+
+import json
+from collections.abc import MutableMapping
+from pathlib import Path
+from typing import TYPE_CHECKING, Iterator, Mapping
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.pim.events import EventCounts
+    from repro.sim.engine import SimResult
+
+Number = "int | float"
+
+
+class CounterRegistry(MutableMapping):
+    """A flat, dot-namespaced counter store."""
+
+    def __init__(self, initial: Mapping | None = None) -> None:
+        self._counts: dict[str, int | float] = dict(initial or {})
+
+    # -- MutableMapping interface (keeps dict-style call sites working) --
+    def __getitem__(self, name: str):
+        return self._counts[name]
+
+    def __setitem__(self, name: str, value) -> None:
+        self._counts[name] = value
+
+    def __delitem__(self, name: str) -> None:
+        del self._counts[name]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._counts)
+
+    def __len__(self) -> int:
+        return len(self._counts)
+
+    def __repr__(self) -> str:
+        return f"CounterRegistry({self.snapshot()!r})"
+
+    # -- the counter API ------------------------------------------------
+    def incr(self, name: str, amount: "int | float" = 1) -> None:
+        """Add ``amount`` to ``name`` (created at 0 when absent)."""
+        self._counts[name] = self._counts.get(name, 0) + amount
+
+    def merge(self, other: Mapping, prefix: str = "") -> None:
+        """Accumulate another mapping's counters into this one, optionally
+        under a dotted ``prefix``."""
+        pre = f"{prefix}." if prefix and not prefix.endswith(".") else prefix
+        for name, value in other.items():
+            self.incr(pre + name, value)
+
+    def namespace(self, prefix: str) -> "CounterNamespace":
+        """A prefixed writer over the same store:
+        ``reg.namespace("sim").incr("replays")`` bumps ``sim.replays``."""
+        return CounterNamespace(self, prefix)
+
+    def snapshot(self, prefix: str | None = None) -> dict:
+        """Sorted point-in-time copy, optionally restricted to one
+        namespace (the dotted ``prefix``)."""
+        if prefix is None:
+            return dict(sorted(self._counts.items()))
+        pre = prefix if prefix.endswith(".") else prefix + "."
+        return dict(sorted((k, v) for k, v in self._counts.items()
+                           if k.startswith(pre) or k == prefix))
+
+    def write_json(self, path: "str | Path",
+                   meta: Mapping | None = None) -> Path:
+        """Persist a snapshot as JSON (parents created).  ``meta`` rides
+        along under a ``"meta"`` key, counters under ``"counters"``."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        doc = {"meta": dict(meta or {}), "counters": self.snapshot()}
+        path.write_text(json.dumps(doc, indent=2) + "\n")
+        return path
+
+
+class CounterNamespace:
+    """Write-through view of one namespace of a :class:`CounterRegistry`."""
+
+    def __init__(self, registry: CounterRegistry, prefix: str) -> None:
+        self._registry = registry
+        self._prefix = prefix if prefix.endswith(".") else prefix + "."
+
+    def incr(self, name: str, amount: "int | float" = 1) -> None:
+        self._registry.incr(self._prefix + name, amount)
+
+    def __setitem__(self, name: str, value) -> None:
+        self._registry[self._prefix + name] = value
+
+    def __getitem__(self, name: str):
+        return self._registry[self._prefix + name]
+
+
+def counters_from_events(events: "EventCounts",
+                         prefix: str = "sim.events") -> dict:
+    """Flatten an :class:`~repro.pim.events.EventCounts` into namespaced
+    counters (field names preserved, so the vocabulary stays shared)."""
+    import dataclasses
+    pre = prefix if prefix.endswith(".") else prefix + "."
+    return {pre + f.name: getattr(events, f.name)
+            for f in dataclasses.fields(events)}
+
+
+def counters_from_sim_result(result: "SimResult",
+                             prefix: str = "sim") -> dict:
+    """Flatten a :class:`~repro.sim.engine.SimResult`'s breakdowns into
+    namespaced counters: the makespan, the bus-occupancy split, per-kind
+    busy cycles, aggregate bus/port busy totals and the row verdict
+    counts (via the result's observed :class:`EventCounts`)."""
+    pre = prefix if prefix.endswith(".") else prefix + "."
+    out = {pre + "makespan": result.makespan,
+           pre + "row_conflicts": result.row_conflicts,
+           pre + "bank_bus_busy_cycles": sum(result.bank_bus_busy.values()),
+           pre + "bank_port_busy_cycles":
+               sum(result.bank_port_busy.values()),
+           pre + "core_busy_cycles": sum(result.core_busy.values())}
+    for k, v in result.bus_busy.items():
+        out[f"{pre}bus_busy.{k}"] = v
+    for k, v in result.busy_by_kind.items():
+        out[f"{pre}busy_by_kind.{k}"] = v
+    out.update(counters_from_events(result.events, prefix=pre + "events"))
+    return out

@@ -1,0 +1,145 @@
+"""Chrome/Perfetto ``trace_event`` export for collected burst streams.
+
+:func:`trace_event_json` turns a :class:`repro.obs.trace.TimelineCollector`
+into the JSON-object ``trace_event`` format (the ``{"traceEvents": [...]}``
+flavour) that both ``chrome://tracing`` and ``ui.perfetto.dev`` load
+directly:
+
+* one **process** per resource class — the shared internal bus, the
+  near-bank ports, the PIMcore streaming ports, the GBcore — labelled via
+  ``process_name`` metadata events;
+* one **thread** (track) per unit: per-bank tracks under the bus process
+  (which bank the serialized bus is serving) and under the bank-port
+  process, per-core tracks under the PIMcore process — so a simulated
+  ResNet18 run opens with one timeline row per bank / bus tap;
+* every burst as a complete ``"ph": "X"`` slice (``ts`` / ``dur`` in
+  simulated memory-system cycles, exported on the microsecond axis:
+  1 cycle == 1 us on the viewer's clock), named by its issuing layer and
+  carrying bank / row / verdict / bytes in ``args``;
+* every command as an async ``"b"`` / ``"e"`` pair on a ``commands``
+  process (async events tolerate the overlap the ``overlap`` /
+  ``row-aware`` policies create — nested X slices would not).
+
+Zero-duration bursts are kept (they mark zero-byte commands' timeline
+position); Perfetto renders them as instant-width slices.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.obs.trace import TimelineCollector
+
+# process ids per resource class (resource value → pid) and the async
+# command track
+_RESOURCE_PIDS = {"bus": 1, "bank": 2, "core": 3, "gbcore": 4}
+_COMMANDS_PID = 5
+_PROCESS_NAMES = {1: "bus (shared GBUF path)", 2: "near-bank ports",
+                  3: "PIMcore streaming ports", 4: "GBcore",
+                  5: "commands"}
+
+
+def _burst_track(resource: str, unit: int, bank: int) -> tuple[int, int]:
+    """(pid, tid) for a burst: bus slices track the bank the serialized
+    bus is serving; port slices track their own unit."""
+    pid = _RESOURCE_PIDS[resource]
+    if resource == "bus":
+        return pid, max(bank, 0)
+    return pid, max(unit, 0)
+
+
+def _thread_label(pid: int, tid: int) -> str:
+    if pid == _RESOURCE_PIDS["bus"]:
+        return f"bus -> bank {tid}"
+    if pid == _RESOURCE_PIDS["bank"]:
+        return f"bank {tid} port"
+    if pid == _RESOURCE_PIDS["core"]:
+        return f"PIMcore {tid}"
+    return "track 0"
+
+
+def trace_event_json(collector: "TimelineCollector", *,
+                     label: str = "repro.sim replay") -> dict:
+    """Build the ``trace_event`` document for a collected replay."""
+    events: list[dict] = []
+    tracks: set[tuple[int, int]] = set()
+
+    for b in collector.bursts:
+        pid, tid = _burst_track(b.resource, b.unit, b.bank)
+        tracks.add((pid, tid))
+        args = {"cmd": b.cmd_index, "kind": b.kind, "bank": b.bank,
+                "row": b.row, "nbytes": b.nbytes}
+        if b.verdict:
+            args["verdict"] = b.verdict
+        events.append({"name": b.layer, "cat": b.kind, "ph": "X",
+                       "ts": b.start, "dur": b.duration,
+                       "pid": pid, "tid": tid, "args": args})
+
+    for c in collector.commands:
+        # async begin/end: command windows overlap under non-serial
+        # policies, which complete (X) slices on one track cannot express
+        common = {"name": c.layer, "cat": "command",
+                  "id": c.index, "pid": _COMMANDS_PID, "tid": 0,
+                  "args": {"kind": c.kind, "index": c.index}}
+        events.append(dict(common, ph="b", ts=c.start))
+        events.append(dict(common, ph="e", ts=c.finish))
+    if collector.commands:
+        tracks.add((_COMMANDS_PID, 0))
+
+    meta: list[dict] = []
+    for pid in sorted({p for p, _ in tracks}):
+        meta.append({"name": "process_name", "ph": "M", "pid": pid,
+                     "tid": 0, "args": {"name": _PROCESS_NAMES[pid]}})
+    for pid, tid in sorted(tracks):
+        meta.append({"name": "thread_name", "ph": "M", "pid": pid,
+                     "tid": tid, "args": {"name": _thread_label(pid, tid)}})
+
+    return {
+        "traceEvents": meta + events,
+        "displayTimeUnit": "ms",
+        "otherData": {"source": label,
+                      "clock": "memory-system cycles (1 cycle == 1 us)"},
+    }
+
+
+def write_perfetto(path: str | Path, collector: "TimelineCollector", *,
+                   label: str = "repro.sim replay") -> Path:
+    """Write the ``trace_event`` JSON to ``path`` (parents created) and
+    return it — open the file in ``ui.perfetto.dev`` or
+    ``chrome://tracing``."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    doc = trace_event_json(collector, label=label)
+    path.write_text(json.dumps(doc) + "\n")
+    return path
+
+
+def validate_trace_events(doc: dict) -> None:
+    """Schema check used by tests and the bottleneck report: the document
+    must be loadable ``trace_event`` JSON — a ``traceEvents`` list whose
+    members carry the per-phase required keys."""
+    if not isinstance(doc.get("traceEvents"), list):
+        raise ValueError("trace_event document needs a traceEvents list")
+    for ev in doc["traceEvents"]:
+        ph = ev.get("ph")
+        if ph not in ("X", "M", "b", "e"):
+            raise ValueError(f"unexpected event phase {ph!r}")
+        for key in ("name", "pid"):
+            if key not in ev:
+                raise ValueError(f"{ph} event missing {key!r}: {ev}")
+        if ph == "X":
+            for key in ("ts", "dur", "tid", "cat"):
+                if key not in ev:
+                    raise ValueError(f"X event missing {key!r}: {ev}")
+            if ev["dur"] < 0 or ev["ts"] < 0:
+                raise ValueError(f"negative time in X event: {ev}")
+        elif ph in ("b", "e"):
+            for key in ("ts", "cat", "id"):
+                if key not in ev:
+                    raise ValueError(f"{ph} event missing {key!r}: {ev}")
+        else:  # metadata
+            if "args" not in ev or "name" not in ev["args"]:
+                raise ValueError(f"M event missing args.name: {ev}")

@@ -1,0 +1,158 @@
+"""Phase-scoped profiling spans for the evaluation pipeline.
+
+Usage::
+
+    from repro.obs import Profiler, profiled, span
+
+    with profiled() as prof:
+        exp.sweep(...)                      # instrumented internally
+    print(prof.report()["phases"])
+
+Inside instrumented code (``Experiment.run/sweep``, the backends,
+``plan/dp.py`` / ``plan/beam.py``) phases are wrapped as
+``with span("experiment.map", workload=...):``.  :func:`span` consults
+the module's active profiler: with none active it yields immediately
+(one global read — profiling costs nothing when off); with one active
+it records a :class:`Span` (name, wall-clock window, nesting depth,
+metadata).
+
+:meth:`Profiler.report` aggregates spans by name into per-phase call
+counts, total and self time (total minus nested children), plus the
+overall wall window — the per-sweep profile report
+``Experiment.sweep(csv_path=...)`` writes alongside its CSV artifact.
+
+The active profiler is process-local state: a spawned sweep worker
+starts with none active (its phases simply go unprofiled), so profiling
+composes with ``sweep(workers=N)`` without any pickling.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Iterator, Mapping
+
+
+@dataclasses.dataclass
+class Span:
+    """One recorded phase window."""
+
+    name: str
+    start: float
+    end: float = 0.0
+    depth: int = 0
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def elapsed(self) -> float:
+        return self.end - self.start
+
+
+class Profiler:
+    """Records nested :class:`Span` windows and aggregates them."""
+
+    def __init__(self) -> None:
+        self.spans: list[Span] = []
+        self._stack: list[Span] = []
+
+    @contextlib.contextmanager
+    def span(self, name: str, **meta: Any) -> Iterator[Span]:
+        s = Span(name=name, start=time.perf_counter(),
+                 depth=len(self._stack), meta=meta)
+        self.spans.append(s)
+        self._stack.append(s)
+        try:
+            yield s
+        finally:
+            self._stack.pop()
+            s.end = time.perf_counter()
+
+    def report(self) -> dict:
+        """Aggregate by phase name: calls, total seconds, self seconds
+        (total minus time inside nested spans), plus the overall wall
+        window covered by top-level spans."""
+        phases: dict[str, dict] = {}
+        child_time: dict[int, float] = {}       # id(span) → nested seconds
+        # accumulate child time onto the innermost enclosing span: a stack
+        # replay over (start, end) reconstructs the nesting; still-open
+        # spans (report called inside one) are skipped
+        stack: list[Span] = []
+        for s in sorted((s for s in self.spans if s.end),
+                        key=lambda s: (s.start, -s.end)):
+            while stack and stack[-1].end <= s.start:
+                stack.pop()
+            if stack:
+                parent = stack[-1]
+                child_time[id(parent)] = \
+                    child_time.get(id(parent), 0.0) + s.elapsed
+            stack.append(s)
+        for s in self.spans:
+            if not s.end:
+                continue
+            p = phases.setdefault(s.name, {"calls": 0, "total_s": 0.0,
+                                           "self_s": 0.0})
+            p["calls"] += 1
+            p["total_s"] += s.elapsed
+            p["self_s"] += s.elapsed - child_time.get(id(s), 0.0)
+        closed = [s for s in self.spans if s.end]
+        wall = (max(s.end for s in closed) - min(s.start for s in closed)) \
+            if closed else 0.0
+        for p in phases.values():
+            p["total_s"] = round(p["total_s"], 6)
+            p["self_s"] = round(max(p["self_s"], 0.0), 6)
+        return {"wall_s": round(wall, 6),
+                "phases": dict(sorted(phases.items(),
+                                      key=lambda kv: -kv[1]["total_s"]))}
+
+    def write_report(self, path: "str | Path",
+                     meta: Mapping | None = None) -> Path:
+        """Persist :meth:`report` as JSON (parents created); ``meta`` —
+        e.g. the sweep's cache-stats delta — rides along."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        doc = dict(self.report())
+        if meta:
+            doc["meta"] = dict(meta)
+        path.write_text(json.dumps(doc, indent=2) + "\n")
+        return path
+
+
+# ---------------------------------------------------------------------------
+# the process-local active profiler
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Profiler | None = None
+
+
+def active_profiler() -> Profiler | None:
+    """The profiler :func:`span` currently records into (None: off)."""
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def profiled(profiler: Profiler | None = None) -> Iterator[Profiler]:
+    """Activate a profiler for the enclosed block (creating one when not
+    supplied); restores the previous active profiler on exit, so scopes
+    nest — an inner ``profiled()`` shadows, not corrupts, an outer one."""
+    global _ACTIVE
+    prof = profiler if profiler is not None else Profiler()
+    prev = _ACTIVE
+    _ACTIVE = prof
+    try:
+        yield prof
+    finally:
+        _ACTIVE = prev
+
+
+@contextlib.contextmanager
+def span(name: str, **meta: Any) -> Iterator[Span | None]:
+    """Record a phase on the active profiler; free no-op when none is."""
+    p = _ACTIVE
+    if p is None:
+        yield None
+        return
+    with p.span(name, **meta) as s:
+        yield s

@@ -1,0 +1,111 @@
+"""Burst-level trace collection: the event stream behind every replay.
+
+Both simulator engines (:func:`repro.sim.engine.simulate` and
+:func:`repro.sim.engine_vec.simulate_columnar`) accept an optional
+``collector``; when one is attached they emit, for every burst they
+replay, a :class:`BurstEvent` carrying the full placement and verdict
+story — which command and layer issued it, which resource timeline it
+occupied, which bank and row it touched, how the per-bank open-row
+tracker resolved it (ACTIVATE / HIT / CONFLICT), and the issue/finish
+times the engine computed — plus one :class:`CommandEvent` per trace
+command.  The two engines emit **identical** event streams (the
+bit-identity contract extended below the aggregate ``SimResult``), so
+the columnar fast path can feed the same tooling as the reference
+oracle.
+
+With no collector attached (the default) neither engine does any extra
+work: the reference engine pays one ``is None`` check per burst, the
+columnar engine skips event materialisation entirely — the
+zero-overhead-when-off contract ``benchmarks/perf_bench.py`` tracks.
+
+Events are plain tuples (:class:`typing.NamedTuple`), cheap to create a
+few hundred thousand at a time and trivially comparable/serialisable.
+:mod:`repro.obs.perfetto` turns a collected stream into Chrome
+``trace_event`` JSON (one track per bank / bus / core) that loads in
+``ui.perfetto.dev``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Protocol, runtime_checkable
+
+# how the engine's per-bank open-row tracker resolved a row-carrying
+# burst; "" marks bursts that carry no row (GBcore ops, zero-byte bursts)
+VERDICT_NONE = ""
+VERDICT_ACTIVATE = "activate"
+VERDICT_HIT = "hit"
+VERDICT_CONFLICT = "conflict"
+
+# integer verdict codes shared with the columnar engine's vectorized
+# classification (index == code)
+VERDICT_NAMES = (VERDICT_NONE, VERDICT_ACTIVATE, VERDICT_HIT,
+                 VERDICT_CONFLICT)
+
+
+class BurstEvent(NamedTuple):
+    """One replayed burst: placement, row verdict and timeline slot."""
+
+    cmd_index: int      # index of the issuing Command in the trace
+    layer: str          # the Command's layer/phase label (provenance)
+    kind: str           # CMD value, e.g. "PIM_BK2GBUF"
+    resource: str       # Resource value: "bus" / "bank" / "core" / "gbcore"
+    unit: int           # timeline unit: bank id / core id / 0
+    bank: int           # DRAM bank attribution (-1: none)
+    row: int            # row id (-1: none; namespaced per command)
+    verdict: str        # "" / "activate" / "hit" / "conflict"
+    nbytes: int
+    start: int          # cycle the burst occupied its timeline
+    duration: int       # transfer + switch + row-overhead cycles
+
+
+class CommandEvent(NamedTuple):
+    """One trace command's issue window (start includes cmd-issue pay)."""
+
+    index: int
+    layer: str
+    kind: str
+    start: int
+    finish: int
+
+
+@runtime_checkable
+class TraceCollector(Protocol):
+    """What an engine needs from a collector.  Implementations must be
+    cheap per call — they sit inside the replay loop — and should treat
+    the event stream as append-only."""
+
+    def on_burst(self, event: BurstEvent) -> None: ...
+
+    def on_command(self, event: CommandEvent) -> None: ...
+
+
+class TimelineCollector:
+    """The standard collector: append-only lists of burst and command
+    events, in replay order (identical between engines).
+
+    One collector may span several replays (e.g. a multi-policy sweep);
+    :meth:`clear` resets it between collections, and :attr:`bursts` /
+    :attr:`commands` are the raw streams tests compare and
+    :mod:`repro.obs.perfetto` exports.
+    """
+
+    def __init__(self) -> None:
+        self.bursts: list[BurstEvent] = []
+        self.commands: list[CommandEvent] = []
+
+    def on_burst(self, event: BurstEvent) -> None:
+        self.bursts.append(event)
+
+    def on_command(self, event: CommandEvent) -> None:
+        self.commands.append(event)
+
+    def clear(self) -> None:
+        self.bursts.clear()
+        self.commands.clear()
+
+    def __len__(self) -> int:
+        return len(self.bursts)
+
+    @property
+    def makespan(self) -> int:
+        return max((c.finish for c in self.commands), default=0)

@@ -26,6 +26,7 @@ from typing import Sequence
 
 from repro.core.fusion import FusedGroup, FusionPlan
 from repro.core.graph import Graph
+from repro.obs.profile import span
 from repro.plan.dp import PlanCost, TraceCost
 from repro.plan.space import candidate_grids
 
@@ -78,17 +79,19 @@ def beam_search(graph: Graph, arch_factory, *,
     open_states: list[State] = [(ci, 0, (), 0.0)
                                 for ci in range(len(combos))]
     finished: list[tuple[float, int, tuple[tuple[int, int], ...], int]] = []
-    while open_states:
-        nxt: list[State] = []
-        for ci, pos, groups, acc in open_states:
-            cost = combos[ci][0]
-            finished.append((acc + cost.close(pos), ci, groups, pos))
-            for stop in cost.stops(pos):
-                step = (cost.reorg(pos, (pos, stop)) if pos > 0 else 0.0) \
-                    + cost.group(pos, stop)
-                nxt.append((ci, stop, groups + ((pos, stop),), acc + step))
-        nxt.sort(key=lambda s: s[3] + combos[s[0]][0].close(s[1]))
-        open_states = nxt[:beam_width]
+    with span("plan.beam", combos=len(combos), beam_width=beam_width):
+        while open_states:
+            nxt: list[State] = []
+            for ci, pos, groups, acc in open_states:
+                cost = combos[ci][0]
+                finished.append((acc + cost.close(pos), ci, groups, pos))
+                for stop in cost.stops(pos):
+                    step = (cost.reorg(pos, (pos, stop))
+                            if pos > 0 else 0.0) + cost.group(pos, stop)
+                    nxt.append((ci, stop, groups + ((pos, stop),),
+                                acc + step))
+            nxt.sort(key=lambda s: s[3] + combos[s[0]][0].close(s[1]))
+            open_states = nxt[:beam_width]
 
     finished.sort(key=lambda f: f[0])
     out: list[BeamCandidate] = []

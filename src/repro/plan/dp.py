@@ -32,6 +32,7 @@ from repro.core import dataflow
 from repro.core.fusion import FusedGroup, FusionPlan, plan_fused
 from repro.core.graph import Graph
 from repro.core.tiling import GroupTiling, tile_group
+from repro.obs.profile import span
 from repro.pim.arch import PIMArch
 from repro.plan.space import legal_stops
 
@@ -219,14 +220,15 @@ def search_partition(graph: Graph, arch: PIMArch, tiles_y: int,
     n = len(graph)
     # F[i] = (cost, best stop j or None-for-tail), computed backwards
     best: list[tuple[float, int | None]] = [(0.0, None)] * (n + 1)
-    for i in range(n - 1, -1, -1):
-        c_best, choice = cost.close(i), None
-        for j in cost.stops(i):
-            c = (cost.reorg(i, (i, j)) if i > 0 else 0.0) \
-                + cost.group(i, j) + best[j][0]
-            if c < c_best:
-                c_best, choice = c, j
-        best[i] = (c_best, choice)
+    with span("plan.dp", layers=n, grid=f"{tiles_y}x{tiles_x}"):
+        for i in range(n - 1, -1, -1):
+            c_best, choice = cost.close(i), None
+            for j in cost.stops(i):
+                c = (cost.reorg(i, (i, j)) if i > 0 else 0.0) \
+                    + cost.group(i, j) + best[j][0]
+                if c < c_best:
+                    c_best, choice = c, j
+            best[i] = (c_best, choice)
 
     groups: list[FusedGroup] = []
     i = 0

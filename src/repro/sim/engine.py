@@ -46,17 +46,27 @@ timelines in lowering order (the ``row-aware`` policy first batches
 same-row bursts per bank — :func:`repro.sim.scheduler.batch_same_row`).
 Zero-byte transfers retire instantly (the analytic model also bills them
 nothing).
+
+Attaching a :class:`repro.obs.trace.TraceCollector` streams every replayed
+burst (placement, row verdict, timeline window, layer provenance) and
+every command window out of the engine — the same event stream the
+columnar engine emits (``tests/test_obs.py`` pins the identity).  With no
+collector the replay loop pays one ``is None`` check per burst.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 from repro.core.commands import CMD, Trace
 from repro.pim.arch import PIMArch
 from repro.pim.events import EventCounts, trace_events
 from repro.sim.burst import BurstOp, Resource, lower_trace
 from repro.sim.scheduler import BATCHING_POLICIES, batch_same_row, command_deps
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.obs.trace import TraceCollector
 
 _TRANSFER = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK,
              CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK)
@@ -107,12 +117,17 @@ class SimResult:
 def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
              lowered: list[list[BurstOp]] | None = None,
              row_reuse: bool = True,
-             prebatched: bool = False) -> SimResult:
+             prebatched: bool = False,
+             collector: "TraceCollector | None" = None) -> SimResult:
     """Replay a trace.  ``row_reuse`` selects the lowering's row addressing
     when ``lowered`` is not supplied (callers passing a pre-lowered trace
     have already made that choice).  ``prebatched=True`` marks a lowering
     whose ``row-aware`` same-row batching was already applied (e.g. the
-    Experiment's memoized ordering) so it is not re-sorted per call."""
+    Experiment's memoized ordering) so it is not re-sorted per call.
+    ``collector`` (a :class:`repro.obs.trace.TraceCollector`) receives
+    per-burst and per-command timeline events as they replay."""
+    if collector is not None:
+        from repro.obs.trace import BurstEvent, CommandEvent
     deps = command_deps(trace, policy)
     if lowered is None:
         lowered = lower_trace(trace, arch, row_reuse=row_reuse)
@@ -140,6 +155,10 @@ def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
             cost = 0 if c.kind in _TRANSFER else arch.cmd_issue_cycles
             cmd_start[i] = ready
             cmd_finish[i] = ready + cost
+            if collector is not None:
+                collector.on_command(CommandEvent(
+                    index=i, layer=c.layer, kind=c.kind.value,
+                    start=ready, finish=ready + cost))
             continue
         t0 = ready + arch.cmd_issue_cycles
         cmd_start[i] = t0
@@ -150,6 +169,7 @@ def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
             start = max(t0, free.get(key, 0))
             dur = op.transfer_cycles(arch) + op.switch_cycles
             row_cyc = 0
+            verdict = ""
             if op.row >= 0 and op.nbytes > 0:
                 events = bank_rows.setdefault(
                     op.bank, {"act": 0, "hit": 0, "conflict": 0})
@@ -157,6 +177,7 @@ def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
                     hits += 1
                     hit_bits += op.nbytes * 8
                     events["hit"] += 1
+                    verdict = "hit"
                 else:
                     row_cyc = arch.row_overhead_cycles
                     activations += 1
@@ -165,14 +186,22 @@ def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
                         conflicts += 1
                         row_cyc += arch.row_precharge_cycles
                         events["conflict"] += 1
+                        verdict = "conflict"
                     else:
                         seen.add(op.row)
                         events["act"] += 1
+                        verdict = "activate"
                     open_row[op.bank] = op.row
             dur += row_cyc
             finish = start + dur
             free[key] = finish
             end = max(end, finish)
+            if collector is not None:
+                collector.on_burst(BurstEvent(
+                    cmd_index=i, layer=c.layer, kind=c.kind.value,
+                    resource=op.resource.value, unit=op.unit, bank=op.bank,
+                    row=op.row, verdict=verdict, nbytes=op.nbytes,
+                    start=start, duration=dur))
             busy_by_kind[c.kind.value] = busy_by_kind.get(c.kind.value, 0) + dur
             if op.resource is Resource.BUS:
                 bus_busy["xfer"] += op.transfer_cycles(arch)
@@ -186,6 +215,10 @@ def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
             if op.resource is Resource.CORE_PORT:
                 core_busy[op.unit] = core_busy.get(op.unit, 0) + dur
         cmd_finish[i] = end
+        if collector is not None:
+            collector.on_command(CommandEvent(
+                index=i, layer=c.layer, kind=c.kind.value,
+                start=t0, finish=end))
 
     # observed counts = trace-level compute/buffer totals (identical to the
     # analytic prediction — bursts conserve bytes) with the row behaviour

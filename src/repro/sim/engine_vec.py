@@ -39,17 +39,21 @@ command segment (:func:`repro.sim.scheduler.batch_same_row_columnar`).
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 import numpy as np
 
 from repro.core.commands import CMD, Trace
 from repro.pim.arch import PIMArch
 from repro.pim.events import trace_events
-from repro.sim.burst import RES_SORT_CODE, ColumnarBursts, Resource, \
-    lower_trace_columnar
+from repro.sim.burst import RES_BY_CODE, RES_SORT_CODE, ColumnarBursts, \
+    Resource, lower_trace_columnar
 from repro.sim.engine import SimResult
 from repro.sim.scheduler import BATCHING_POLICIES, batch_same_row_columnar, \
     command_deps
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.obs.trace import TraceCollector
 
 _TRANSFER = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK,
              CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK)
@@ -81,13 +85,16 @@ def _sum_by(keys: np.ndarray, vals: np.ndarray) -> dict[int, int]:
 def _resolve_rows(cols: ColumnarBursts, arch: PIMArch):
     """Classify every row-carrying burst as HIT / fresh ACTIVATE / CONFLICT
     in replay order (see module docstring for why this is order-only) and
-    return the per-burst row-overhead cycles plus the aggregate counts."""
+    return the per-burst row-overhead cycles, the per-burst verdict codes
+    (``repro.obs.trace.VERDICT_NAMES`` order: 0 none / 1 activate / 2 hit
+    / 3 conflict) plus the aggregate counts."""
     n = cols.n_bursts
     row_cyc = np.zeros(n, dtype=np.int64)
+    verdict = np.zeros(n, dtype=np.int8)
     m = (cols.row >= 0) & (cols.nbytes > 0)
     mi = np.flatnonzero(m)
     if mi.size == 0:
-        return row_cyc, 0, 0, 0, 0, {}
+        return row_cyc, verdict, 0, 0, 0, 0, {}
     mb, mr, mc = cols.bank[mi], cols.row[mi], cols.cmd_index[mi]
 
     # HIT ⇔ previous row-carrying burst on the same bank used the same row
@@ -125,6 +132,9 @@ def _resolve_rows(cols: ColumnarBursts, arch: PIMArch):
 
     row_cyc[mi[~hit]] = arch.row_overhead_cycles
     row_cyc[mi[conflict]] += arch.row_precharge_cycles
+    verdict[mi[~hit]] = 1                   # fresh ACTIVATE
+    verdict[mi[hit]] = 2                    # HIT
+    verdict[mi[conflict]] = 3               # CONFLICT (re-activation)
 
     if int(mb.min()) >= 0 and int(mb.max()) <= 1 << 20:
         nb = int(mb.max()) + 1
@@ -144,7 +154,7 @@ def _resolve_rows(cols: ColumnarBursts, arch: PIMArch):
                               "conflict": int(cf)}
                      for b, a, h, cf in zip(ub, per_act, per_hit, per_conf)}
     hit_bits = int(cols.nbytes[mi[hit]].sum()) * 8
-    return (row_cyc, int((~hit).sum()), int(hit.sum()),
+    return (row_cyc, verdict, int((~hit).sum()), int(hit.sum()),
             int(conflict.sum()), hit_bits, bank_rows)
 
 
@@ -159,9 +169,12 @@ class _BurstProfile:
     grp_sum: np.ndarray        # per-(cmd, timeline) run duration sums
     grp_res: np.ndarray
     grp_unit: np.ndarray
+    grp_start: np.ndarray      # first burst index of each run
     g_lo: np.ndarray           # run-index range per command
     g_hi: np.ndarray
     per_cmd_dur: np.ndarray    # total burst cycles per command
+    dur: np.ndarray            # per-burst cycles (transfer+switch+row)
+    verdict: np.ndarray        # per-burst VERDICT_NAMES codes (int8)
     activations: int
     hits: int
     conflicts: int
@@ -186,7 +199,7 @@ def _burst_profile(cols: ColumnarBursts, arch: PIMArch) -> _BurstProfile:
                    arch.core_bank_bytes_per_cycle, 1],
                   dtype=np.int64)[cols.rescode]
     transfer = np.where(cols.nbytes > 0, -(-cols.nbytes // bw), 0)
-    (row_cyc, activations, hits, conflicts, hit_bits,
+    (row_cyc, verdict, activations, hits, conflicts, hit_bits,
      bank_rows) = _resolve_rows(cols, arch)
     dur = transfer + cols.switch + row_cyc
 
@@ -220,9 +233,12 @@ def _burst_profile(cols: ColumnarBursts, arch: PIMArch) -> _BurstProfile:
         grp_sum=grp_sum,
         grp_res=cols.rescode[starts],
         grp_unit=cols.unit[starts],
+        grp_start=starts,
         g_lo=np.searchsorted(starts, cols.offsets[:-1], side="left"),
         g_hi=np.searchsorted(starts, cols.offsets[1:], side="left"),
         per_cmd_dur=csum[cols.offsets[1:]] - csum[cols.offsets[:-1]],
+        dur=dur,
+        verdict=verdict,
         activations=activations, hits=hits, conflicts=conflicts,
         hit_bits=hit_bits, bank_rows=bank_rows, bus_busy=bus_busy,
         bank_bus_busy=_sum_by(cols.bank[bus_m & has_bank],
@@ -238,15 +254,62 @@ def _burst_profile(cols: ColumnarBursts, arch: PIMArch) -> _BurstProfile:
     return profile
 
 
+def _emit_events(collector: "TraceCollector", trace: Trace,
+                 cols: ColumnarBursts, p: _BurstProfile,
+                 anchors: np.ndarray, cmd_start: list[int],
+                 cmd_finish: list[int]) -> None:
+    """Stream the replay to ``collector`` — the same per-burst / per-command
+    events the reference engine emits.  Burst starts come from the run
+    anchors recorded during the command loop plus the exclusive duration
+    cumsum within each run (bursts on one timeline chain head-to-tail, and
+    a timeline recurring later in a command re-anchors at its own previous
+    finish — exactly the reference's ``max(t0, free)`` per burst)."""
+    from repro.obs.trace import VERDICT_NAMES, BurstEvent, CommandEvent
+
+    n = cols.n_bursts
+    if n:
+        starts = p.grp_start
+        gidx = np.repeat(np.arange(starts.size),
+                         np.diff(np.append(starts, n)))
+        csum = np.concatenate([np.zeros(1, dtype=np.int64),
+                               np.cumsum(p.dur)])
+        burst_start = anchors[gidx] + csum[:-1] - csum[starts[gidx]]
+        layers = [c.layer for c in trace]
+        kinds = [c.kind.value for c in trace]
+        dur, verdict = p.dur, p.verdict
+        for i in range(n):
+            ci = int(cols.cmd_index[i])
+            collector.on_burst(BurstEvent(
+                cmd_index=ci, layer=layers[ci], kind=kinds[ci],
+                resource=RES_BY_CODE[int(cols.rescode[i])].value,
+                unit=int(cols.unit[i]), bank=int(cols.bank[i]),
+                row=int(cols.row[i]), verdict=VERDICT_NAMES[int(verdict[i])],
+                nbytes=int(cols.nbytes[i]),
+                start=int(burst_start[i]), duration=int(dur[i])))
+    for i, c in enumerate(trace):
+        collector.on_command(CommandEvent(
+            index=i, layer=c.layer, kind=c.kind.value,
+            start=cmd_start[i], finish=cmd_finish[i]))
+
+
 def simulate_columnar(trace: Trace, arch: PIMArch, policy: str = "serial",
                       cols: ColumnarBursts | None = None,
                       row_reuse: bool = True,
-                      prebatched: bool = False) -> SimResult:
+                      prebatched: bool = False,
+                      collector: "TraceCollector | None" = None) -> SimResult:
     """Drop-in vectorized equivalent of :func:`repro.sim.engine.simulate`
     over a columnar lowering.  ``cols`` of ``None`` lowers the trace here
     (``row_reuse`` selecting the addressing mode, as in the reference);
     ``prebatched=True`` marks a lowering whose ``row-aware`` batching was
-    already applied (e.g. the Experiment's memoized ordering)."""
+    already applied (e.g. the Experiment's memoized ordering).
+
+    ``collector`` receives the SAME per-burst / per-command event streams
+    the reference engine emits (``tests/test_obs.py`` pins the identity).
+    Per-burst starts are reconstructed from the memoized profile: within a
+    (command, timeline) run bursts chain head-to-tail from the run's
+    anchor ``max(t0, free)``, so burst *k*'s start is the anchor plus the
+    exclusive duration cumsum inside the run.  With no collector the hot
+    loop is untouched (the anchor-recording variant never runs)."""
     deps = command_deps(trace, policy)      # validates the policy name too
     if cols is None:
         cols = lower_trace_columnar(trace, arch, row_reuse=row_reuse)
@@ -261,6 +324,8 @@ def simulate_columnar(trace: Trace, arch: PIMArch, policy: str = "serial",
     cmd_finish = [0] * len(trace)
     issue = arch.cmd_issue_cycles
     grp_sum, grp_res, grp_unit = p.grp_sum, p.grp_res, p.grp_unit
+    anchors = np.zeros(grp_sum.size, dtype=np.int64) \
+        if collector is not None else None
     for i, c in enumerate(trace):
         ready = max((cmd_finish[j] for j in deps[i]), default=0)
         if p.g_lo[i] == p.g_hi[i]:
@@ -272,14 +337,28 @@ def simulate_columnar(trace: Trace, arch: PIMArch, policy: str = "serial",
             continue
         t0 = ready + issue
         end = t0
-        for g in range(p.g_lo[i], p.g_hi[i]):
-            key = (int(grp_res[g]), int(grp_unit[g]))
-            finish = max(t0, free.get(key, 0)) + int(grp_sum[g])
-            free[key] = finish
-            if finish > end:
-                end = finish
+        if anchors is None:
+            for g in range(p.g_lo[i], p.g_hi[i]):
+                key = (int(grp_res[g]), int(grp_unit[g]))
+                finish = max(t0, free.get(key, 0)) + int(grp_sum[g])
+                free[key] = finish
+                if finish > end:
+                    end = finish
+        else:
+            for g in range(p.g_lo[i], p.g_hi[i]):
+                key = (int(grp_res[g]), int(grp_unit[g]))
+                anchor = max(t0, free.get(key, 0))
+                anchors[g] = anchor
+                finish = anchor + int(grp_sum[g])
+                free[key] = finish
+                if finish > end:
+                    end = finish
         cmd_start[i] = t0
         cmd_finish[i] = end
+
+    if collector is not None:
+        _emit_events(collector, trace, cols, p, anchors,
+                     cmd_start, cmd_finish)
 
     busy_by_kind: dict[str, int] = {}
     for i, c in enumerate(trace):
