@@ -30,7 +30,7 @@ import json
 import sys
 from pathlib import Path
 
-from repro.experiment import Experiment, EvalSpec
+from repro.experiment import EvalSpec, Experiment
 from repro.experiment.artifacts import default_artifact_dir
 from repro.obs import (TimelineCollector, counters_from_sim_result,
                        format_table, layer_attribution, profiled,

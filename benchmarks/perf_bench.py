@@ -14,7 +14,12 @@ Measured in one run, so the speedup numbers are internally consistent:
 * **sim_sweep** — wall-clock of :func:`benchmarks.sim_sweep.run_sweep` on
   a fresh Experiment per engine (mapping + lowering + 4 replays × 3
   systems + artifacts, i.e. what CI actually pays), and the
-  columnar-vs-reference speedup — the ISSUE gate is ≥ 10×.
+  columnar-vs-reference speedup — the ISSUE gate is ≥ 10×;
+* **verify** — schedule-verification overhead: a plain columnar replay
+  vs the same replay with a TimelineCollector attached plus the full
+  :func:`repro.check.replay_and_verify` audit (what an
+  ``EvalSpec(verify=True)`` evaluation pays on top of replay).  Under
+  ``--check`` the audit must also come back finding-free.
 
 ``BENCH_sim.json`` is a HISTORY: every run appends one entry stamped with
 the git commit and UTC date, so the bench trajectory rides along in the
@@ -136,6 +141,32 @@ def bench_engines(trace, arch) -> dict:
     return out
 
 
+def bench_verify(trace, arch) -> dict:
+    """Verify-on vs verify-off columnar replay on the bench point.  The
+    verified leg replays with a collector and re-checks the whole event
+    stream (resource exclusivity, dependencies, row states, durations,
+    aggregate re-derivation) plus the Command-IR lint."""
+    from repro.check import replay_and_verify
+
+    last: dict = {}
+
+    def verified() -> None:
+        last["report"] = replay_and_verify(trace, arch, "row-aware",
+                                           engine="columnar")
+
+    t_plain = _best_of(lambda: simulate_columnar(trace, arch, "row-aware"))
+    t_verified = _best_of(verified)
+    report = last["report"]
+    return {
+        "policy": "row-aware",
+        "replay_s": round(t_plain, 4),
+        "replay_verify_s": round(t_verified, 4),
+        "overhead_x": round(t_verified / t_plain, 2),
+        "findings": len(report.findings),
+        "ok": report.ok,
+    }
+
+
 def bench_sim_sweep() -> dict:
     from benchmarks.sim_sweep import run_sweep
     times = {}
@@ -168,6 +199,7 @@ def main(argv: list[str] | None = None) -> int:
         "lowering": bench_lowering(trace, arch),
         "engines": bench_engines(trace, arch),
         "sim_sweep": bench_sim_sweep(),
+        "verify": bench_verify(trace, arch),
     }
     doc = load_history()
     doc["history"].append(entry)
@@ -183,7 +215,12 @@ def main(argv: list[str] | None = None) -> int:
         if fail:
             print(f"[perf_bench] FAIL: {fail}", file=sys.stderr)
             return 1
-        print("[perf_bench] regression check passed", file=sys.stderr)
+        if not entry["verify"]["ok"]:
+            print(f"[perf_bench] FAIL: schedule verification found "
+                  f"{entry['verify']['findings']} issue(s)", file=sys.stderr)
+            return 1
+        print("[perf_bench] regression + verification checks passed",
+              file=sys.stderr)
     return 0
 
 

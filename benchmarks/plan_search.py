@@ -26,7 +26,7 @@ import sys
 import time
 
 from repro.core.fusion import plan_fused
-from repro.experiment import Experiment, SYSTEMS
+from repro.experiment import SYSTEMS, Experiment
 from repro.experiment.artifacts import default_artifact_dir
 from repro.plan import enumerate_partitions, plan_record, write_plan_json
 

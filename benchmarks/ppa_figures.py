@@ -31,9 +31,9 @@ SYSTEMS = ("AiM-like", "Fused16", "Fused4")
 WORKLOADS = ("ResNet18_First8Layers", "ResNet18_Full")
 
 
-def _timed(exp: Experiment, system: str, wl: str, g: int, l: int):
+def _timed(exp: Experiment, system: str, wl: str, g: int, lb: int):
     t0 = time.perf_counter()
-    r = exp.run(workload=wl, system=system, gbuf_bytes=g, lbuf_bytes=l)
+    r = exp.run(workload=wl, system=system, gbuf_bytes=g, lbuf_bytes=lb)
     n = exp.normalized(r)
     us = (time.perf_counter() - t0) * 1e6
     return r, n, us
@@ -68,11 +68,11 @@ def fig6_lbuf_sweep() -> list[str]:
     rows, results = [], []
     for wl in WORKLOADS:
         for system in SYSTEMS:
-            for l in (0, 64, 128, 256, 512, 1024):
-                r, n, us = _timed(exp, system, wl, 2 * KB, l)
+            for lb in (0, 64, 128, 256, 512, 1024):
+                r, n, us = _timed(exp, system, wl, 2 * KB, lb)
                 results.append(r)
                 rows.append(
-                    f"fig6/{wl}/{system}/G2K_L{l},{us:.0f},"
+                    f"fig6/{wl}/{system}/G2K_L{lb},{us:.0f},"
                     f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"
                     f"area={n['area']:.4f}")
     _persist("fig6_lbuf_sweep", exp, results)
@@ -84,11 +84,11 @@ def fig7_joint_sweep() -> list[str]:
     exp = Experiment()
     rows, results = [], []
     for system in SYSTEMS:
-        for g, l in ((2, 0), (8, 128), (16, 256), (32, 256), (64, 256),
+        for g, lb in ((2, 0), (8, 128), (16, 256), (32, 256), (64, 256),
                      (64, 100 * KB)):
-            r, n, us = _timed(exp, system, "ResNet18_Full", g * KB, l)
+            r, n, us = _timed(exp, system, "ResNet18_Full", g * KB, lb)
             results.append(r)
-            label = f"G{g}K_L{l if l < KB else str(l // KB) + 'K'}"
+            label = f"G{g}K_L{lb if lb < KB else str(lb // KB) + 'K'}"
             rows.append(
                 f"fig7/ResNet18_Full/{system}/{label},{us:.0f},"
                 f"cycles={n['cycles']:.4f};energy={n['energy']:.4f};"

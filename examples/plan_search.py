@@ -13,7 +13,7 @@ Shows the `repro.plan` subsystem end to end on ResNet18:
 Pure stdlib — run:  PYTHONPATH=src python examples/plan_search.py
 """
 
-from repro.experiment import Experiment, SYSTEMS
+from repro.experiment import SYSTEMS, Experiment
 from repro.plan import beam_search, load_plan, plan_record, read_plan_json, \
     write_plan_json
 

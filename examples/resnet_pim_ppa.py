@@ -13,7 +13,6 @@ Run:  PYTHONPATH=src python examples/resnet_pim_ppa.py
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.experiment import default_experiment

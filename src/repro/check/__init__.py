@@ -1,0 +1,44 @@
+"""repro.check — static verification of simulator artifacts.
+
+The engines' fidelity and bit-identity gates prove the two replay engines
+*agree*; this subsystem is the independent referee that proves what they
+agree on is *legal* — without re-running them:
+
+* :mod:`repro.check.trace_lint` — is a Command-IR trace physically
+  plausible on a given arch (bank placement, field sanity beyond
+  ``Command.validate()``, prefetch misuse, row-capacity)?
+* :mod:`repro.check.schedule` — does a collected replay (SimResult +
+  event stream) respect resource exclusivity, hazard edges, the row
+  state machine, and its own aggregate accounting?
+* :mod:`repro.check.plan_lint` — do saved fusion-plan artifacts and
+  pinned ``plan_overrides`` still satisfy group legality (plus the known
+  cost-model caveats)?
+
+All checkers report through :class:`~repro.check.report.CheckReport` —
+ordered ``(code, location, message)`` findings with stable codes that
+tests and CI gates assert on.  ``python -m repro.check`` lints saved
+Perfetto / plan JSON artifacts from the command line.
+"""
+
+from repro.check.plan_lint import (lint_plan_overrides, lint_plan_record,
+                                   lint_plan_sig)
+from repro.check.report import (CheckError, CheckReport, Finding,
+                                merge_reports)
+from repro.check.schedule import (replay_and_verify, verify_schedule,
+                                  verify_stream)
+from repro.check.trace_lint import lint_command, lint_trace
+
+__all__ = [
+    "CheckError",
+    "CheckReport",
+    "Finding",
+    "lint_command",
+    "lint_plan_overrides",
+    "lint_plan_record",
+    "lint_plan_sig",
+    "lint_trace",
+    "merge_reports",
+    "replay_and_verify",
+    "verify_schedule",
+    "verify_stream",
+]

@@ -1,0 +1,153 @@
+"""``python -m repro.check`` — lint saved artifacts and replay grids.
+
+Three subcommands::
+
+    # audit plan JSON artifacts (legality + cost caveats, graph-resolved
+    # from each record's own workload/system coordinates)
+    python -m repro.check plan artifacts/plan_*.json
+
+    # verify a saved Perfetto trace_event export (stream-only invariants;
+    # --system adds the arch-dependent duration re-derivation)
+    python -m repro.check trace artifacts/bottleneck_*.perfetto.json \
+        --system Fused16
+
+    # replay + verify the full policy x row-reuse x engine grid (the CI
+    # schedule-legality gate)
+    python -m repro.check grid --workload ResNet18_Full --system Fused16
+
+Every subcommand exits non-zero when any error-severity finding is
+recorded; ``--json`` emits the merged CheckReport as JSON.
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import sys
+from typing import Any
+
+from repro.check.plan_lint import lint_plan_overrides, lint_plan_record
+from repro.check.report import CheckReport, merge_reports
+from repro.check.schedule import replay_and_verify, verify_stream
+
+POLICIES = ("serial", "overlap", "row-aware")
+ENGINES = ("reference", "columnar")
+
+
+def _experiment() -> Any:
+    from repro.experiment import default_experiment
+    return default_experiment()
+
+
+def _arch_for(exp: Any, system: str) -> Any:
+    spec = exp.systems.get(system)
+    return spec.make_arch(*spec.default_buffers)
+
+
+def _cmd_plan(ns: argparse.Namespace) -> list[CheckReport]:
+    exp = None if ns.no_graph else _experiment()
+    reports = []
+    for path in ns.artifacts:
+        with open(path) as fh:
+            record = json.load(fh)
+        graph = arch = None
+        if exp is not None:
+            workload = ns.workload or record.get("workload")
+            system = ns.system or record.get("system")
+            if workload and workload in exp.workloads.names():
+                graph = exp.graph(workload)
+            if system and system in exp.systems.names():
+                arch = _arch_for(exp, system)
+        report = lint_plan_record(record, graph=graph, arch=arch)
+        report.context["artifact"] = path
+        reports.append(report)
+    if exp is not None:
+        graphs = {w: exp.graph(w) for w in exp.workloads.names()}
+        for name in exp.systems.names():
+            spec = exp.systems.get(name)
+            if not getattr(spec, "plan_overrides", None):
+                continue
+            reports.append(lint_plan_overrides(spec, graphs))
+    return reports
+
+
+def _cmd_trace(ns: argparse.Namespace) -> list[CheckReport]:
+    from repro.obs.perfetto import events_from_trace_json
+
+    arch = None
+    if ns.system:
+        arch = _arch_for(_experiment(), ns.system)
+    reports = []
+    for path in ns.artifacts:
+        with open(path) as fh:
+            doc = json.load(fh)
+        bursts, commands = events_from_trace_json(doc)
+        report = verify_stream(bursts, commands, arch=arch)
+        report.context["artifact"] = path
+        reports.append(report)
+    return reports
+
+
+def _cmd_grid(ns: argparse.Namespace) -> list[CheckReport]:
+    exp = _experiment()
+    spec = exp.systems.get(ns.system)
+    arch = spec.make_arch(*spec.default_buffers)
+    trace = exp.trace(ns.workload, ns.system, *spec.default_buffers)
+    reports = []
+    for policy, reuse, engine in itertools.product(
+            POLICIES, (True, False), ENGINES):
+        report = replay_and_verify(trace, arch, policy, row_reuse=reuse,
+                                   engine=engine)
+        report.context.update({"workload": ns.workload,
+                               "system": ns.system})
+        reports.append(report)
+        if not ns.json:
+            print(f"{policy:10s} row_reuse={reuse!s:5s} "
+                  f"[{engine:9s}] {report.summary()}")
+    return reports
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="static verification of simulator artifacts")
+    parser.add_argument("--json", action="store_true",
+                        help="emit the merged CheckReport as JSON")
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    p = sub.add_parser("plan", help="lint plan JSON artifacts")
+    p.add_argument("artifacts", nargs="+")
+    p.add_argument("--workload", help="override the record's workload")
+    p.add_argument("--system", help="override the record's system")
+    p.add_argument("--no-graph", action="store_true",
+                   help="structural checks only (no registry lookups)")
+    p.set_defaults(run=_cmd_plan)
+
+    p = sub.add_parser("trace", help="verify saved Perfetto exports")
+    p.add_argument("artifacts", nargs="+")
+    p.add_argument("--system",
+                   help="arch for the duration re-derivation checks")
+    p.set_defaults(run=_cmd_trace)
+
+    p = sub.add_parser("grid",
+                       help="replay + verify the policy x row-reuse x "
+                            "engine grid")
+    p.add_argument("--workload", default="ResNet18_Full")
+    p.add_argument("--system", default="Fused16")
+    p.set_defaults(run=_cmd_grid)
+
+    ns = parser.parse_args(argv)
+    reports = ns.run(ns)
+    merged = merge_reports(reports, checker="repro.check")
+    if ns.json:
+        print(json.dumps(merged.to_dict(), indent=2))
+    else:
+        for report in reports:
+            for line in report.lines():
+                print(line)
+    return 0 if merged.ok else 1
+
+
+if __name__ == "__main__":    # pragma: no cover - exercised via CI
+    sys.exit(main())

@@ -1,0 +1,214 @@
+"""Static audit of fusion-plan artifacts and pinned plan overrides.
+
+A searched plan survives as a ``repro.plan/1`` JSON record or a
+``SystemSpec.plan_overrides`` signature pin.  Both outlive the run that
+produced them, so before a stale or hand-edited artifact maps a workload
+this linter re-derives the legality the search relied on — plus the known
+cost-model caveats a legal-but-suspicious plan can carry:
+
+==================  ======================================================
+code                rule
+==================  ======================================================
+``schema``          the record's schema tag is not ``repro.plan/1``
+``record-field``    a required field (``groups`` / ``tail_start``) is
+                    missing or malformed
+``graph-mismatch``  the record names a different graph, or a layer count
+                    that does not match the supplied graph
+``tile-grid``       a group's tile grid disagrees with the record's (or
+                    the system's) declared grid
+``non-contiguous``  the groups do not tile ``[0, tail_start)`` exactly, or
+                    ``tail_start`` falls outside the graph
+``plan-illegal``    :func:`~repro.core.fusion.group_legality_coded`
+                    rejects a group — the legality code is embedded in
+                    the message (``divide: ...``, ``residual: ...``)
+``cost-regression``  the searched cost exceeds the greedy baseline the
+                    record itself reports — advisory
+``halo-unclamped``  a group's in-group halo billing exceeds one full
+                    input-map pass: :func:`group_input_halo_bytes` sums
+                    per-tile halo'd fetches UNCLAMPED, while the cost
+                    oracle's contract assumes at most one extra map pass —
+                    advisory (known cost-model caveat)
+==================  ======================================================
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Iterable, Mapping, Sequence
+
+from repro.check.report import CheckReport
+from repro.core.dataflow import group_input_halo_bytes
+from repro.core.fusion import PlanSig, group_legality_coded
+from repro.core.graph import Graph
+from repro.core.tiling import tile_group
+from repro.pim.arch import PIMArch
+from repro.plan.artifacts import SCHEMA
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.experiment.registry import SystemSpec
+
+GroupTuple = tuple[int, int, int, int]
+
+
+def _halo_caveat(graph: Graph, start: int, stop: int, tiles_y: int,
+                 tiles_x: int, arch: PIMArch, where: str,
+                 report: CheckReport) -> None:
+    """Flag in-group halo billing above one full input-map pass (the
+    unclamped per-tile sum the dataflow bills vs the at-most-one-pass
+    contract the cost oracle's docstring assumes)."""
+    group = graph.slice(start, stop)
+    dt = arch.dtype_bytes
+    first = group[0]
+    exact_in = first.cin * first.iy * first.ix * dt
+    halo = group_input_halo_bytes(
+        group, tile_group(group, tiles_y, tiles_x), dt)
+    if halo > exact_in:
+        report.add("halo-unclamped", where,
+                   f"in-group halo bills {halo} B > one full input-map "
+                   f"pass ({exact_in} B); group_input_halo_bytes sums "
+                   "per-tile fetches unclamped, so deep receptive fields "
+                   "over-bill cross-bank traffic", severity="warning")
+
+
+def lint_plan_groups(graph: Graph, groups: Sequence[GroupTuple],
+                     tail_start: int, report: CheckReport, *,
+                     arch: PIMArch | None = None,
+                     tile_grid: tuple[int, int] | None = None,
+                     where: str = "groups") -> None:
+    """Audit a group list + tail split against ``graph``, appending coded
+    findings (contiguity, per-group legality, grid agreement, and — given
+    an ``arch`` — the halo cost caveat)."""
+    if not 0 <= tail_start <= len(graph):
+        report.add("non-contiguous", "tail_start",
+                   f"tail_start={tail_start} outside the "
+                   f"{len(graph)}-layer graph")
+        return
+    pos = 0
+    for gi, tup in enumerate(groups):
+        loc = f"{where}[{gi}]"
+        try:
+            start, stop, tiles_y, tiles_x = (int(v) for v in tup)
+        except (TypeError, ValueError):
+            report.add("record-field", loc,
+                       f"group entry {tup!r} is not a "
+                       "(start, stop, tiles_y, tiles_x) 4-tuple")
+            return
+        if start != pos:
+            report.add("non-contiguous", loc,
+                       f"group starts at {start}; the previous group "
+                       f"ends at {pos} (groups must tile the prefix "
+                       "contiguously)")
+        pos = stop
+        if tile_grid is not None and (tiles_y, tiles_x) != tile_grid:
+            report.add("tile-grid", loc,
+                       f"group grid {tiles_y}x{tiles_x} != declared "
+                       f"grid {tile_grid[0]}x{tile_grid[1]}")
+        coded = group_legality_coded(graph, start, stop, tiles_y, tiles_x)
+        if coded is not None:
+            code, message = coded
+            report.add("plan-illegal", loc, f"{code}: {message}")
+        elif arch is not None:
+            _halo_caveat(graph, start, stop, tiles_y, tiles_x, arch,
+                         loc, report)
+    if pos != tail_start:
+        report.add("non-contiguous", "tail_start",
+                   f"groups cover [0, {pos}) but tail_start="
+                   f"{tail_start} — the plan leaves a gap or an overlap")
+
+
+def lint_plan_sig(graph: Graph, sig: PlanSig, *,
+                  arch: PIMArch | None = None,
+                  tile_grid: tuple[int, int] | None = None,
+                  where: str = "groups") -> CheckReport:
+    """Audit one plan signature (the ``plan_overrides`` pin format)."""
+    report = CheckReport(checker="plan-lint",
+                         context={"graph": graph.name})
+    groups, tail_start = sig
+    lint_plan_groups(graph, groups, tail_start, report, arch=arch,
+                     tile_grid=tile_grid, where=where)
+    return report
+
+
+def lint_plan_record(record: Mapping, *, graph: Graph | None = None,
+                     arch: PIMArch | None = None) -> CheckReport:
+    """Audit one ``repro.plan/1`` JSON record (a loaded
+    :func:`repro.plan.artifacts.read_plan_json` dict, or any mapping).
+
+    Structural checks always run; legality and the halo caveat need the
+    ``graph`` (and ``arch``) the record targets."""
+    report = CheckReport(checker="plan-lint",
+                         context={k: record.get(k)
+                                  for k in ("workload", "system")
+                                  if record.get(k)})
+    if record.get("schema") != SCHEMA:
+        report.add("schema", "schema",
+                   f"schema tag {record.get('schema')!r} is not "
+                   f"{SCHEMA!r}")
+    missing = [k for k in ("groups", "tail_start") if k not in record]
+    if missing:
+        report.add("record-field", ",".join(missing),
+                   f"required field(s) {missing} missing from the record")
+        return report
+    groups = record["groups"]
+    tail_start = record["tail_start"]
+    if not isinstance(groups, (list, tuple)) \
+            or not isinstance(tail_start, int):
+        report.add("record-field", "groups/tail_start",
+                   f"groups must be a list and tail_start an int "
+                   f"(got {type(groups).__name__} / "
+                   f"{type(tail_start).__name__})")
+        return report
+
+    grid = record.get("tile_grid")
+    tile_grid = tuple(grid) if isinstance(grid, (list, tuple)) \
+        and len(grid) == 2 else None
+
+    cost, greedy = record.get("cost"), record.get("greedy_cost")
+    if isinstance(cost, (int, float)) and isinstance(greedy, (int, float)) \
+            and cost > greedy:
+        report.add("cost-regression", "cost",
+                   f"searched cost {cost} exceeds the greedy baseline "
+                   f"{greedy} the record itself reports — the artifact "
+                   "is stale or the search regressed", severity="warning")
+
+    if graph is None:
+        return report
+    if record.get("graph") not in (None, graph.name):
+        report.add("graph-mismatch", "graph",
+                   f"record was serialized for graph "
+                   f"{record['graph']!r}, not {graph.name!r}")
+        return report
+    if record.get("num_layers") not in (None, len(graph)):
+        report.add("graph-mismatch", "num_layers",
+                   f"record claims {record['num_layers']} layers; "
+                   f"{graph.name!r} has {len(graph)}")
+        return report
+    lint_plan_groups(graph, groups, tail_start, report, arch=arch,
+                     tile_grid=tile_grid)
+    return report
+
+
+def lint_plan_overrides(system: "SystemSpec",
+                        graphs: Mapping[str, Graph] | Iterable[Graph],
+                        *, arch: PIMArch | None = None) -> CheckReport:
+    """Audit every pinned ``plan_overrides`` signature of ``system``
+    against its workload's graph (plus the system's tile grid).  Pins
+    whose workload is absent from ``graphs`` are skipped — the registry
+    may carry pins for workloads this audit does not build."""
+    if not isinstance(graphs, Mapping):
+        graphs = {g.name: g for g in graphs}
+    report = CheckReport(checker="plan-lint",
+                         context={"system": system.name})
+    if arch is None:
+        try:
+            arch = system.make_arch()
+        except Exception:       # arch factories may need extra knobs
+            arch = None
+    for workload, sig in system.plan_overrides:
+        graph = graphs.get(workload)
+        if graph is None:
+            continue
+        groups, tail_start = sig
+        lint_plan_groups(graph, groups, tail_start, report, arch=arch,
+                         tile_grid=system.tile_grid,
+                         where=f"override[{workload}]")
+    return report

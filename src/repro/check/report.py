@@ -1,0 +1,143 @@
+"""Structured diagnostics for the static verifier (:mod:`repro.check`).
+
+Every checker in the subsystem reports through the same vocabulary: a
+:class:`Finding` is one coded diagnostic ``(code, location, message)`` —
+mirroring :func:`repro.core.fusion.group_legality_coded`'s ``(code,
+message)`` pairs, with a location the caller can navigate to (a command
+index, a burst position in the event stream, a plan-artifact path) — and a
+:class:`CheckReport` is the ordered collection of findings one checker run
+produced.
+
+Codes are short kebab-case slugs, stable across releases so tests and CI
+gates can assert on them (``tests/test_check.py`` pins one mutation per
+code).  ``severity`` separates hard legality violations (``"error"`` — a
+schedule or artifact that cannot have come from a correct simulator) from
+advisory findings (``"warning"`` — e.g. the known cost-model caveats the
+plan linter surfaces); :attr:`CheckReport.ok` considers errors only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator
+
+#: Finding severities, in increasing order of concern.
+SEVERITIES = ("warning", "error")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One coded diagnostic: what rule failed, where, and why."""
+
+    code: str           # stable kebab-case diagnostic code
+    location: str       # e.g. "cmd[12]", "burst[345]", "groups[1]"
+    message: str        # human-readable explanation
+    severity: str = "error"
+
+    def __post_init__(self) -> None:
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}; "
+                             f"choose from {list(SEVERITIES)}")
+
+    def __str__(self) -> str:
+        return f"[{self.code}] {self.location}: {self.message}"
+
+
+@dataclasses.dataclass
+class CheckReport:
+    """Ordered findings from one checker run (or several, merged).
+
+    ``checker`` names the producing pass (``"trace-lint"``,
+    ``"schedule-verify"``, ``"plan-lint"``); merged reports join the names.
+    ``context`` carries free-form coordinates (workload, system, policy)
+    for error messages and artifacts.
+    """
+
+    checker: str
+    findings: list[Finding] = dataclasses.field(default_factory=list)
+    context: dict[str, object] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        """True when no ERROR-severity finding was recorded (warnings —
+        advisory caveats — do not fail a gate)."""
+        return not any(f.severity == "error" for f in self.findings)
+
+    @property
+    def errors(self) -> list[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    @property
+    def warnings(self) -> list[Finding]:
+        return [f for f in self.findings if f.severity == "warning"]
+
+    def codes(self) -> set[str]:
+        """The distinct diagnostic codes present (what tests assert on)."""
+        return {f.code for f in self.findings}
+
+    def add(self, code: str, location: str, message: str,
+            severity: str = "error") -> Finding:
+        f = Finding(code=code, location=location, message=message,
+                    severity=severity)
+        self.findings.append(f)
+        return f
+
+    def extend(self, other: "CheckReport") -> "CheckReport":
+        """Fold another report's findings (and context) into this one."""
+        if other.checker and other.checker not in self.checker.split("+"):
+            self.checker = f"{self.checker}+{other.checker}" \
+                if self.checker else other.checker
+        self.findings.extend(other.findings)
+        for k, v in other.context.items():
+            self.context.setdefault(k, v)
+        return self
+
+    def raise_if_failed(self) -> "CheckReport":
+        """Raise :class:`CheckError` when any error finding exists;
+        return self otherwise (warnings pass through)."""
+        if not self.ok:
+            raise CheckError(self)
+        return self
+
+    def summary(self) -> str:
+        ctx = " ".join(f"{k}={v}" for k, v in self.context.items())
+        state = "ok" if self.ok else f"{len(self.errors)} error(s)"
+        extra = f", {len(self.warnings)} warning(s)" if self.warnings else ""
+        return f"{self.checker}: {state}{extra}" + (f" [{ctx}]" if ctx else "")
+
+    def lines(self) -> list[str]:
+        return [self.summary()] + [f"  {f}" for f in self.findings]
+
+    def to_dict(self) -> dict:
+        """JSON-friendly view (for artifacts and ``--json`` CLI output)."""
+        return {
+            "checker": self.checker,
+            "ok": self.ok,
+            "context": {k: str(v) for k, v in self.context.items()},
+            "findings": [dataclasses.asdict(f) for f in self.findings],
+        }
+
+    def __iter__(self) -> Iterator[Finding]:
+        return iter(self.findings)
+
+    def __len__(self) -> int:
+        return len(self.findings)
+
+
+def merge_reports(reports: Iterable[CheckReport],
+                  checker: str = "") -> CheckReport:
+    """One report carrying every finding of ``reports`` in order."""
+    out = CheckReport(checker=checker)
+    for rep in reports:
+        out.extend(rep)
+    return out
+
+
+class CheckError(AssertionError):
+    """A checker found hard violations.  Subclasses ``AssertionError`` so
+    existing ``assert``-style gates (CI scripts, :func:`pytest.raises`)
+    treat verifier failures like the engines' own invariant checks."""
+
+    def __init__(self, report: CheckReport) -> None:
+        self.report = report
+        super().__init__("\n".join(report.lines()))

@@ -1,0 +1,463 @@
+"""Independent schedule verification over a collected replay.
+
+The fidelity and bit-identity gates check that the two engines *agree*;
+nothing so far checked that what they agree on is *legal*.  This module
+is that referee: given a :class:`~repro.sim.engine.SimResult` plus the
+:class:`~repro.obs.trace.BurstEvent` / CommandEvent stream a collector
+recorded, it re-derives every scheduling invariant from first principles —
+without re-running either engine — and reports coded findings
+(:class:`~repro.check.report.CheckReport`):
+
+==================  ======================================================
+code                invariant
+==================  ======================================================
+``events-empty``    the trace carries payload but the stream is empty
+``stream-order``    burst events not in command-segment order, or the
+                    command events not one-per-command in index order
+``result-mismatch``  the command events disagree with the SimResult's
+                    ``cmd_start`` / ``cmd_finish``
+``dependency``      a command started before a scheduler dependency
+                    (``serial`` chain / ``overlap`` RAW-WAR edge) retired
+``resource-overlap``  two bursts in flight on one serialized timeline
+                    (bus tap, near-bank port, core port) at once
+``burst-start``     a burst does not start exactly at
+                    ``max(command issue, timeline free)`` — the earliest
+                    legal slot (shifted/idle-gap schedules)
+``burst-duration``  a burst's duration differs from transfer + switch +
+                    row-overhead re-derived from its fields and the arch
+``row-state``       a burst's ACTIVATE / HIT / CONFLICT verdict disagrees
+                    with an independent per-bank open-row replay
+``cmd-window``      a command's event window does not tightly cover its
+                    bursts (or an op-less command's issue charge is wrong)
+``count-mismatch``  SimResult aggregates (activations, hits, conflicts,
+                    per-bank/bus/core busy, per-kind busy) disagree with
+                    the event stream
+``makespan``        ``SimResult.makespan`` is not the latest finish
+==================  ======================================================
+
+Entry points: :func:`verify_schedule` (full contract: trace + arch +
+result + stream), :func:`verify_stream` (the stream-only subset — what a
+saved Perfetto artifact can still prove), and :func:`replay_and_verify`
+(convenience: replay under a chosen engine with a fresh collector, then
+verify — the CI grid gate and the ``EvalSpec.verify`` knob).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING, Iterable, Sequence
+
+from repro.check.report import CheckReport
+from repro.check.trace_lint import lint_trace
+from repro.core.commands import CMD, Trace
+from repro.pim.arch import PIMArch
+from repro.sim.scheduler import command_deps
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.obs.trace import BurstEvent, CommandEvent, TimelineCollector
+    from repro.sim.engine import SimResult
+
+_TRANSFER_KINDS = frozenset(k.value for k in (
+    CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK, CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK))
+
+# findings reported per code before suppression (huge traces would
+# otherwise drown the report in one repeated diagnostic)
+MAX_PER_CODE = 50
+
+
+class _Capped:
+    """Per-code capped ``add`` onto a CheckReport; suppressed counts land
+    in the report context so nothing disappears silently."""
+
+    def __init__(self, report: CheckReport,
+                 cap: int = MAX_PER_CODE) -> None:
+        self.report = report
+        self.cap = cap
+        self.counts: dict[str, int] = {}
+
+    def add(self, code: str, location: str, message: str,
+            severity: str = "error") -> None:
+        n = self.counts.get(code, 0) + 1
+        self.counts[code] = n
+        if n <= self.cap:
+            self.report.add(code, location, message, severity=severity)
+        else:
+            key = f"suppressed[{code}]"
+            self.report.context[key] = n - self.cap
+
+
+def _bandwidth(resource: str, arch: PIMArch) -> int | None:
+    if resource == "bus":
+        return arch.bus_bytes_per_cycle
+    if resource == "bank":
+        return arch.bank_io_bytes_per_cycle
+    if resource == "core":
+        return arch.core_bank_bytes_per_cycle
+    return None      # gbcore: zero-byte ops only
+
+
+def _check_stream_order(bursts: Sequence["BurstEvent"],
+                        commands: Sequence["CommandEvent"],
+                        n_cmds: int | None, out: _Capped) -> None:
+    prev = -1
+    for i, b in enumerate(bursts):
+        if b.cmd_index < prev:
+            out.add("stream-order", f"burst[{i}]",
+                    f"cmd_index {b.cmd_index} after {prev} — bursts must "
+                    "stream in command-segment order")
+        prev = max(prev, b.cmd_index)
+    if n_cmds is not None and len(commands) != n_cmds:
+        out.add("stream-order", "commands",
+                f"{len(commands)} command events for {n_cmds} trace "
+                "commands")
+    for i, c in enumerate(commands):
+        if c.index != i:
+            out.add("stream-order", f"command[{i}]",
+                    f"event carries index {c.index} at stream position "
+                    f"{i} — command events must be one-per-command in "
+                    "index order")
+
+
+def _check_resource_overlap(bursts: Sequence["BurstEvent"],
+                            out: _Capped) -> None:
+    """No serialized timeline may host two bursts at once.  Timelines are
+    (resource, unit): the single bus tap, each near-bank port, each core
+    port.  Intervals are half-open, so back-to-back bursts touch legally
+    and zero-duration bursts never collide."""
+    timelines: dict[tuple[str, int], list[tuple[int, int, int]]] = {}
+    for i, b in enumerate(bursts):
+        timelines.setdefault((b.resource, b.unit), []).append(
+            (b.start, b.start + b.duration, i))
+    for (resource, unit), spans in timelines.items():
+        spans.sort()
+        for (s0, e0, i0), (s1, e1, i1) in zip(spans, spans[1:]):
+            if s1 < e0 and s1 < e1 and s0 < e0:
+                out.add("resource-overlap",
+                        f"burst[{i1}] (cmd {bursts[i1].cmd_index})",
+                        f"[{s1}, {e1}) overlaps burst[{i0}] "
+                        f"[{s0}, {e0}) on timeline "
+                        f"({resource}, {unit})")
+
+
+def _check_row_state(bursts: Sequence["BurstEvent"], out: _Capped) -> None:
+    """Independent open-row replay: one tracker per bank, advanced in
+    stream order (program order — exactly the engines' approximation),
+    with per-command ``opened`` sets distinguishing fresh ACTIVATEs from
+    CONFLICT re-opens."""
+    open_row: dict[int, int] = {}
+    opened: dict[int, set[int]] = {}
+    cur_cmd = None
+    for i, b in enumerate(bursts):
+        if b.cmd_index != cur_cmd:
+            cur_cmd = b.cmd_index
+            opened = {}
+        where = f"burst[{i}] (cmd {b.cmd_index}, bank {b.bank}, " \
+                f"row {b.row})"
+        if b.row < 0 or b.nbytes == 0:
+            if b.verdict:
+                out.add("row-state", where,
+                        f"verdict {b.verdict!r} on a burst that carries "
+                        "no row")
+            continue
+        if open_row.get(b.bank) == b.row:
+            expect = "hit"
+        elif b.row in opened.setdefault(b.bank, set()):
+            expect = "conflict"
+        else:
+            expect = "activate"
+        if expect != "hit":
+            opened[b.bank].add(b.row)
+            open_row[b.bank] = b.row
+        if b.verdict != expect:
+            out.add("row-state", where,
+                    f"verdict {b.verdict!r}, but the open-row replay "
+                    f"says {expect!r} (open row on bank {b.bank} was "
+                    f"{open_row.get(b.bank) if expect == 'hit' else 'different'})")
+
+
+def _check_burst_chaining(bursts: Sequence["BurstEvent"],
+                          t0_by_cmd: dict[int, int],
+                          out: _Capped) -> None:
+    """Every burst must start at exactly ``max(t0, timeline free)`` — a
+    later start is an un-modelled idle gap (a shifted schedule), an
+    earlier one races the command issue or the timeline."""
+    free: dict[tuple[str, int], int] = {}
+    for i, b in enumerate(bursts):
+        key = (b.resource, b.unit)
+        t0 = t0_by_cmd.get(b.cmd_index)
+        if t0 is None:
+            continue    # missing command event: reported by stream-order
+        expect = max(t0, free.get(key, 0))
+        if b.start != expect:
+            out.add("burst-start",
+                    f"burst[{i}] (cmd {b.cmd_index}, {b.resource} "
+                    f"{b.unit})",
+                    f"starts at {b.start}; earliest legal slot is "
+                    f"{expect} (command issued {t0}, timeline free "
+                    f"{free.get(key, 0)})")
+        # carry the RECORDED occupancy forward, so one shifted burst
+        # yields one finding instead of cascading down the timeline
+        free[key] = b.start + b.duration
+
+
+def _check_durations(bursts: Sequence["BurstEvent"], arch: PIMArch,
+                     out: _Capped) -> None:
+    """Re-derive each duration from the burst's own fields: transfer at
+    the resource bandwidth, the bus re-target charge on the stream-first
+    visit to each (command, bank), and the row charge the verdict
+    implies."""
+    seen_bus: set[tuple[int, int]] = set()
+    for i, b in enumerate(bursts):
+        bw = _bandwidth(b.resource, arch)
+        transfer = math.ceil(b.nbytes / bw) if b.nbytes and bw else 0
+        switch = 0
+        if b.resource == "bus":
+            key = (b.cmd_index, b.bank)
+            if key not in seen_bus:
+                seen_bus.add(key)
+                switch = arch.bank_switch_cycles
+        row = 0
+        if b.verdict == "activate":
+            row = arch.row_overhead_cycles
+        elif b.verdict == "conflict":
+            row = arch.row_overhead_cycles + arch.row_precharge_cycles
+        expect = transfer + switch + row
+        if b.duration != expect:
+            out.add("burst-duration",
+                    f"burst[{i}] (cmd {b.cmd_index}, {b.resource} "
+                    f"{b.unit})",
+                    f"duration {b.duration} != {expect} (= transfer "
+                    f"{transfer} + switch {switch} + row {row} for "
+                    f"{b.nbytes} B, verdict {b.verdict or 'none'})")
+
+
+def _check_cmd_windows(bursts: Sequence["BurstEvent"],
+                       commands: Sequence["CommandEvent"], trace: Trace,
+                       arch: PIMArch, out: _Capped) -> None:
+    """Command windows must tightly cover their bursts; op-less commands
+    pay exactly the controller issue charge (compute kinds) or nothing
+    (zero-byte transfers)."""
+    lo: dict[int, int] = {}
+    hi: dict[int, int] = {}
+    for b in bursts:
+        lo[b.cmd_index] = min(lo.get(b.cmd_index, b.start), b.start)
+        hi[b.cmd_index] = max(hi.get(b.cmd_index, 0),
+                              b.start + b.duration)
+    for c in commands:
+        if not 0 <= c.index < len(trace):
+            out.add("cmd-window", f"command[{c.index}]",
+                    f"event index outside the {len(trace)}-command trace")
+            continue
+        kind = trace[c.index].kind
+        where = f"cmd[{c.index}] ({c.kind} '{c.layer}')"
+        if c.index in lo:
+            if lo[c.index] < c.start:
+                out.add("cmd-window", where,
+                        f"burst starts at {lo[c.index]} before the "
+                        f"command window opens at {c.start}")
+            expect_finish = max(c.start, hi[c.index])
+            if c.finish != expect_finish:
+                out.add("cmd-window", where,
+                        f"window closes at {c.finish}; last burst "
+                        f"retires at {expect_finish}")
+        else:
+            cost = 0 if kind.value in _TRANSFER_KINDS \
+                else arch.cmd_issue_cycles
+            if c.finish - c.start != cost:
+                out.add("cmd-window", where,
+                        f"op-less {kind.value} bills "
+                        f"{c.finish - c.start} cycles; expected {cost}")
+
+
+def _check_deps(commands: Sequence["CommandEvent"], trace: Trace,
+                policy: str, out: _Capped) -> None:
+    deps = command_deps(trace, policy)
+    finish = {c.index: c.finish for c in commands}
+    start = {c.index: c.start for c in commands}
+    for i, edges in enumerate(deps):
+        if i not in start:
+            continue    # missing event: reported by stream-order
+        for j in edges:
+            if j in finish and start[i] < finish[j]:
+                out.add("dependency", f"cmd[{i}]",
+                        f"starts at {start[i]} before dependency "
+                        f"cmd[{j}] retires at {finish[j]} "
+                        f"({policy} hazard edge)")
+
+
+def _check_result(result: "SimResult", bursts: Sequence["BurstEvent"],
+                  commands: Sequence["CommandEvent"], trace: Trace,
+                  out: _Capped) -> None:
+    """SimResult aggregates vs the stream they summarize."""
+    for c in commands:
+        if not 0 <= c.index < len(result.cmd_start):
+            continue
+        if result.cmd_start[c.index] != c.start \
+                or result.cmd_finish[c.index] != c.finish:
+            out.add("result-mismatch", f"cmd[{c.index}]",
+                    f"SimResult window [{result.cmd_start[c.index]}, "
+                    f"{result.cmd_finish[c.index]}] != event window "
+                    f"[{c.start}, {c.finish}]")
+
+    acts = sum(1 for b in bursts if b.verdict in ("activate", "conflict"))
+    hits = sum(1 for b in bursts if b.verdict == "hit")
+    conflicts = sum(1 for b in bursts if b.verdict == "conflict")
+    hit_bits = sum(b.nbytes for b in bursts if b.verdict == "hit") * 8
+    for name, got, want in (
+            ("row_activations", result.events.row_activations, acts),
+            ("row_hits", result.events.row_hits, hits),
+            ("row_conflicts", result.row_conflicts, conflicts),
+            ("dram_hit_bits", result.events.dram_hit_bits, hit_bits)):
+        if got != want:
+            out.add("count-mismatch", name,
+                    f"SimResult reports {got}; the event stream carries "
+                    f"{want}")
+
+    bank_rows: dict[int, dict[str, int]] = {}
+    slot = {"activate": "act", "hit": "hit", "conflict": "conflict"}
+    for b in bursts:
+        if b.verdict:
+            d = bank_rows.setdefault(b.bank, {"act": 0, "hit": 0,
+                                              "conflict": 0})
+            d[slot[b.verdict]] += 1
+    if bank_rows != result.bank_rows:
+        diff = {b for b in set(bank_rows) | set(result.bank_rows)
+                if bank_rows.get(b) != result.bank_rows.get(b)}
+        out.add("count-mismatch", "bank_rows",
+                f"per-bank row verdicts disagree on bank(s) "
+                f"{sorted(diff)[:8]}")
+
+    busy_by_kind: dict[str, int] = {}
+    bank_bus: dict[int, int] = {}
+    bank_port: dict[int, int] = {}
+    core: dict[int, int] = {}
+    bus_total = 0
+    for b in bursts:
+        busy_by_kind[b.kind] = busy_by_kind.get(b.kind, 0) + b.duration
+        if b.resource == "bus":
+            bus_total += b.duration
+            if b.bank >= 0:
+                bank_bus[b.bank] = bank_bus.get(b.bank, 0) + b.duration
+        elif b.bank >= 0:
+            bank_port[b.bank] = bank_port.get(b.bank, 0) + b.duration
+        if b.resource == "core":
+            core[b.unit] = core.get(b.unit, 0) + b.duration
+    # the reference engine records a kind into busy_by_kind even when the
+    # only burst was zero-duration; both engines agree on the stream, so
+    # the stream-side reduction matches exactly
+    for name, got, want in (("busy_by_kind", result.busy_by_kind,
+                             busy_by_kind),
+                            ("bank_bus_busy", result.bank_bus_busy,
+                             bank_bus),
+                            ("bank_port_busy", result.bank_port_busy,
+                             bank_port),
+                            ("core_busy", result.core_busy, core)):
+        if got != want:
+            out.add("count-mismatch", name,
+                    f"SimResult {name} disagrees with the stream "
+                    f"reduction ({got} != {want})")
+    if sum(result.bus_busy.values()) != bus_total:
+        out.add("count-mismatch", "bus_busy",
+                f"SimResult bus_busy sums to "
+                f"{sum(result.bus_busy.values())}; bus bursts carry "
+                f"{bus_total} cycles")
+
+    latest = max((c.finish for c in commands), default=0)
+    if result.makespan != latest:
+        out.add("makespan", "makespan",
+                f"SimResult.makespan={result.makespan}; latest command "
+                f"retires at {latest}")
+
+
+def _events(collector: "TimelineCollector | None",
+            bursts: Iterable["BurstEvent"] | None,
+            commands: Iterable["CommandEvent"] | None
+            ) -> tuple[list["BurstEvent"], list["CommandEvent"]]:
+    if collector is not None:
+        return list(collector.bursts), list(collector.commands)
+    return list(bursts or ()), list(commands or ())
+
+
+def verify_stream(bursts: Sequence["BurstEvent"],
+                  commands: Sequence["CommandEvent"] = (),
+                  arch: PIMArch | None = None) -> CheckReport:
+    """The stream-only invariants — what a saved artifact can prove
+    without its SimResult: segment ordering, per-timeline exclusivity,
+    open-row legality, earliest-slot chaining, and (given the arch)
+    duration re-derivation."""
+    report = CheckReport(checker="stream-verify",
+                         context={"bursts": len(bursts),
+                                  "commands": len(commands)})
+    out = _Capped(report)
+    _check_stream_order(bursts, commands, None, out)
+    _check_resource_overlap(bursts, out)
+    _check_row_state(bursts, out)
+    if commands:
+        t0 = {c.index: c.start for c in commands}
+        _check_burst_chaining(bursts, t0, out)
+    if arch is not None:
+        _check_durations(bursts, arch, out)
+    return report
+
+
+def verify_schedule(trace: Trace, arch: PIMArch, result: "SimResult",
+                    collector: "TimelineCollector | None" = None,
+                    bursts: Iterable["BurstEvent"] | None = None,
+                    commands: Iterable["CommandEvent"] | None = None,
+                    policy: str | None = None) -> CheckReport:
+    """Verify one replay end to end: the event stream's internal legality
+    plus its agreement with the :class:`~repro.sim.engine.SimResult` and
+    the issue policy's hazard edges.  ``policy`` defaults to the one the
+    result records.  Events come from ``collector`` or the explicit
+    ``bursts`` / ``commands`` streams."""
+    ev_bursts, ev_commands = _events(collector, bursts, commands)
+    policy = result.policy if policy is None else policy
+    report = CheckReport(checker="schedule-verify",
+                         context={"arch": arch.name, "policy": policy,
+                                  "bursts": len(ev_bursts)})
+    out = _Capped(report)
+    if not ev_bursts and any(
+            c.bytes_total or c.bank_stream_bytes or c.kind is CMD.GBCORE_CMP
+            for c in trace):
+        out.add("events-empty", "stream",
+                "trace carries payload but the collected stream has no "
+                "burst events")
+        return report
+    _check_stream_order(ev_bursts, ev_commands, len(trace), out)
+    _check_resource_overlap(ev_bursts, out)
+    _check_row_state(ev_bursts, out)
+    t0 = {c.index: c.start for c in ev_commands}
+    _check_burst_chaining(ev_bursts, t0, out)
+    _check_durations(ev_bursts, arch, out)
+    _check_cmd_windows(ev_bursts, ev_commands, trace, arch, out)
+    _check_deps(ev_commands, trace, policy, out)
+    _check_result(result, ev_bursts, ev_commands, trace, out)
+    return report
+
+
+def replay_and_verify(trace: Trace, arch: PIMArch, policy: str = "serial",
+                      row_reuse: bool = True, engine: str = "reference",
+                      lint: bool = True) -> CheckReport:
+    """Replay ``trace`` under an engine with a fresh collector, then run
+    the full verification (plus the trace linter unless ``lint=False``).
+    One merged report — the CI grid gate calls this per point."""
+    from repro.obs.trace import TimelineCollector
+
+    collector = TimelineCollector()
+    if engine == "columnar":
+        from repro.sim.engine_vec import simulate_columnar
+        result = simulate_columnar(trace, arch, policy,
+                                   row_reuse=row_reuse,
+                                   collector=collector)
+    elif engine == "reference":
+        from repro.sim.engine import simulate
+        result = simulate(trace, arch, policy, row_reuse=row_reuse,
+                          collector=collector)
+    else:
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "choose from ['columnar', 'reference']")
+    report = verify_schedule(trace, arch, result, collector=collector)
+    report.context.update({"engine": engine, "row_reuse": row_reuse})
+    if lint:
+        report.extend(lint_trace(trace, arch))
+    return report

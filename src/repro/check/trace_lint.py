@@ -1,0 +1,175 @@
+"""Static lint over the Command IR: is a trace *physically plausible* on a
+given :class:`~repro.pim.arch.PIMArch` — before any engine runs?
+
+:func:`repro.core.commands.Command.validate` enforces per-field sanity
+(negative counts, restream caps, duplicate banks, prefetchable on the
+wrong kind).  This linter layers the arch-dependent and cross-field rules
+on top, with pure arithmetic — no lowering is materialised and no engine
+replays anything:
+
+==================  ======================================================
+code                rule
+==================  ======================================================
+``validate``        ``Command.validate()`` itself rejected the command
+``bank-bounds``     an explicit ``banks`` placement names a bank id
+                    outside ``[0, arch.num_banks)``
+``bank-width``      a placement names more banks than the channel has
+``core-bounds``     ``concurrent_cores`` outside ``[1, arch.num_pimcores]``
+``flag-unsupported``  a PIMcore POOL / ADD_RELU flag on an arch whose
+                    PIMcores lack pool/add datapaths (AiM-like baseline)
+``transfer-compute``  a transfer command carrying compute payload fields
+                    (macs / alu_ops / stream bytes) the engines ignore
+``cmp-bytes``       a compute command carrying ``bytes_total`` (CMP kinds
+                    stream via ``bank_stream_bytes``; the payload would
+                    silently move zero bytes)
+``gbcore-stream``   a GBcore op declaring near-bank streaming traffic
+                    (GBcore operands are GBUF-resident; the lowering
+                    drops it) — advisory
+``prefetch-empty``  a ``prefetchable`` command with no payload (nothing
+                    to hoist) — advisory
+``row-capacity``    the command's unique row footprint assigns more
+                    distinct rows to one bank than ``rows_per_bank``
+==================  ======================================================
+
+Every rule reports a :class:`repro.check.report.Finding` with the command
+index and label, so a mapper bug points straight at the emitting layer.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.check.report import CheckReport
+from repro.core.commands import CMD, Command, Trace
+from repro.pim.arch import PIMArch
+from repro.pim.events import core_banks, even_split
+from repro.pim.timing import banks_touched
+
+_SEQ = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)
+_PAR = (CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK)
+_TRANSFER = _SEQ + _PAR
+_CMP = (CMD.PIMCORE_CMP, CMD.GBCORE_CMP)
+
+# PIMcore flags that need the pool/add datapath (PIMfused adds it; the
+# AiM-like baseline's cores are MAC/BN/RELU only)
+_POOL_ADD_FLAGS = ("POOL", "ADD_RELU")
+
+
+def _footprint_rows(unique_bytes: int, row_bytes: int) -> int:
+    """Rows the unique (non-restream) share of a stream occupies — the
+    same wrap modulus :mod:`repro.sim.burst` uses."""
+    return max(1, math.ceil(unique_bytes / row_bytes)) \
+        if unique_bytes > 0 else 1
+
+
+def _max_rows_per_bank(c: Command, arch: PIMArch) -> int:
+    """The largest number of DISTINCT rows the lowering would assign to
+    any single bank for this command — by arithmetic, without emitting
+    bursts (mirrors the round-robin / even-split shapes of
+    :mod:`repro.sim.burst`)."""
+    if c.kind in _SEQ:
+        if not c.bytes_total:
+            return 0
+        banks = list(c.banks) if c.banks \
+            else list(range(banks_touched(c, arch)))
+        fr = _footprint_rows(c.bytes_total - c.restream_bytes,
+                             arch.row_bytes)
+        # fr distinct rows round-robin over len(banks) banks
+        return math.ceil(fr / max(len(banks), 1))
+    if c.kind in _PAR:
+        if not c.bytes_total:
+            return 0
+        cores = max(c.concurrent_cores, 1)
+        worst = 0
+        core_restream = even_split(c.restream_bytes, cores)
+        for core, core_bytes in enumerate(even_split(c.bytes_total, cores)):
+            banks = core_banks(core, arch, c)
+            lane_restream = even_split(core_restream[core], len(banks))
+            for lane, bank_bytes in enumerate(
+                    even_split(core_bytes, len(banks))):
+                if bank_bytes:
+                    worst = max(worst, _footprint_rows(
+                        bank_bytes - lane_restream[lane], arch.row_bytes))
+        return worst
+    if c.kind is CMD.PIMCORE_CMP:
+        if not c.bank_stream_bytes:
+            return 0
+        fr = _footprint_rows(c.bank_stream_bytes - c.restream_bytes,
+                             arch.row_bytes)
+        banks = len(core_banks(0, arch, c))
+        return math.ceil(fr / max(banks, 1))
+    return 0
+
+
+def lint_command(idx: int, c: Command, arch: PIMArch,
+                 report: CheckReport) -> None:
+    """Append this command's findings to ``report``."""
+    where = f"cmd[{idx}] ({c.kind.value} '{c.layer}')"
+    try:
+        c.validate()
+    except ValueError as e:
+        report.add("validate", where, str(e))
+        return      # field-level garbage makes the arch rules moot
+
+    bad_banks = [b for b in c.banks if b >= arch.num_banks]
+    if bad_banks:
+        report.add("bank-bounds", where,
+                   f"placement names bank(s) {bad_banks} outside "
+                   f"[0, {arch.num_banks})")
+    if len(c.banks) > arch.num_banks:
+        report.add("bank-width", where,
+                   f"placement stripes over {len(c.banks)} banks; the "
+                   f"channel has {arch.num_banks}")
+
+    if not (1 <= c.concurrent_cores <= arch.num_pimcores):
+        report.add("core-bounds", where,
+                   f"concurrent_cores={c.concurrent_cores} outside "
+                   f"[1, {arch.num_pimcores}] for {arch.name}")
+
+    if (c.kind is CMD.PIMCORE_CMP and c.flag in _POOL_ADD_FLAGS
+            and not arch.pimcore_has_pool_add):
+        report.add("flag-unsupported", where,
+                   f"flag {c.flag} needs PIMcore pool/add datapaths; "
+                   f"{arch.name} PIMcores are MAC/BN/RELU only")
+
+    if c.kind in _TRANSFER:
+        compute_fields = [f for f in ("macs", "alu_ops", "bank_stream_bytes",
+                                      "gbuf_stream_bytes",
+                                      "lbuf_stream_bytes")
+                          if getattr(c, f)]
+        if compute_fields:
+            report.add("transfer-compute", where,
+                       f"transfer carries compute field(s) "
+                       f"{compute_fields} the engines ignore")
+    if c.kind in _CMP and c.bytes_total:
+        report.add("cmp-bytes", where,
+                   f"compute command carries bytes_total="
+                   f"{c.bytes_total}; CMP kinds stream via "
+                   f"bank_stream_bytes, so this payload would never move")
+    if c.kind is CMD.GBCORE_CMP and c.bank_stream_bytes:
+        report.add("gbcore-stream", where,
+                   f"GBcore op declares bank_stream_bytes="
+                   f"{c.bank_stream_bytes}; GBcore operands are "
+                   f"GBUF-resident and the lowering drops this traffic",
+                   severity="warning")
+    if c.prefetchable and not c.bytes_total:
+        report.add("prefetch-empty", where,
+                   "prefetchable transfer with no payload — nothing for "
+                   "the overlap scheduler to hoist", severity="warning")
+
+    rows = _max_rows_per_bank(c, arch)
+    if rows > arch.rows_per_bank:
+        report.add("row-capacity", where,
+                   f"unique footprint needs {rows} distinct rows on one "
+                   f"bank > rows_per_bank={arch.rows_per_bank}")
+
+
+def lint_trace(trace: Trace, arch: PIMArch) -> CheckReport:
+    """Lint every command of ``trace`` against ``arch``; one report for
+    the whole trace (``report.ok`` ⇔ no error-severity finding)."""
+    report = CheckReport(checker="trace-lint",
+                         context={"arch": arch.name,
+                                  "commands": len(trace)})
+    for idx, c in enumerate(trace):
+        lint_command(idx, c, arch, report)
+    return report

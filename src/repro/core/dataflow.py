@@ -106,77 +106,77 @@ def map_layer_by_layer(graph: Graph, arch: PIMArch,
     flight = _positions_in_flight(arch)
 
     for i in range(start, stop):
-        l = graph[i]
-        in_bytes = l.in_elems * dt
-        out_bytes = l.out_elems * dt
+        lyr = graph[i]
+        in_bytes = lyr.in_elems * dt
+        out_bytes = lyr.out_elems * dt
 
-        if l.kind.is_conv or l.kind is OpKind.FC:
+        if lyr.kind.is_conv or lyr.kind is OpKind.FC:
             # (1) gather + broadcast input activations through GBUF
             fill = int(in_bytes * _act_stream_factor(arch))
-            trace.append(Command(CMD.PIM_BK2GBUF, l.name, bytes_total=fill,
+            trace.append(Command(CMD.PIM_BK2GBUF, lyr.name, bytes_total=fill,
                                  banks=_seq_banks(fill, arch),
                                  note="activation gather"))
             # (2) MAC on PIMcores: weights stream from local banks; the
             # LBUF captures the per-tap cin-vector between positions.
-            positions = l.oy * l.ox
+            positions = lyr.oy * lyr.ox
             passes = max(1, math.ceil(positions / flight))
-            wpc = _w_bytes(l, arch) / cores              # per-core slice
-            tap_ws = l.cin * dt * 2
+            wpc = _w_bytes(lyr, arch) / cores              # per-core slice
+            tap_ws = lyr.cin * dt * 2
             capture = min(1.0, arch.lbuf_bytes / tap_ws) if tap_ws else 1.0
             w_stream = int(wpc * (1.0 + (passes - 1) * (1.0 - capture)))
             trace.append(Command(
-                CMD.PIMCORE_CMP, l.name,
-                flag="CONV_BN_RELU" if l.kind is OpKind.CONV_BN_RELU else "CONV_BN",
-                macs=l.macs, bank_stream_bytes=w_stream,
+                CMD.PIMCORE_CMP, lyr.name,
+                flag="CONV_BN_RELU" if lyr.kind is OpKind.CONV_BN_RELU else "CONV_BN",
+                macs=lyr.macs, bank_stream_bytes=w_stream,
                 restream_bytes=max(0, w_stream - int(wpc)),  # row-buffer hits
-                gbuf_stream_bytes=int(in_bytes * l.kh * l.kw
-                                      / max(l.stride, 1) ** 2),
+                gbuf_stream_bytes=int(in_bytes * lyr.kh * lyr.kw
+                                      / max(lyr.stride, 1) ** 2),
                 concurrent_cores=cores, banks=_par_banks(arch, cores),
                 note="cout-partitioned conv"))
             # (3) outputs written to local banks (parallel near-bank path)
-            trace.append(Command(CMD.PIM_LBUF2BK, l.name, bytes_total=out_bytes,
+            trace.append(Command(CMD.PIM_LBUF2BK, lyr.name, bytes_total=out_bytes,
                                  concurrent_cores=cores,
                                  banks=_par_banks(arch, cores),
                                  note="writeback"))
-        elif l.kind.is_pool or l.kind is OpKind.ADD_RELU:
-            flag = l.kind.pimcore_flag or "POOL"
-            res_bytes = out_bytes if l.residual_of else 0
-            if arch.pimcore_has_pool_add and l.kind is OpKind.ADD_RELU:
+        elif lyr.kind.is_pool or lyr.kind is OpKind.ADD_RELU:
+            flag = lyr.kind.pimcore_flag or "POOL"
+            res_bytes = out_bytes if lyr.residual_of else 0
+            if arch.pimcore_has_pool_add and lyr.kind is OpKind.ADD_RELU:
                 # PIMfused: ADD_RELU runs near-bank (operands co-located
                 # under cout partitioning)
-                trace.append(Command(CMD.PIM_BK2LBUF, l.name,
+                trace.append(Command(CMD.PIM_BK2LBUF, lyr.name,
                                      bytes_total=in_bytes + res_bytes,
                                      concurrent_cores=cores,
                                      banks=_par_banks(arch, cores),
                                      note="operands"))
-                trace.append(Command(CMD.PIMCORE_CMP, l.name, flag=flag,
-                                     alu_ops=l.alu_ops,
+                trace.append(Command(CMD.PIMCORE_CMP, lyr.name, flag=flag,
+                                     alu_ops=lyr.alu_ops,
                                      lbuf_stream_bytes=(in_bytes + res_bytes
                                                         + out_bytes) // cores,
                                      concurrent_cores=cores,
                                      banks=_par_banks(arch, cores)))
-                trace.append(Command(CMD.PIM_LBUF2BK, l.name,
+                trace.append(Command(CMD.PIM_LBUF2BK, lyr.name,
                                      bytes_total=out_bytes,
                                      concurrent_cores=cores,
                                      banks=_par_banks(arch, cores)))
             else:
                 # AiM-like: POOL/ADD on the GBcore via sequential GBUF hops
-                trace.append(Command(CMD.PIM_BK2GBUF, l.name,
+                trace.append(Command(CMD.PIM_BK2GBUF, lyr.name,
                                      bytes_total=in_bytes + res_bytes,
                                      banks=_seq_banks(in_bytes + res_bytes,
                                                       arch),
                                      note="GBcore operands"))
-                trace.append(Command(CMD.GBCORE_CMP, l.name,
-                                     flag=l.kind.gbcore_flag or "POOL",
-                                     alu_ops=l.alu_ops,
+                trace.append(Command(CMD.GBCORE_CMP, lyr.name,
+                                     flag=lyr.kind.gbcore_flag or "POOL",
+                                     alu_ops=lyr.alu_ops,
                                      gbuf_stream_bytes=in_bytes + res_bytes
                                      + out_bytes))
-                trace.append(Command(CMD.PIM_GBUF2BK, l.name,
+                trace.append(Command(CMD.PIM_GBUF2BK, lyr.name,
                                      bytes_total=out_bytes,
                                      banks=_seq_banks(out_bytes, arch),
                                      note="GBcore writeback"))
         else:  # pragma: no cover - exhaustive over OpKind
-            raise ValueError(f"unmapped layer kind {l.kind}")
+            raise ValueError(f"unmapped layer kind {lyr.kind}")
     return validated(trace)
 
 
@@ -238,28 +238,28 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch,
     #     fused trend, saturating once flight ≈ tile positions).
     peak = max(t.tile_peak_live_elems(i) * dt for i in range(t.num_tiles))
     spill_frac = max(0.0, 1.0 - arch.lbuf_bytes / max(peak, 1))
-    for l in group:
-        tile_positions = max(t.computed[i][l.name].elems_hw
+    for lyr in group:
+        tile_positions = max(t.computed[i][lyr.name].elems_hw
                              for i in range(t.num_tiles))
-        w_l = _w_bytes(l, arch)
-        macs = sum(l.macs_per_position * t.computed[i][l.name].elems_hw
-                   for i in range(t.num_tiles)) if l.kind.is_conv else 0
+        w_l = _w_bytes(lyr, arch)
+        macs = sum(lyr.macs_per_position * t.computed[i][lyr.name].elems_hw
+                   for i in range(t.num_tiles)) if lyr.kind.is_conv else 0
         alu = 0
-        if l.kind.is_pool:
-            alu = sum(l.cout * l.kh * l.kw * t.computed[i][l.name].elems_hw
+        if lyr.kind.is_pool:
+            alu = sum(lyr.cout * lyr.kh * lyr.kw * t.computed[i][lyr.name].elems_hw
                       for i in range(t.num_tiles))
-        elif l.kind is OpKind.ADD_RELU:
-            alu = sum(2 * l.cout * t.computed[i][l.name].elems_hw
+        elif lyr.kind is OpKind.ADD_RELU:
+            alu = sum(2 * lyr.cout * t.computed[i][lyr.name].elems_hw
                       for i in range(t.num_tiles))
-        out_b = sum(l.cout * t.computed[i][l.name].elems_hw
+        out_b = sum(lyr.cout * t.computed[i][lyr.name].elems_hw
                     for i in range(t.num_tiles)) * dt
-        in_b = sum(l.cin * t.computed[i][l.name].elems_hw
+        in_b = sum(lyr.cin * t.computed[i][lyr.name].elems_hw
                    for i in range(t.num_tiles)) * dt
 
-        if l.kind.is_conv and w_l > 0:
+        if lyr.kind.is_conv and w_l > 0:
             # ---- mode A: cout-blocked, input re-read per weight block ----
             blocks = max(1, math.ceil(w_l / max(arch.gbuf_bytes, 1)))
-            patch = l.cin * l.kh * l.kw * dt          # im2col window
+            patch = lyr.cin * lyr.kh * lyr.kw * dt          # im2col window
             cap_a = min(1.0, arch.lbuf_bytes / patch) if patch else 1.0
             reread_a = int(in_b * (blocks - 1) * (1.0 - cap_a))
             seq_a, par_a = w_l, reread_a
@@ -278,7 +278,7 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch,
             else:
                 mode, seq_fill, par_reread = "B", seq_b, 0
                 seq_restream = max(0, fill_b - w_l)
-            trace.append(Command(CMD.PIM_BK2GBUF, f"{group.name}:{l.name}:w",
+            trace.append(Command(CMD.PIM_BK2GBUF, f"{group.name}:{lyr.name}:w",
                                  bytes_total=seq_fill,
                                  restream_bytes=seq_restream,
                                  banks=_seq_banks(seq_fill, arch),
@@ -286,7 +286,7 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch,
                                  note=f"weight broadcast mode={mode}"))
             if par_reread:
                 trace.append(Command(CMD.PIM_BK2LBUF,
-                                     f"{group.name}:{l.name}:reread",
+                                     f"{group.name}:{lyr.name}:reread",
                                      bytes_total=par_reread,
                                      restream_bytes=par_reread,
                                      concurrent_cores=cores,
@@ -298,8 +298,8 @@ def map_fused_group(graph: Graph, g: FusedGroup, arch: PIMArch,
         # activation traffic: LBUF-resident share vs local-bank spill
         spill_b = int((out_b + in_b) * spill_frac)
         trace.append(Command(
-            CMD.PIMCORE_CMP, f"{group.name}:{l.name}",
-            flag=l.kind.pimcore_flag or "CONV_BN",
+            CMD.PIMCORE_CMP, f"{group.name}:{lyr.name}",
+            flag=lyr.kind.pimcore_flag or "CONV_BN",
             macs=macs, alu_ops=alu,
             bank_stream_bytes=spill_b // cores,
             gbuf_stream_bytes=w_l,                   # broadcast (overlapped)
@@ -325,15 +325,15 @@ def map_boundary_reorg(graph: Graph, prev_stop: int, arch: PIMArch,
     (:func:`group_input_halo_bytes`).  Spatial→cout (fused →
     layer-by-layer, ``next_halo_bytes is None``) re-distributes the full
     map through the GBUF."""
-    l = graph[prev_stop - 1]
+    lyr = graph[prev_stop - 1]
     dt = arch.dtype_bytes
-    fmap = l.out_elems * dt
+    fmap = lyr.out_elems * dt
     moved = fmap if next_halo_bytes is None else min(next_halo_bytes, fmap)
     return validated([
-        Command(CMD.PIM_BK2GBUF, f"{l.name}:reorg_in", bytes_total=moved,
+        Command(CMD.PIM_BK2GBUF, f"{lyr.name}:reorg_in", bytes_total=moved,
                 banks=_seq_banks(moved, arch),
                 note="boundary reorganisation"),
-        Command(CMD.PIM_GBUF2BK, f"{l.name}:reorg_out", bytes_total=moved,
+        Command(CMD.PIM_GBUF2BK, f"{lyr.name}:reorg_out", bytes_total=moved,
                 banks=_seq_banks(moved, arch),
                 note="boundary reorganisation"),
     ])

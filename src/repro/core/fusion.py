@@ -131,14 +131,14 @@ def _residual_crossings(g: Graph, start: int, stop: int) -> bool:
     the group input (output of layer start-1)."""
     names_in = {g[i].name for i in range(start, stop)}
     group_input = g[start - 1].name if start > 0 else None
-    for i, l in enumerate(g):
+    for i, lyr in enumerate(g):
         srcs = []
-        if l.input_of is not None:
-            srcs.append(l.input_of)
+        if lyr.input_of is not None:
+            srcs.append(lyr.input_of)
         elif i > 0:
             srcs.append(g[i - 1].name)
-        if l.residual_of is not None:
-            srcs.append(l.residual_of)
+        if lyr.residual_of is not None:
+            srcs.append(lyr.residual_of)
         for s in srcs:
             inside_src = s in names_in
             inside_consumer = start <= i < stop
@@ -192,20 +192,20 @@ def group_legality_coded(graph: Graph, start: int, stop: int, tiles_y: int,
         return ("len", f"shorter than min_group_len={min_group_len}")
     seen_add = False
     for j in range(start, stop):
-        l = graph[j]
-        if l.kind is OpKind.FC or (l.kind.is_pool and l.oy == 1):
-            return ("head", f"layer {j} ({l.name}) is classifier-head "
+        lyr = graph[j]
+        if lyr.kind is OpKind.FC or (lyr.kind.is_pool and lyr.oy == 1):
+            return ("head", f"layer {j} ({lyr.name}) is classifier-head "
                             "work, never fused")
-        if l.oy < tiles_y or l.ox < tiles_x:
+        if lyr.oy < tiles_y or lyr.ox < tiles_x:
             return ("extent",
-                    f"layer {j} ({l.name}) output {l.oy}x{l.ox} smaller "
+                    f"layer {j} ({lyr.name}) output {lyr.oy}x{lyr.ox} smaller "
                     f"than {tiles_y}x{tiles_x} tile grid")
-        if l.kind is OpKind.ADD_RELU:
+        if lyr.kind is OpKind.ADD_RELU:
             seen_add = True
-        if stage_aligned and j > start and seen_add and l.kind.is_conv \
-                and l.stride > 1:
+        if stage_aligned and j > start and seen_add and lyr.kind.is_conv \
+                and lyr.stride > 1:
             return ("stage",
-                    f"layer {j} ({l.name}) strided conv after a residual "
+                    f"layer {j} ({lyr.name}) strided conv after a residual "
                     "ADD (stage-aligned rule)")
     last = graph[stop - 1]
     if last.oy % tiles_y or last.ox % tiles_x:

@@ -19,8 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import math
-from typing import Iterable
 
 
 class OpKind(enum.Enum):
@@ -185,17 +183,17 @@ class Graph:
     layers: list[Layer]
 
     def __post_init__(self) -> None:
-        by_name = {l.name: l for l in self.layers}
+        by_name = {lyr.name: lyr for lyr in self.layers}
         if len(by_name) != len(self.layers):
             raise ValueError(f"duplicate layer names in graph {self.name}")
         # refs to layers not in this graph are EXTERNAL: they denote the
         # graph/group input (sliced fused groups reference the group input
         # by the name of the producing layer outside the slice).
         self.external_refs = {
-            ref for l in self.layers for ref in (l.residual_of, l.input_of)
+            ref for lyr in self.layers for ref in (lyr.residual_of, lyr.input_of)
             if ref is not None and ref not in by_name
         }
-        self._index = {l.name: i for i, l in enumerate(self.layers)}
+        self._index = {lyr.name: i for i, lyr in enumerate(self.layers)}
 
     def __len__(self) -> int:
         return len(self.layers)
@@ -211,11 +209,11 @@ class Graph:
 
     @property
     def total_macs(self) -> int:
-        return sum(l.macs for l in self.layers)
+        return sum(lyr.macs for lyr in self.layers)
 
     @property
     def total_weight_elems(self) -> int:
-        return sum(l.weight_elems for l in self.layers)
+        return sum(lyr.weight_elems for lyr in self.layers)
 
     def slice(self, start: int, stop: int, name: str | None = None) -> "Graph":
         return Graph(name or f"{self.name}[{start}:{stop}]", self.layers[start:stop])

@@ -26,12 +26,11 @@ same-padded layers.  ``tests/test_policies_sharded.py`` covers both.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def group_halo_rows(group_graph, tiles: int) -> int:

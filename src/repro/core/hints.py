@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Callable
 
 import jax
 

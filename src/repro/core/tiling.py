@@ -18,9 +18,8 @@ feature-map bounds, so boundary tiles (which lose halo to padding) are exact.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
 
-from repro.core.graph import Graph, Layer, OpKind
+from repro.core.graph import Graph, OpKind
 
 Interval = tuple[int, int]  # half-open [lo, hi)
 
@@ -110,7 +109,7 @@ class GroupTiling:
 
     def tile_stored_elems(self, t: int) -> int:
         """Elements of every layer output this tile materializes."""
-        return sum(l.cout * self.computed[t][l.name].elems_hw for l in self.group)
+        return sum(lyr.cout * self.computed[t][lyr.name].elems_hw for lyr in self.group)
 
     def tile_peak_live_elems(self, t: int) -> int:
         """Peak simultaneously-live activation elements while executing tile t.
@@ -122,13 +121,13 @@ class GroupTiling:
         g = self.group
         # last position at which each tensor (layer output / group input) is read
         last_read: dict[str, int] = {}
-        for i, l in enumerate(g):
+        for i, lyr in enumerate(g):
             srcs = _sources(g, i)
             for s in srcs:
                 last_read[s] = i
         peak = 0
-        for i, l in enumerate(g):
-            live = l.cout * self.computed[t][l.name].elems_hw  # output being produced
+        for i, lyr in enumerate(g):
+            live = lyr.cout * self.computed[t][lyr.name].elems_hw  # output being produced
             for name, last in last_read.items():
                 if last >= i:  # still needed at or after this step
                     if name == "__input__":
@@ -143,15 +142,15 @@ class GroupTiling:
 
 def _sources(group: Graph, i: int) -> list[str]:
     """Names of tensors read by layer ``i`` ('__input__' = group input)."""
-    l = group[i]
+    lyr = group[i]
     names = {x.name for x in group}
     out: list[str] = []
-    primary = l.input_of
+    primary = lyr.input_of
     if primary is None:
         primary = group[i - 1].name if i > 0 else "__input__"
     out.append(primary if primary in names or primary == "__input__" else "__input__")
-    if l.residual_of is not None:
-        out.append(l.residual_of if l.residual_of in names else "__input__")
+    if lyr.residual_of is not None:
+        out.append(lyr.residual_of if lyr.residual_of in names else "__input__")
     return out
 
 
@@ -182,14 +181,14 @@ def tile_group(group: Graph, tiles_y: int, tiles_x: int) -> GroupTiling:
             input_need = TileRequirement((0, 0), (0, 0))
             # walk backwards, pushing requirements to producers
             for i in range(len(group) - 1, -1, -1):
-                l = group[i]
-                out_req = need.get(l.name)
+                lyr = group[i]
+                out_req = need.get(lyr.name)
                 if out_req is None:
                     # dead layer inside group (shouldn't happen in chains)
-                    need[l.name] = TileRequirement((0, 0), (0, 0))
+                    need[lyr.name] = TileRequirement((0, 0), (0, 0))
                     continue
-                in_y = _back_interval(out_req.y, l.kh, l.stride, l.padding, l.iy)
-                in_x = _back_interval(out_req.x, l.kw, l.stride, l.padding, l.ix)
+                in_y = _back_interval(out_req.y, lyr.kh, lyr.stride, lyr.padding, lyr.iy)
+                in_x = _back_interval(out_req.x, lyr.kw, lyr.stride, lyr.padding, lyr.ix)
                 for s_idx, src in enumerate(_sources(group, i)):
                     if s_idx == 0:
                         req = TileRequirement(in_y, in_x)
@@ -241,7 +240,7 @@ def group_tiling_stats(group: Graph, tiles_y: int, tiles_x: int) -> TilingStats:
     base_macs = group.total_macs
     first = group[0]
     base_input = first.cin * first.iy * first.ix
-    base_elems = base_input + sum(l.out_elems for l in group)
+    base_elems = base_input + sum(lyr.out_elems for lyr in group)
     tiled_macs = sum(t.tile_macs(i) for i in range(t.num_tiles))
     tiled_input = sum(t.tile_input_elems(i) for i in range(t.num_tiles))
     tiled_elems = tiled_input + sum(t.tile_stored_elems(i)

@@ -45,9 +45,9 @@ from repro.experiment.artifacts import (default_artifact_dir,
 from repro.experiment.backends import (BACKENDS, AnalyticBackend,
                                        BurstSimBackend, EvalBackend,
                                        EvalResult, EvalSpec, resolve_engine)
-from repro.experiment.registry import (Registry, SystemSpec, WorkloadSpec,
-                                       SYSTEMS, WORKLOADS, register_system,
-                                       register_workload)
+from repro.experiment.registry import (SYSTEMS, WORKLOADS, Registry,
+                                       SystemSpec, WorkloadSpec,
+                                       register_system, register_workload)
 from repro.experiment.runner import (BASELINE_SYSTEM, Experiment,
                                      ParetoPoint, default_experiment,
                                      pareto_tags)

@@ -29,11 +29,11 @@ import functools
 from typing import Any, Mapping, Protocol
 
 from repro.core.commands import Trace, cross_bank_bytes
+from repro.experiment.registry import Registry
 from repro.pim.arch import PIMArch, config_label
 from repro.pim.energy import EnergyReport, simulate_energy, system_area
 from repro.pim.events import EventCounts, assumed_hit_bits, trace_events
 from repro.pim.timing import simulate_cycles
-from repro.experiment.registry import Registry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +54,12 @@ class EvalSpec:
     the greedy rule), ``"greedy"`` (always the greedy rule), or
     ``"searched"`` (the DP optimum of :mod:`repro.plan`, searched at this
     spec's resolved buffer point).  Ignored by layer-by-layer systems.
+    ``verify`` (burst-sim only) runs the :mod:`repro.check` static
+    verifier over the replay's collected event stream post-hoc — trace
+    lint + schedule legality — raising
+    :class:`~repro.check.report.CheckError` on any violation and storing
+    the :class:`~repro.check.report.CheckReport` under
+    ``detail["check"]``.
     """
 
     workload: str
@@ -65,6 +71,7 @@ class EvalSpec:
     row_reuse: bool = True
     engine: str = "columnar"
     plan: str = "default"
+    verify: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,7 +133,8 @@ class EvalContext(Protocol):
     def energy_report(self, trace: Trace, arch: PIMArch) -> Any: ...
 
 
-def _cycle_report(trace: Trace, arch: PIMArch, ctx: EvalContext | None):
+def _cycle_report(trace: Trace, arch: PIMArch,
+                  ctx: EvalContext | None) -> Any:
     fn = getattr(ctx, "cycle_report", None)
     return fn(trace, arch) if fn is not None else simulate_cycles(trace, arch)
 
@@ -197,18 +205,35 @@ class AnalyticBackend:
                        ctx)
 
 
+class _TeeCollector:
+    """Fan one replay's events out to several sinks — how the verifier
+    gets its own :class:`~repro.obs.trace.TimelineCollector` without
+    stealing the stream from a caller-supplied collector."""
+
+    def __init__(self, *sinks: Any) -> None:
+        self.sinks = sinks
+
+    def on_burst(self, event: Any) -> None:
+        for sink in self.sinks:
+            sink.on_burst(event)
+
+    def on_command(self, event: Any) -> None:
+        for sink in self.sinks:
+            sink.on_command(event)
+
+
 class BurstSimBackend:
     name = "burst-sim"
 
     def _replay(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
-                engine: str, ctx: EvalContext | None):
+                engine: str, ctx: EvalContext | None,
+                collector: Any = None) -> Any:
         """One burst replay under the RESOLVED engine, pulling the lowering
         (and, for batching policies, the batched burst ordering) from the
         driver's memo caches when a context is offered."""
         from repro.sim.scheduler import BATCHING_POLICIES
 
         batch_fn = getattr(ctx, "batched", None)
-        collector = getattr(ctx, "collector", None)
         if engine == "columnar":
             from repro.sim.burst import lower_trace_columnar
             from repro.sim.engine_vec import simulate_columnar
@@ -248,8 +273,26 @@ class BurstSimBackend:
         from repro.sim.report import SimReport
 
         engine = resolve_engine(spec.engine)
+        collector = getattr(ctx, "collector", None)
+        verifier_sink = None
+        if spec.verify:
+            from repro.obs.trace import TimelineCollector
+            verifier_sink = TimelineCollector()
+            collector = verifier_sink if collector is None \
+                else _TeeCollector(collector, verifier_sink)
         with span("backend.replay", engine=engine, policy=spec.policy):
-            result = self._replay(trace, arch, spec, engine, ctx)
+            result = self._replay(trace, arch, spec, engine, ctx,
+                                  collector=collector)
+        check = None
+        if verifier_sink is not None:
+            from repro.check import lint_trace, verify_schedule
+            with span("backend.verify", engine=engine, policy=spec.policy):
+                check = verify_schedule(trace, arch, result,
+                                        collector=verifier_sink)
+                check.extend(lint_trace(trace, arch))
+            check.context.update({"workload": spec.workload,
+                                  "system": spec.system, "engine": engine})
+            check.raise_if_failed()
         analytic = _cycle_report(trace, arch, ctx)
         report = SimReport(system=arch.name, policy=spec.policy,
                            result=result,
@@ -261,8 +304,10 @@ class BurstSimBackend:
         energy = energy_from_counts(result.events, arch)
         # detail records the engine that actually RAN (the numpy fallback
         # may differ from spec.engine) — artifacts persist this one
-        return _common(spec, trace, arch, result.makespan,
-                       {"sim": report, "engine": engine}, ctx,
+        detail: dict[str, Any] = {"sim": report, "engine": engine}
+        if check is not None:
+            detail["check"] = check
+        return _common(spec, trace, arch, result.makespan, detail, ctx,
                        energy=energy, events=result.events)
 
 

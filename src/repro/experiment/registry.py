@@ -96,7 +96,7 @@ WORKLOADS: Registry[WorkloadSpec] = Registry("workload")
 
 def register_workload(name: str, *, description: str = "",
                       registry: Registry[WorkloadSpec] = WORKLOADS,
-                      replace: bool = False):
+                      replace: bool = False) -> "Callable[[Callable[[], Graph]], Callable[[], Graph]]":
     """Decorator registering a ``() -> Graph`` builder as a named workload.
 
     >>> @register_workload("TinyNet", description="3-layer smoke net")

@@ -33,14 +33,14 @@ from repro.core.commands import Trace
 from repro.core.fusion import (FusionPlan, PlanSig, plan_from_signature,
                                plan_fused)
 from repro.core.graph import Graph
-from repro.pim.arch import PIMArch
 from repro.experiment import systems as _systems  # registers built-ins
 from repro.experiment import workloads as _workloads  # registers built-ins
 from repro.experiment.backends import BACKENDS, EvalResult, EvalSpec
-from repro.experiment.registry import (Registry, SystemSpec, WorkloadSpec,
-                                       SYSTEMS, WORKLOADS)
+from repro.experiment.registry import (SYSTEMS, WORKLOADS, Registry,
+                                       SystemSpec, WorkloadSpec)
 from repro.obs.counters import CounterRegistry
 from repro.obs.profile import active_profiler, profiled, span
+from repro.pim.arch import PIMArch
 
 BASELINE_SYSTEM = _systems.BASELINE_SYSTEM
 
@@ -437,6 +437,7 @@ class Experiment:
               row_reuse: bool = True,
               engine: str = "columnar",
               plan: str = "default",
+              verify: bool = False,
               workers: int = 1,
               csv_path: str | None = None,
               verbose: bool = False) -> list[EvalResult]:
@@ -457,6 +458,9 @@ class Experiment:
         carrying the sweep's cache-stats delta.  ``verbose=True`` logs one
         structured line per grid point to stderr (spec fields, cache
         hit/miss, elapsed seconds) as the sweep progresses.
+        ``verify=True`` (burst-sim points only) runs the
+        :mod:`repro.check` schedule verifier after every replay — see
+        :class:`~repro.experiment.backends.EvalSpec`.
         """
         if workloads is None:
             workloads = self.workloads.names()
@@ -468,10 +472,10 @@ class Experiment:
             systems = (systems,)
         points = buffers if buffers is not None else ((None, None),)
         specs = [EvalSpec(workload=w, system=s, gbuf_bytes=g,
-                          lbuf_bytes=l, backend=backend,
+                          lbuf_bytes=lb, backend=backend,
                           policy=policy, row_reuse=row_reuse,
-                          engine=engine, plan=plan)
-                 for w in workloads for s in systems for g, l in points]
+                          engine=engine, plan=plan, verify=verify)
+                 for w in workloads for s in systems for g, lb in points]
         baselines = [EvalSpec(workload=w, system=self.baseline_system,
                               backend=backend, policy=policy,
                               row_reuse=row_reuse, engine=engine)
@@ -644,9 +648,9 @@ class Experiment:
             sys_spec = self.systems.get(s)
             g0, l0 = sys_spec.default_buffers
             for g in gbufs:
-                for l in lbufs:
+                for lb in lbufs:
                     rg = g0 if g is None else g
-                    rl = l0 if l is None else l
+                    rl = l0 if lb is None else lb
                     for pl in plans:
                         sig = None if sys_spec.tile_grid is None else \
                             self.plan(workload, sys_spec.tile_grid,
@@ -656,12 +660,12 @@ class Experiment:
                         if key in seen:
                             continue
                         seen.add(key)
-                        combos.append((s, g, l, pl))
+                        combos.append((s, g, lb, pl))
         specs = [EvalSpec(workload=workload, system=s, gbuf_bytes=g,
-                          lbuf_bytes=l, backend=backend, policy=pol,
+                          lbuf_bytes=lb, backend=backend, policy=pol,
                           row_reuse=rr, engine=engine, plan=pl)
                  for pol in policies for rr in modes
-                 for s, g, l, pl in combos]
+                 for s, g, lb, pl in combos]
         # ONE pool pass over the whole extended grid: specs differing
         # only in policy chunk onto the same worker (shared trace +
         # lowering), instead of a fresh pool per axis combo

@@ -9,7 +9,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.fused_conv import fused_conv_kernel

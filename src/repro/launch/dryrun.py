@@ -24,24 +24,24 @@ Usage:
         [--out results.json]
 """
 
-import argparse
-import json
-import time
-import traceback
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs import get_config
-from repro.core.policies import get_policy
-from repro.data.pipeline import make_batch_specs
-from repro.launch import hlo_analysis
-from repro.launch.cells import Cell, all_cells, microbatch_for
-from repro.launch.mesh import make_production_mesh
-from repro.models import build_model
-from repro.optim.adamw import adamw_init
-from repro.train.trainer import (TrainStepConfig, make_serve_step,
+from repro.configs import get_config  # noqa: E402
+from repro.core.policies import get_policy  # noqa: E402
+from repro.data.pipeline import make_batch_specs  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.cells import Cell, all_cells, microbatch_for  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.optim.adamw import adamw_init  # noqa: E402
+from repro.train.trainer import (TrainStepConfig, make_serve_step,  # noqa: E402
                                  make_train_step, named, state_spec)
 
 

@@ -26,7 +26,7 @@ from repro.models.api import param_count
 from repro.optim.adamw import AdamWConfig
 from repro.train.fault_tolerance import StragglerWatch, run_restartable
 from repro.train.trainer import (TrainStepConfig, init_train_state,
-                                 make_train_step, named, state_spec)
+                                 make_train_step, state_spec)
 
 
 def main() -> None:

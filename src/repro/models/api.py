@@ -195,7 +195,7 @@ def _build_hybrid(cfg: ModelConfig) -> Model:
     dt, pdt = _dt(cfg)
     E = cfg.hybrid_attn_every
     assert cfg.num_layers % E == 0, "hybrid layers must tile into units"
-    U, I = cfg.num_layers // E, E - 1
+    U, K = cfg.num_layers // E, E - 1
 
     def init(key) -> Params:
         ks = jax.random.split(key, 3)
@@ -203,7 +203,7 @@ def _build_hybrid(cfg: ModelConfig) -> Model:
         p["mamba"] = _stack_init(
             lambda k: jax.vmap(
                 lambda kk: B.init_mamba_block(kk, cfg, pdt))(
-                    jax.random.split(k, I)), ks[1], U)
+                    jax.random.split(k, K)), ks[1], U)
         p["attn"] = _stack_init(
             lambda k: B.init_attn_block(k, cfg, pdt, use_moe=False), ks[2], U)
         return p
@@ -234,7 +234,7 @@ def _build_hybrid(cfg: ModelConfig) -> Model:
 
     def init_cache(batch_size: int, max_len: int) -> Params:
         mcache = jax.vmap(lambda _: jax.vmap(
-            lambda __: SSMCACHE(cfg, batch_size, dt))(jnp.arange(I)))(
+            lambda __: SSMCACHE(cfg, batch_size, dt))(jnp.arange(K)))(
                 jnp.arange(U))
         acache = jax.vmap(lambda _: B.init_attn_cache(
             cfg, batch_size, max_len, dt))(jnp.arange(U))
@@ -278,7 +278,7 @@ def _build_xlstm(cfg: ModelConfig) -> Model:
     dt, pdt = _dt(cfg)
     E = cfg.xlstm_slstm_every
     assert E and cfg.num_layers % E == 0
-    U, I = cfg.num_layers // E, E - 1
+    U, K = cfg.num_layers // E, E - 1
 
     def init(key) -> Params:
         ks = jax.random.split(key, 3)
@@ -286,7 +286,7 @@ def _build_xlstm(cfg: ModelConfig) -> Model:
         p["mlstm"] = _stack_init(
             lambda k: jax.vmap(
                 lambda kk: B.init_mlstm_block(kk, cfg, pdt))(
-                    jax.random.split(k, I)), ks[1], U)
+                    jax.random.split(k, K)), ks[1], U)
         p["slstm"] = _stack_init(
             lambda k: B.init_slstm_block(k, cfg, pdt), ks[2], U)
         return p
@@ -314,7 +314,7 @@ def _build_xlstm(cfg: ModelConfig) -> Model:
     def init_cache(batch_size: int, max_len: int) -> Params:
         from repro.models.xlstm import mlstm_init_cache, slstm_init_cache
         mc = jax.vmap(lambda _: jax.vmap(
-            lambda __: mlstm_init_cache(cfg, batch_size))(jnp.arange(I)))(
+            lambda __: mlstm_init_cache(cfg, batch_size))(jnp.arange(K)))(
                 jnp.arange(U))
         sc = jax.vmap(lambda _: slstm_init_cache(cfg, batch_size))(
             jnp.arange(U))
@@ -420,7 +420,6 @@ def _build_encdec(cfg: ModelConfig) -> Model:
 
     def decode_step(params, cache, tokens, index):
         x = _embed(params, cfg, tokens).astype(dt)
-        Btch = tokens.shape[0]
         pos_emb = jax.lax.dynamic_slice_in_dim(
             _sinusoid(cache["dec"]["k"].shape[2], cfg.d_model, dt), index, 1)
         x = x + pos_emb[None]

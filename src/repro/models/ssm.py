@@ -17,7 +17,6 @@ Decode is O(1): one state update per token.
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

@@ -31,8 +31,8 @@ from repro.obs.perfetto import (trace_event_json, validate_trace_events,
                                 write_perfetto)
 from repro.obs.profile import (Profiler, Span, active_profiler, profiled,
                                span)
-from repro.obs.trace import (BurstEvent, CommandEvent, TimelineCollector,
-                             TraceCollector, VERDICT_NAMES)
+from repro.obs.trace import (VERDICT_NAMES, BurstEvent, CommandEvent,
+                             TimelineCollector, TraceCollector)
 
 __all__ = [
     "BurstEvent", "CommandEvent", "CounterNamespace", "CounterRegistry",

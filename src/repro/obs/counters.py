@@ -39,10 +39,10 @@ class CounterRegistry(MutableMapping):
         self._counts: dict[str, int | float] = dict(initial or {})
 
     # -- MutableMapping interface (keeps dict-style call sites working) --
-    def __getitem__(self, name: str):
+    def __getitem__(self, name: str) -> "int | float":
         return self._counts[name]
 
-    def __setitem__(self, name: str, value) -> None:
+    def __setitem__(self, name: str, value: "int | float") -> None:
         self._counts[name] = value
 
     def __delitem__(self, name: str) -> None:
@@ -104,10 +104,10 @@ class CounterNamespace:
     def incr(self, name: str, amount: "int | float" = 1) -> None:
         self._registry.incr(self._prefix + name, amount)
 
-    def __setitem__(self, name: str, value) -> None:
+    def __setitem__(self, name: str, value: "int | float") -> None:
         self._registry[self._prefix + name] = value
 
-    def __getitem__(self, name: str):
+    def __getitem__(self, name: str) -> "int | float":
         return self._registry[self._prefix + name]
 
 

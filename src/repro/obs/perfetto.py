@@ -31,11 +31,12 @@ from pathlib import Path
 from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
-    from repro.obs.trace import TimelineCollector
+    from repro.obs.trace import BurstEvent, CommandEvent, TimelineCollector
 
 # process ids per resource class (resource value → pid) and the async
 # command track
-_RESOURCE_PIDS = {"bus": 1, "bank": 2, "core": 3, "gbcore": 4}
+RESOURCE_PIDS = {"bus": 1, "bank": 2, "core": 3, "gbcore": 4}
+_RESOURCE_PIDS = RESOURCE_PIDS      # backward-compat alias
 _COMMANDS_PID = 5
 _PROCESS_NAMES = {1: "bus (shared GBUF path)", 2: "near-bank ports",
                   3: "PIMcore streaming ports", 4: "GBcore",
@@ -115,6 +116,46 @@ def write_perfetto(path: str | Path, collector: "TimelineCollector", *,
     doc = trace_event_json(collector, label=label)
     path.write_text(json.dumps(doc) + "\n")
     return path
+
+
+def events_from_trace_json(doc: dict) -> tuple[list["BurstEvent"],
+                                               list["CommandEvent"]]:
+    """Rebuild the collected event streams from an exported ``trace_event``
+    document — the inverse of :func:`trace_event_json`, bit-exact because
+    the export keeps every field (ts/dur are cycles verbatim and the
+    ``traceEvents`` list preserves emission order).  This is what lets
+    ``python -m repro.check`` re-verify a SAVED Perfetto artifact without
+    the replay that produced it."""
+    from repro.obs.trace import BurstEvent, CommandEvent
+
+    pid_resource = {pid: res for res, pid in RESOURCE_PIDS.items()}
+    bursts: list[BurstEvent] = []
+    begins: dict[int, dict] = {}
+    commands: list[CommandEvent] = []
+    for ev in doc.get("traceEvents", ()):
+        ph = ev.get("ph")
+        if ph == "X" and ev.get("pid") in pid_resource:
+            resource = pid_resource[ev["pid"]]
+            args = ev.get("args", {})
+            bursts.append(BurstEvent(
+                cmd_index=args.get("cmd", -1), layer=ev.get("name", ""),
+                kind=ev.get("cat", ""), resource=resource,
+                unit=0 if resource in ("bus", "gbcore") else ev["tid"],
+                bank=args.get("bank", -1), row=args.get("row", -1),
+                verdict=args.get("verdict", ""),
+                nbytes=args.get("nbytes", 0),
+                start=ev["ts"], duration=ev["dur"]))
+        elif ph == "b" and ev.get("pid") == _COMMANDS_PID:
+            begins[ev["id"]] = ev
+        elif ph == "e" and ev.get("pid") == _COMMANDS_PID:
+            b = begins.get(ev["id"])
+            if b is not None:
+                commands.append(CommandEvent(
+                    index=ev["id"], layer=b.get("name", ""),
+                    kind=b.get("args", {}).get("kind", ""),
+                    start=b["ts"], finish=ev["ts"]))
+    commands.sort(key=lambda c: c.index)
+    return bursts, commands
 
 
 def validate_trace_events(doc: dict) -> None:

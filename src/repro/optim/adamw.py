@@ -27,8 +27,9 @@ class AdamWConfig:
 
 
 def adamw_init(params: Params) -> dict[str, Any]:
-    zeros = lambda p: jax.tree.map(
-        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    def zeros(p: Params) -> Params:
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+
     return {"m": zeros(params), "v": zeros(params),
             "step": jnp.zeros((), jnp.int32)}
 

@@ -118,6 +118,6 @@ def fused4(gbuf_bytes: int = 2 * 1024, lbuf_bytes: int = 0) -> PIMArch:
 def config_label(gbuf_bytes: int, lbuf_bytes: int) -> str:
     """Paper-style buffer label, e.g. G32K_L256 (§V-3)."""
     g = f"G{gbuf_bytes // 1024}K"
-    l = f"L{lbuf_bytes // 1024}K" if lbuf_bytes >= 1024 and lbuf_bytes % 1024 == 0 \
+    lb = f"L{lbuf_bytes // 1024}K" if lbuf_bytes >= 1024 and lbuf_bytes % 1024 == 0 \
         else f"L{lbuf_bytes}"
-    return f"{g}_{l}"
+    return f"{g}_{lb}"

@@ -22,8 +22,7 @@ from repro.core import dataflow
 from repro.core.commands import Trace, cross_bank_bytes
 from repro.core.fusion import plan_fused
 from repro.core.graph import Graph
-from repro.experiment import SYSTEMS as _SYSTEM_REGISTRY
-from repro.experiment import default_experiment
+from repro.experiment import SYSTEMS as _SYSTEM_REGISTRY, default_experiment
 from repro.pim.arch import PIMArch
 from repro.pim.energy import AreaReport, EnergyReport
 from repro.pim.timing import CycleReport

@@ -22,7 +22,7 @@ a bounded number of group evaluations.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Callable, Sequence
 
 from repro.core.fusion import FusedGroup, FusionPlan
 from repro.core.graph import Graph
@@ -44,7 +44,7 @@ class BeamCandidate:
     lbuf_bytes: int
 
 
-def beam_search(graph: Graph, arch_factory, *,
+def beam_search(graph: Graph, arch_factory: Callable[[int, int], PIMArch], *,
                 buffers: Sequence[tuple[int, int]],
                 grids: Sequence[tuple[int, int]] | None = None,
                 beam_width: int = 8, keep: int = 5,
@@ -62,8 +62,8 @@ def beam_search(graph: Graph, arch_factory, *,
     a single buffer point to tune the grid alone).
     """
     combos: list[tuple[PlanCost, int, int]] = []
-    for g, l in buffers:
-        arch = arch_factory(gbuf_bytes=g, lbuf_bytes=l)
+    for g, lb in buffers:
+        arch = arch_factory(gbuf_bytes=g, lbuf_bytes=lb)
         for ty, tx in (grids or candidate_grids(arch.num_pimcores)):
             if ty * tx != arch.num_pimcores:
                 raise ValueError(
@@ -72,7 +72,7 @@ def beam_search(graph: Graph, arch_factory, *,
             combos.append((PlanCost(graph, arch, ty, tx,
                                     trace_cost=trace_cost,
                                     min_group_len=min_group_len,
-                                    stage_aligned=stage_aligned), g, l))
+                                    stage_aligned=stage_aligned), g, lb))
 
     # state: (combo index, position, groups so far, accumulated cost)
     State = tuple[int, int, tuple[tuple[int, int], ...], float]
@@ -96,7 +96,7 @@ def beam_search(graph: Graph, arch_factory, *,
     finished.sort(key=lambda f: f[0])
     out: list[BeamCandidate] = []
     for total, ci, groups, tail in finished[:keep]:
-        cost, g, l = combos[ci]
+        cost, g, lb = combos[ci]
         plan = FusionPlan(
             graph=graph,
             groups=tuple(FusedGroup(a, b, cost.tiles_y, cost.tiles_x)
@@ -104,5 +104,5 @@ def beam_search(graph: Graph, arch_factory, *,
             tail_start=tail)
         out.append(BeamCandidate(plan=plan, cost=total,
                                  tile_grid=(cost.tiles_y, cost.tiles_x),
-                                 gbuf_bytes=g, lbuf_bytes=l))
+                                 gbuf_bytes=g, lbuf_bytes=lb))
     return out

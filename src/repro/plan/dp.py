@@ -44,7 +44,7 @@ __all__ = ["PlanCost", "SearchResult", "analytic_cycles", "analytic_energy",
 TraceCost = Callable[[list, PIMArch], float]
 
 
-def analytic_cycles(trace, arch: PIMArch) -> float:
+def analytic_cycles(trace: list, arch: PIMArch) -> float:
     """Default objective: the analytic memory-system cycle total (what the
     paper's figures report and what the serial burst replay reproduces to
     the cycle)."""
@@ -52,7 +52,7 @@ def analytic_cycles(trace, arch: PIMArch) -> float:
     return simulate_cycles(trace, arch).total
 
 
-def analytic_energy(trace, arch: PIMArch) -> float:
+def analytic_energy(trace: list, arch: PIMArch) -> float:
     """Alternative objective: analytic energy in nJ (also additive)."""
     from repro.pim.energy import simulate_energy
     return simulate_energy(trace, arch).total_nj

@@ -59,7 +59,6 @@ def enumerate_partitions(graph: Graph, tiles_y: int, tiles_x: int, *,
     real CNNs (ResNet18 has ~10² legal plans per grid) and small property
     graphs; ``max_plans`` guards runaway spaces.
     """
-    n = len(graph)
     stops_from: dict[int, list[int]] = {}
     emitted = 0
 

@@ -34,6 +34,8 @@ legacy fresh-row-per-chunk addressing the analytic cross-check contract
 is pinned to.
 """
 
+from typing import Any
+
 from repro.sim.burst import (BurstOp, ColumnarBursts, Resource,
                              check_columnar, check_conservation,
                              check_row_geometry, columnarize, lower_command,
@@ -57,7 +59,7 @@ __all__ = [
 ]
 
 
-def __getattr__(name: str):
+def __getattr__(name: str) -> Any:
     # engine_vec imports numpy at module scope; defer so the reference
     # engine (pure stdlib) stays importable without it
     if name == "simulate_columnar":

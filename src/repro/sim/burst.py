@@ -47,7 +47,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Any
 
 from repro.core.commands import CMD, Command, Trace
 from repro.pim.arch import PIMArch
@@ -359,7 +359,7 @@ def columnarize(lowered: list[list[BurstOp]]) -> ColumnarBursts:
 
 
 def _emit_sequential(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
-                     out: list, np) -> None:
+                     out: list, np: Any) -> None:
     """Vectorized :func:`_lower_sequential`: same chunks, bank round-robin,
     rows and first-visit switch charges, without per-burst objects."""
     banks = np.asarray(list(c.banks) if c.banks
@@ -383,7 +383,7 @@ def _emit_sequential(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
 
 
 def _emit_parallel(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
-                   out: list, np) -> None:
+                   out: list, np: Any) -> None:
     """Vectorized :func:`_lower_parallel`: per-core then per-lane even
     split; each lane's chunks stream through its own bank port."""
     cores = max(c.concurrent_cores, 1)
@@ -415,7 +415,7 @@ def _emit_parallel(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
 
 
 def _emit_cmp(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
-              out: list, np) -> None:
+              out: list, np: Any) -> None:
     """Vectorized :func:`_lower_cmp`: every core streams the same chunk
     pattern through its own port; only the bank mapping differs per core."""
     cores = max(c.concurrent_cores, 1)

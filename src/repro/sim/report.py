@@ -18,6 +18,7 @@ locality removes.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Callable
 
 from repro.core.commands import Trace
 from repro.pim.arch import PIMArch
@@ -77,7 +78,7 @@ class SimReport:
         return out
 
 
-def _engine_fn(engine: str):
+def _engine_fn(engine: str) -> Callable[..., Any]:
     """The validated replay callable for an engine name.  ``columnar`` and
     ``reference`` are bit-identical (enforced by tests/test_engine_vec.py);
     the knob only picks the throughput implementation."""

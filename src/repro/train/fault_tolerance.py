@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable, Iterable
+from typing import Any, Callable
 
 import jax
 

@@ -26,7 +26,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig
 from repro.core.policies import Policy
 from repro.models.api import Model
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -162,7 +161,6 @@ def opt_spec_from_param_spec(policy: Policy, param_spec, params_shape):
     """ZeRO-1: moments = param sharding + every free mesh axis slotted into
     the first divisible unsharded dim."""
     mesh = policy.mesh
-    free_axes = [a for a in mesh.axis_names]
 
     def rule(spec: P, shp):
         used = {a for part in spec for a in

@@ -1,0 +1,485 @@
+"""Tests for the static verifier (repro.check).
+
+The contract: clean replays produce ZERO findings across the full policy
+× row-reuse × engine grid, and every adversarially corrupted schedule /
+trace / plan artifact is caught with its specific diagnostic code — the
+mutation table proves the checker has teeth, mirroring how
+``group_legality_coded`` pins legality codes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.check import (CheckError, CheckReport, Finding,
+                         lint_plan_overrides, lint_plan_record,
+                         lint_plan_sig, lint_trace, merge_reports,
+                         replay_and_verify, verify_schedule, verify_stream)
+from repro.core.commands import CMD, Command
+from repro.core.fusion import plan_fused
+from repro.core.graph import Graph, Layer, OpKind, build_resnet18
+from repro.obs.trace import TimelineCollector
+from repro.pim.ppa import HEADLINE_CONFIGS, SYSTEMS, build_workload, trace_for
+from repro.plan.artifacts import SCHEMA
+from repro.sim.engine import simulate
+
+POLICIES = ("serial", "overlap", "row-aware")
+WORKLOAD = "ResNet18_First8Layers"
+
+
+def _system_trace(system="Fused16", workload=WORKLOAD):
+    gbuf, lbuf = HEADLINE_CONFIGS[system]
+    arch = SYSTEMS[system](gbuf_bytes=gbuf, lbuf_bytes=lbuf)
+    return trace_for(system, build_workload(workload), arch), arch
+
+
+@pytest.fixture(scope="module")
+def replay():
+    """One collected overlap-policy replay everything mutates copies of."""
+    trace, arch = _system_trace()
+    collector = TimelineCollector()
+    result = simulate(trace, arch, "overlap", collector=collector)
+    return trace, arch, result, collector
+
+
+# ---------------------------------------------------------------------------
+# clean runs: zero findings across the whole grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("row_reuse", (True, False))
+def test_clean_grid_reference_engine(policy, row_reuse):
+    trace, arch = _system_trace()
+    report = replay_and_verify(trace, arch, policy, row_reuse=row_reuse,
+                               engine="reference")
+    assert report.ok
+    assert len(report.findings) == 0
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("row_reuse", (True, False))
+def test_clean_grid_columnar_engine(policy, row_reuse):
+    pytest.importorskip("numpy")
+    trace, arch = _system_trace()
+    report = replay_and_verify(trace, arch, policy, row_reuse=row_reuse,
+                               engine="columnar")
+    assert report.ok
+    assert len(report.findings) == 0
+
+
+def test_clean_trace_lints_clean():
+    trace, arch = _system_trace()
+    report = lint_trace(trace, arch)
+    assert report.ok
+    assert len(report.findings) == 0
+
+
+# ---------------------------------------------------------------------------
+# the mutation table: every corruption caught with its code
+# ---------------------------------------------------------------------------
+
+def _shifted_start(bursts, commands, result, trace):
+    b = bursts[40]
+    bursts[40] = b._replace(start=b.start + 7)
+
+
+def _double_booked(bursts, commands, result, trace):
+    seen = {}
+    for i, b in enumerate(bursts):
+        key = (b.resource, b.unit)
+        if key in seen and b.duration > 1:
+            bursts[i] = b._replace(start=bursts[seen[key]].start)
+            return
+        seen[key] = i
+    raise AssertionError("no timeline with two bursts")
+
+
+def _dropped_activate(bursts, commands, result, trace):
+    for i, b in enumerate(bursts):
+        if b.verdict == "activate":
+            bursts[i] = b._replace(verdict="hit")
+            return
+    raise AssertionError("no activate in stream")
+
+
+def _phantom_activate(bursts, commands, result, trace):
+    for i, b in enumerate(bursts):
+        if b.verdict == "hit":
+            bursts[i] = b._replace(verdict="activate")
+            return
+    raise AssertionError("no hit in stream")
+
+
+def _duration_tamper(bursts, commands, result, trace):
+    b = bursts[10]
+    bursts[10] = b._replace(duration=b.duration + 3)
+
+
+def _swapped_dep(bursts, commands, result, trace):
+    # pull a command's window before a real hazard dependency retires
+    from repro.sim.scheduler import command_deps
+    deps = command_deps(trace, result.policy)
+    i, j = next((i, js[0]) for i, js in enumerate(deps) if js)
+    c = commands[i]
+    commands[i] = c._replace(start=commands[j].start,
+                             finish=commands[j].start + (c.finish - c.start))
+
+
+def _reordered_stream(bursts, commands, result, trace):
+    first_of_cmd1 = next(i for i, b in enumerate(bursts) if b.cmd_index == 1)
+    bursts[0], bursts[first_of_cmd1] = bursts[first_of_cmd1], bursts[0]
+
+
+def _missing_command(bursts, commands, result, trace):
+    commands.pop()
+
+
+def _window_tamper(bursts, commands, result, trace):
+    c = commands[0]
+    commands[0] = c._replace(finish=c.finish + 5)
+
+
+MUTATIONS = [
+    ("shifted-start", _shifted_start, "burst-start"),
+    ("double-booked-timeline", _double_booked, "resource-overlap"),
+    ("dropped-activate", _dropped_activate, "row-state"),
+    ("phantom-activate", _phantom_activate, "row-state"),
+    ("duration-tamper", _duration_tamper, "burst-duration"),
+    ("swapped-dep", _swapped_dep, "dependency"),
+    ("reordered-stream", _reordered_stream, "stream-order"),
+    ("missing-command", _missing_command, "stream-order"),
+    ("window-tamper", _window_tamper, "cmd-window"),
+]
+
+
+@pytest.mark.parametrize("name,mutate,code",
+                         MUTATIONS, ids=[m[0] for m in MUTATIONS])
+def test_mutated_schedule_is_caught(replay, name, mutate, code):
+    trace, arch, result, collector = replay
+    bursts = list(collector.bursts)
+    commands = list(collector.commands)
+    mutate(bursts, commands, result, trace)
+    report = verify_schedule(trace, arch, result, bursts=bursts,
+                             commands=commands)
+    assert not report.ok
+    assert code in report.codes(), (name, sorted(report.codes()))
+
+
+def test_makespan_tamper_is_caught(replay):
+    trace, arch, result, collector = replay
+    bad = dataclasses.replace(result, makespan=result.makespan + 1)
+    report = verify_schedule(trace, arch, bad, collector=collector)
+    assert report.codes() == {"makespan"}
+
+
+def test_aggregate_count_tamper_is_caught(replay):
+    trace, arch, result, collector = replay
+    bad = dataclasses.replace(
+        result, events=dataclasses.replace(
+            result.events, row_activations=result.events.row_activations + 1))
+    report = verify_schedule(trace, arch, bad, collector=collector)
+    assert report.codes() == {"count-mismatch"}
+
+
+def test_empty_stream_is_caught(replay):
+    trace, arch, result, _ = replay
+    report = verify_schedule(trace, arch, result, bursts=[], commands=[])
+    assert report.codes() == {"events-empty"}
+
+
+def test_clean_replay_verifies_clean(replay):
+    trace, arch, result, collector = replay
+    report = verify_schedule(trace, arch, result, collector=collector)
+    assert report.ok
+    assert len(report.findings) == 0
+    report.raise_if_failed()        # no-op when clean
+
+
+def test_check_error_carries_report(replay):
+    trace, arch, result, collector = replay
+    bursts = list(collector.bursts)
+    _duration_tamper(bursts, None, None, trace)
+    report = verify_schedule(trace, arch, result, bursts=bursts,
+                             commands=list(collector.commands))
+    with pytest.raises(CheckError) as err:
+        report.raise_if_failed()
+    assert err.value.report is report
+    assert "burst-duration" in str(err.value)
+    # CheckError is an AssertionError so assert-style gates catch it
+    assert isinstance(err.value, AssertionError)
+
+
+def test_finding_caps_suppress_but_count(replay):
+    """Corrupting every duration floods one code; the cap keeps the report
+    readable and records the suppressed count."""
+    trace, arch, result, collector = replay
+    bursts = [b._replace(duration=b.duration + 1) for b in collector.bursts]
+    report = verify_schedule(trace, arch, result, bursts=bursts,
+                             commands=list(collector.commands))
+    from repro.check.schedule import MAX_PER_CODE
+    per_code = [f for f in report.findings if f.code == "burst-duration"]
+    assert len(per_code) == MAX_PER_CODE
+    assert report.context["suppressed[burst-duration]"] > 0
+
+
+# ---------------------------------------------------------------------------
+# trace linter: corrupted Command IR
+# ---------------------------------------------------------------------------
+
+def _lint_one(cmd, arch=None):
+    if arch is None:
+        _, arch = _system_trace()
+    return lint_trace([cmd], arch)
+
+
+TRACE_CASES = [
+    ("validate",
+     Command(CMD.PIM_BK2GBUF, "x", bytes_total=-1)),
+    ("bank-bounds",
+     Command(CMD.PIM_BK2GBUF, "x", bytes_total=4096, banks=(0, 99))),
+    ("bank-width",
+     Command(CMD.PIM_BK2GBUF, "x", bytes_total=4096,
+             banks=tuple(range(17)))),
+    ("core-bounds",
+     Command(CMD.PIM_BK2LBUF, "x", bytes_total=4096,
+             concurrent_cores=999)),
+    ("transfer-compute",
+     Command(CMD.PIM_BK2GBUF, "x", bytes_total=4096, macs=5)),
+    ("cmp-bytes",
+     Command(CMD.PIMCORE_CMP, "x", flag="CONV_BN", bytes_total=64,
+             bank_stream_bytes=64)),
+]
+
+
+@pytest.mark.parametrize("code,cmd", TRACE_CASES,
+                         ids=[c[0] for c in TRACE_CASES])
+def test_trace_lint_catches(code, cmd):
+    report = _lint_one(cmd)
+    assert code in report.codes(), sorted(report.codes())
+    assert not report.ok
+
+
+def test_trace_lint_flag_unsupported():
+    _, arch = _system_trace()
+    baseline = dataclasses.replace(arch, pimcore_has_pool_add=False)
+    cmd = Command(CMD.PIMCORE_CMP, "pool", flag="POOL",
+                  bank_stream_bytes=1024)
+    assert "flag-unsupported" in _lint_one(cmd, baseline).codes()
+    assert "flag-unsupported" not in _lint_one(cmd, arch).codes()
+
+
+def test_trace_lint_row_capacity():
+    _, arch = _system_trace()
+    too_big = arch.row_bytes * (arch.rows_per_bank + 1)
+    cmd = Command(CMD.PIM_BK2GBUF, "x", bytes_total=too_big, banks=(0,))
+    assert "row-capacity" in _lint_one(cmd).codes()
+
+
+def test_trace_lint_advisories_are_warnings():
+    _, arch = _system_trace()
+    report = lint_trace([
+        Command(CMD.GBCORE_CMP, "x", flag="POOL", gbuf_stream_bytes=64,
+                bank_stream_bytes=64),
+        Command(CMD.PIM_BK2GBUF, "x", prefetchable=True),
+    ], arch)
+    assert report.codes() == {"gbcore-stream", "prefetch-empty"}
+    assert report.ok                    # advisory only
+    assert len(report.warnings) == 2
+
+
+def test_lint_finding_points_at_command():
+    report = _lint_one(Command(CMD.PIM_BK2GBUF, "conv1", bytes_total=4096,
+                               banks=(0, 99)))
+    f = report.errors[0]
+    assert "cmd[0]" in f.location and "conv1" in f.location
+
+
+# ---------------------------------------------------------------------------
+# plan linter: artifacts and pinned overrides
+# ---------------------------------------------------------------------------
+
+def _record(plan, **over):
+    rec = {"schema": SCHEMA, "workload": "ResNet18_Full",
+           "system": "Fused16", "tile_grid": [4, 4],
+           "cost": 1.0, "greedy_cost": 2.0, **plan.to_dict()}
+    rec.update(over)
+    return rec
+
+
+@pytest.fixture(scope="module")
+def resnet_plan():
+    graph = build_resnet18()
+    return graph, plan_fused(graph, 4, 4)
+
+
+def test_plan_record_clean(resnet_plan):
+    graph, plan = resnet_plan
+    report = lint_plan_record(_record(plan), graph=graph)
+    assert report.ok
+    assert len(report.findings) == 0
+
+
+PLAN_CASES = [
+    ("schema", {"schema": "bogus/9"}),
+    ("graph-mismatch", {"num_layers": 3}),
+    ("tile-grid", {"tile_grid": [2, 8]}),
+    ("cost-regression", {"cost": 3.0, "greedy_cost": 2.0}),
+]
+
+
+@pytest.mark.parametrize("code,over", PLAN_CASES,
+                         ids=[c[0] for c in PLAN_CASES])
+def test_plan_record_catches(resnet_plan, code, over):
+    graph, plan = resnet_plan
+    report = lint_plan_record(_record(plan, **over), graph=graph)
+    assert code in report.codes(), sorted(report.codes())
+
+
+def test_plan_record_missing_field(resnet_plan):
+    graph, plan = resnet_plan
+    rec = _record(plan)
+    del rec["groups"]
+    report = lint_plan_record(rec, graph=graph)
+    assert "record-field" in report.codes()
+
+
+def test_plan_sig_non_contiguous(resnet_plan):
+    graph, plan = resnet_plan
+    sig = plan.signature()
+    gapped = (sig[0][1:], sig[1])       # drop the first group → gap at 0
+    report = lint_plan_sig(graph, gapped)
+    assert "non-contiguous" in report.codes()
+
+
+def test_plan_sig_illegal_group(resnet_plan):
+    graph, _ = resnet_plan
+    # [0, 7) leaves a residual edge crossing the boundary (see test_plan)
+    report = lint_plan_sig(graph, (((0, 7, 4, 4),), 7))
+    assert "plan-illegal" in report.codes()
+    assert any("residual" in f.message for f in report.errors)
+
+
+def test_plan_overrides_audited(resnet_plan):
+    graph, plan = resnet_plan
+    from repro.experiment import SYSTEMS as SYSTEM_SPECS
+    spec = SYSTEM_SPECS.get("Fused16").with_plan_override(
+        "ResNet18_Full", plan.signature())
+    report = lint_plan_overrides(spec, {"ResNet18_Full": graph})
+    assert report.ok
+    # an illegal pin (legal grid, illegal split) is caught
+    bad = SYSTEM_SPECS.get("Fused16").with_plan_override(
+        "ResNet18_Full", (((0, 7, 4, 4),), 7))
+    report = lint_plan_overrides(bad, {"ResNet18_Full": graph})
+    assert "plan-illegal" in report.codes()
+
+
+def _deep_halo_graph():
+    """Two large-kernel convs on a tiny map: the 4x4-tiled receptive field
+    halo dwarfs the exact input map."""
+    layers = []
+    for i in range(2):
+        layers.append(Layer(name=f"c{i}", kind=OpKind.CONV_BN_RELU,
+                            cin=8, cout=8, iy=8, ix=8, oy=8, ox=8,
+                            kh=7, kw=7, stride=1, padding=3))
+    return Graph(name="DeepHalo", layers=layers)
+
+
+def test_plan_halo_caveat_is_flagged():
+    graph = _deep_halo_graph()
+    _, arch = _system_trace()
+    report = lint_plan_sig(graph, (((0, 2, 4, 4),), 2), arch=arch)
+    assert "halo-unclamped" in report.codes()
+    assert report.ok                    # advisory, not an error
+
+
+# ---------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------
+
+def test_report_merge_and_serialization():
+    a = CheckReport(checker="trace-lint")
+    a.add("bank-bounds", "cmd[0]", "oops")
+    b = CheckReport(checker="plan-lint")
+    b.add("halo-unclamped", "groups[0]", "caveat", severity="warning")
+    merged = merge_reports([a, b], checker="repro.check")
+    assert len(merged) == 2
+    assert not merged.ok and len(merged.warnings) == 1
+    d = merged.to_dict()
+    assert d["ok"] is False
+    assert [f["code"] for f in d["findings"]] == ["bank-bounds",
+                                                  "halo-unclamped"]
+    json.dumps(d)                       # artifact-safe
+
+
+def test_finding_rejects_unknown_severity():
+    with pytest.raises(ValueError):
+        Finding(code="x", location="y", message="z", severity="fatal")
+
+
+# ---------------------------------------------------------------------------
+# the EvalSpec verify knob
+# ---------------------------------------------------------------------------
+
+def test_eval_spec_verify_knob_runs_checker():
+    from repro.experiment import Experiment
+    exp = Experiment()
+    r = exp.run(workload=WORKLOAD, system="Fused16", backend="burst-sim",
+                policy="row-aware", verify=True)
+    check = r.detail["check"]
+    assert check.ok and len(check.findings) == 0
+    assert check.context["engine"] in ("reference", "columnar")
+    # verify=False points memo-cache separately and carry no report
+    r2 = exp.run(workload=WORKLOAD, system="Fused16", backend="burst-sim",
+                 policy="row-aware", verify=False)
+    assert "check" not in r2.detail
+
+
+def test_verify_tee_preserves_caller_collector():
+    from repro.experiment import Experiment
+    exp = Experiment()
+    exp.collector = TimelineCollector()
+    r = exp.run(workload=WORKLOAD, system="Fused16", backend="burst-sim",
+                policy="serial", verify=True)
+    assert r.detail["check"].ok
+    assert len(exp.collector.bursts) > 0        # tee kept the stream
+    assert len(exp.collector.commands) > 0
+
+
+# ---------------------------------------------------------------------------
+# saved-artifact round trip: Perfetto export → stream verification
+# ---------------------------------------------------------------------------
+
+def test_perfetto_round_trip_verifies(replay):
+    from repro.obs.perfetto import events_from_trace_json, trace_event_json
+    trace, arch, result, collector = replay
+    doc = trace_event_json(collector)
+    bursts, commands = events_from_trace_json(doc)
+    assert bursts == collector.bursts
+    assert commands == collector.commands
+    report = verify_stream(bursts, commands, arch=arch)
+    assert report.ok and len(report.findings) == 0
+    # and the reconstructed stream still satisfies the FULL contract
+    full = verify_schedule(trace, arch, result, bursts=bursts,
+                           commands=commands)
+    assert full.ok and len(full.findings) == 0
+
+
+def test_check_cli_plan_and_trace(tmp_path, replay):
+    from repro.check.__main__ import main
+    from repro.obs.perfetto import write_perfetto
+
+    graph = build_resnet18()
+    plan = plan_fused(graph, 4, 4)
+    good = tmp_path / "plan.json"
+    good.write_text(json.dumps(_record(plan)))
+    assert main(["plan", str(good), "--no-graph"]) == 0
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_record(plan, schema="bogus/9")))
+    assert main(["plan", str(bad), "--no-graph"]) == 1
+
+    _, _, _, collector = replay
+    perf = write_perfetto(tmp_path / "replay.perfetto.json", collector)
+    assert main(["trace", str(perf)]) == 0

@@ -15,8 +15,8 @@ from repro.core.commands import CMD, Command, cross_bank_bytes
 from repro.core.fusion import plan_fused
 from repro.core.graph import (Graph, Layer, OpKind, build_mobilenet_v1,
                               build_resnet18, build_vgg11, first_n_layers)
-from repro.experiment import (BACKENDS, EvalSpec, Experiment, Registry,
-                              SYSTEMS, SystemSpec, WORKLOADS, WorkloadSpec,
+from repro.experiment import (BACKENDS, SYSTEMS, WORKLOADS, Experiment,
+                              Registry, SystemSpec, WorkloadSpec,
                               register_workload)
 from repro.pim import arch as pim_arch
 from repro.pim.energy import simulate_energy, system_area
@@ -179,7 +179,7 @@ def test_buffer_sweep_reuses_graph_plan_and_tilings(monkeypatch):
                         counting_baseline)
 
     exp = Experiment(workloads=reg)
-    points = [(2 * KB, l) for l in (0, 64, 128, 192, 256, 320, 384, 448)]
+    points = [(2 * KB, lb) for lb in (0, 64, 128, 192, 256, 320, 384, 448)]
     results = exp.sweep(workloads="Tiny", systems="Fused16", buffers=points)
     norms = [exp.normalized(r) for r in results]
 

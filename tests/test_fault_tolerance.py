@@ -1,13 +1,11 @@
 """Fault tolerance: restartable loop, straggler watch, elastic remesh."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.train.fault_tolerance import (RunReport, StragglerWatch,
-                                         TransientError, elastic_remesh,
-                                         run_restartable)
+from repro.train.fault_tolerance import (StragglerWatch, TransientError,
+                                         elastic_remesh, run_restartable)
 
 
 # ---------------------------------------------------------------------------

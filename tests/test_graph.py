@@ -21,13 +21,13 @@ def test_resnet18_structure():
 
 def test_resnet18_shapes_chain():
     g = build_resnet18()
-    for i, l in enumerate(g):
-        oy, ox = l.out_extent_for(l.iy, l.ix)
-        assert (oy, ox) == (l.oy, l.ox), l.name
+    for i, lyr in enumerate(g):
+        oy, ox = lyr.out_extent_for(lyr.iy, lyr.ix)
+        assert (oy, ox) == (lyr.oy, lyr.ox), lyr.name
         # chained input extents must match the producing layer
-        if i > 0 and l.input_of is None and l.kind is not OpKind.FC:
+        if i > 0 and lyr.input_of is None and lyr.kind is not OpKind.FC:
             prev = g[i - 1]
-            assert (l.iy, l.ix) == (prev.oy, prev.ox), l.name
+            assert (lyr.iy, lyr.ix) == (prev.oy, prev.ox), lyr.name
 
 
 def test_total_macs_resnet18():
@@ -44,10 +44,10 @@ def test_weight_elems_count():
 
 
 def test_receptive_field_inverse():
-    l = build_resnet18()[0]  # conv7x7 s2 p3
-    ry, rx = l.in_extent_for(1, 1)
+    lyr = build_resnet18()[0]  # conv7x7 s2 p3
+    ry, rx = lyr.in_extent_for(1, 1)
     assert (ry, rx) == (7, 7)
-    ry, rx = l.in_extent_for(2, 2)
+    ry, rx = lyr.in_extent_for(2, 2)
     assert (ry, rx) == (9, 9)
 
 
@@ -58,9 +58,9 @@ def test_first_n_layers():
 
 
 def test_duplicate_names_rejected():
-    l = Layer("a", OpKind.CONV_BN, 1, 1, 4, 4, 4, 4)
+    lyr = Layer("a", OpKind.CONV_BN, 1, 1, 4, 4, 4, 4)
     with pytest.raises(ValueError):
-        Graph("bad", [l, l])
+        Graph("bad", [lyr, lyr])
 
 
 def test_external_refs_tracked():

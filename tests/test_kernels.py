@@ -9,12 +9,12 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.kernels import ops
-from repro.kernels.flash_attention import flash_attention_kernel
-from repro.kernels.fused_conv import fused_conv_kernel
-from repro.kernels.mamba_scan import mamba_scan_kernel
-from repro.kernels.mlstm_scan import mlstm_scan_kernel
-from repro.kernels.ref import (attention_ref, fused_conv_ref, mamba_scan_ref,
+from repro.kernels import ops  # noqa: E402
+from repro.kernels.flash_attention import flash_attention_kernel  # noqa: E402
+from repro.kernels.fused_conv import fused_conv_kernel  # noqa: E402
+from repro.kernels.mamba_scan import mamba_scan_kernel  # noqa: E402
+from repro.kernels.mlstm_scan import mlstm_scan_kernel  # noqa: E402
+from repro.kernels.ref import (attention_ref, fused_conv_ref, mamba_scan_ref,  # noqa: E402
                                mlstm_ref)
 
 KEY = jax.random.PRNGKey(7)

@@ -8,7 +8,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.models import layers as L
+from repro.models import layers as L  # noqa: E402
 
 KEY = jax.random.PRNGKey(11)
 

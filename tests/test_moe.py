@@ -8,8 +8,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.configs import get_config
-from repro.models.moe import capacity_for, init_moe, moe_ffn
+from repro.configs import get_config  # noqa: E402
+from repro.models.moe import capacity_for, init_moe, moe_ffn  # noqa: E402
 
 CFG = get_config("granite-moe-1b-a400m", smoke=True)
 KEY = jax.random.PRNGKey(3)

@@ -21,8 +21,8 @@ from repro.obs.counters import (CounterRegistry, counters_from_events,
 from repro.obs.perfetto import (trace_event_json, validate_trace_events,
                                 write_perfetto)
 from repro.obs.profile import (Profiler, active_profiler, profiled, span)
-from repro.obs.trace import (BurstEvent, TimelineCollector, TraceCollector,
-                             VERDICT_NAMES)
+from repro.obs.trace import (VERDICT_NAMES, BurstEvent,
+                             TimelineCollector, TraceCollector)
 from repro.pim.ppa import HEADLINE_CONFIGS, SYSTEMS, build_workload, trace_for
 from repro.sim.engine import simulate
 

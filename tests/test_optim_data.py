@@ -8,14 +8,14 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.configs import get_config
-from repro.data.pipeline import batch_for_step, make_batch_specs, \
-    synthetic_batches
-from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+from repro.configs import get_config  # noqa: E402
+from repro.data.pipeline import (batch_for_step,  # noqa: E402
+                                 make_batch_specs, synthetic_batches)
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa: E402
                                clip_by_global_norm, global_norm)
-from repro.optim.compression import (compress_grads, dequantize_int8,
+from repro.optim.compression import (compress_grads, dequantize_int8,  # noqa: E402
                                      init_error_feedback, quantize_int8)
-from repro.optim.schedule import cosine_schedule, make_schedule, wsd_schedule
+from repro.optim.schedule import cosine_schedule, make_schedule, wsd_schedule  # noqa: E402
 
 
 # ---------------------------------------------------------------------------

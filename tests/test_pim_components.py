@@ -3,7 +3,7 @@
 import pytest
 
 from repro.core.commands import CMD, Command
-from repro.pim.arch import aim_like, config_label, fused4, fused16
+from repro.pim.arch import aim_like, config_label, fused16, fused4
 from repro.pim.energy import (command_energy_nj, sram_area_mm2,
                               sram_pj_per_bit, system_area)
 from repro.pim.timing import command_cycles

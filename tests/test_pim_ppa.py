@@ -9,10 +9,10 @@ strictly.  See EXPERIMENTS.md for the full model-vs-paper tables.
 
 import pytest
 
-from repro.core.commands import CMD, cross_bank_bytes
+from repro.core.commands import cross_bank_bytes
 from repro.core.fusion import plan_fused
 from repro.core.graph import build_resnet18
-from repro.pim.ppa import SYSTEMS, baseline, evaluate, normalized_ppa
+from repro.pim.ppa import SYSTEMS, normalized_ppa
 
 KB = 1024
 
@@ -94,8 +94,8 @@ def test_fused16_full_g32k_band():
 
 @pytest.mark.parametrize("system", ["AiM-like", "Fused16"])
 def test_takeaway2_lbuf_helps_then_saturates(system):
-    c = {l: normalized_ppa(system, "ResNet18_First8Layers", 2 * KB, l)["cycles"]
-         for l in (0, 256, 512, 1024)}
+    c = {lb: normalized_ppa(system, "ResNet18_First8Layers", 2 * KB, lb)["cycles"]
+         for lb in (0, 256, 512, 1024)}
     assert c[256] < 0.8 * c[0]                   # small LBUF helps a lot
     # saturation: 512→1024 gains much smaller than 0→256 gains
     gain_small = c[0] - c[256]
@@ -108,9 +108,9 @@ def test_takeaway2_fused4_saturates_later():
     its LBUF benefit saturates past 256 B (×4 the 16-core systems') —
     consistent with the paper reporting Fused4 as the cycle laggard at
     small LBUF (§V-C)."""
-    c = {l: normalized_ppa("Fused4", "ResNet18_First8Layers",
-                           2 * KB, l)["cycles"]
-         for l in (0, 256, 1024, 4096, 8192)}
+    c = {lb: normalized_ppa("Fused4", "ResNet18_First8Layers",
+                           2 * KB, lb)["cycles"]
+         for lb in (0, 256, 1024, 4096, 8192)}
     assert c[256] < c[0]                          # monotone improvement
     assert c[1024] < c[256]
     gain_early = c[0] - c[1024]

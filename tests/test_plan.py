@@ -19,13 +19,12 @@ import json
 import pytest
 
 from repro.core import dataflow
-from repro.core.fusion import (FusedGroup, FusionPlan, group_legality,
-                               is_legal_group, plan_from_dict,
-                               plan_from_signature, plan_fused)
+from repro.core.fusion import (group_legality, is_legal_group,
+                               plan_from_dict, plan_from_signature,
+                               plan_fused)
 from repro.core.graph import (Graph, Layer, OpKind, build_mobilenet_v1,
                               build_resnet18)
-from repro.experiment import (Experiment, EvalSpec, SYSTEMS,
-                              read_results_csv)
+from repro.experiment import SYSTEMS, Experiment, read_results_csv
 from repro.pim import arch as pim_arch
 from repro.pim.timing import simulate_cycles
 from repro.plan import (PlanCost, analytic_energy, beam_search,
@@ -66,7 +65,7 @@ def test_residual_edge_exactly_at_group_boundary_is_clean():
     g = build_resnet18()
     # [2:5) is exactly one BasicBlock (conv1, conv2, add); its residual
     # operand is the group INPUT (maxpool's output) — allowed
-    assert [l.name for l in g.layers[2:5]] == \
+    assert [lyr.name for lyr in g.layers[2:5]] == \
         ["s1b1_conv1", "s1b1_conv2", "s1b1_add"]
     assert is_legal_group(g, 2, 5, 4, 4)
     # a group ENDING at an ADD whose output later layers re-consume is
@@ -83,7 +82,7 @@ def test_residual_edge_exactly_at_group_boundary_is_clean():
 def test_grouped_conv_layers_fuse_legally():
     g = build_mobilenet_v1()
     # stem + first depthwise-separable block: contains groups == cin convs
-    assert any(l.groups > 1 for l in g.layers[:4])
+    assert any(lyr.groups > 1 for lyr in g.layers[:4])
     assert is_legal_group(g, 0, 4, 4, 4)
     plan = plan_fused(g, 4, 4)
     assert plan.groups                  # fusion proceeds over grouped convs

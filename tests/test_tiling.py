@@ -3,8 +3,7 @@
 import pytest
 
 from repro.core.graph import build_resnet18, first_n_layers
-from repro.core.tiling import (TileRequirement, _back_interval,
-                               group_tiling_stats, tile_group)
+from repro.core.tiling import _back_interval, group_tiling_stats, tile_group
 
 
 def test_back_interval_basic():
@@ -84,7 +83,7 @@ def test_residual_union_covers_shortcut():
 def test_peak_live_positive_and_bounded():
     f8 = first_n_layers(build_resnet18(), 8)
     t = tile_group(f8, 2, 2)
-    total = sum(l.out_elems for l in f8)
+    total = sum(lyr.out_elems for lyr in f8)
     for i in range(4):
         peak = t.tile_peak_live_elems(i)
         assert 0 < peak < total
