@@ -24,6 +24,9 @@ Modules:
   backend protocol; ``analytic`` and ``burst-sim`` built-ins (the latter
   reports energy from simulated row activations / row-buffer hits).
 * :mod:`repro.experiment.runner` — the memoizing `Experiment` driver.
+* :mod:`repro.experiment.cache` — the content-addressed on-disk
+  `DiskCache` for columnar lowerings and batch orders (enabled via
+  ``$REPRO_CACHE_DIR`` / ``$REPRO_CACHE``; shared by sweep workers).
 * :mod:`repro.experiment.artifacts` — CSV persistence for sweep results
   (``Experiment.sweep(..., csv_path=...)``), so figures regenerate
   without re-running.
@@ -45,6 +48,7 @@ from repro.experiment.artifacts import (default_artifact_dir,
 from repro.experiment.backends import (BACKENDS, AnalyticBackend,
                                        BurstSimBackend, EvalBackend,
                                        EvalResult, EvalSpec, resolve_engine)
+from repro.experiment.cache import DiskCache
 from repro.experiment.registry import (SYSTEMS, WORKLOADS, Registry,
                                        SystemSpec, WorkloadSpec,
                                        register_system, register_workload)
@@ -54,7 +58,8 @@ from repro.experiment.runner import (BASELINE_SYSTEM, Experiment,
 
 __all__ = [
     "BACKENDS", "BASELINE_SYSTEM", "AnalyticBackend", "BurstSimBackend",
-    "EvalBackend", "EvalResult", "EvalSpec", "Experiment", "ParetoPoint",
+    "DiskCache", "EvalBackend", "EvalResult", "EvalSpec", "Experiment",
+    "ParetoPoint",
     "Registry", "SystemSpec", "WorkloadSpec", "SYSTEMS", "WORKLOADS",
     "default_artifact_dir", "default_experiment", "pareto_tags",
     "read_results_csv", "register_system", "register_workload",

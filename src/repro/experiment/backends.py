@@ -117,7 +117,10 @@ class EvalContext(Protocol):
     burst orderings, and memoized policy-independent analytic cycle/energy
     reports.  A context may also expose a ``collector`` attribute (a
     :class:`repro.obs.trace.TraceCollector` or ``None``) — the burst-sim
-    backend streams replay events into it when present."""
+    backend streams replay events into it when present.  Collectors with
+    the :class:`repro.obs.trace.FoldingCollector` shape additionally ride
+    ``Experiment.sweep(workers=N)`` pools (a fork per worker, merged back
+    by the parent); plain collectors keep such sweeps serial."""
 
     def lowered(self, trace: Trace, arch: PIMArch,
                 row_reuse: bool = True) -> Any: ...
@@ -245,9 +248,12 @@ class BurstSimBackend:
                 else lower_trace_columnar(trace, arch,
                                           row_reuse=spec.row_reuse)
             if spec.policy in BATCHING_POLICIES:
+                # the context-less path still hits the policy-keyed cache
+                # batch_same_row_columnar keeps on the base lowering, so
+                # repeated replays of one `cols` reorder (and profile) once
                 cols = batch_fn(trace, arch, spec.row_reuse, spec.policy,
                                 engine) if batch_fn is not None \
-                    else batch_same_row_columnar(cols)
+                    else batch_same_row_columnar(cols, spec.policy)
             return simulate_columnar(trace, arch, spec.policy, cols=cols,
                                      prebatched=True, collector=collector)
         from repro.sim.burst import lower_trace

@@ -1,0 +1,240 @@
+"""Content-addressed on-disk cache for columnar lowerings and batch orders.
+
+Lowering a 240k-burst trace costs ~50 ms and a ``sweep(workers=N)`` spawn
+pool used to pay it once per worker per (workload, system, buffer point,
+plan) — the dominant cost of a distributed sweep.  This cache persists the
+two order-dependent artifacts the in-memory ``Experiment`` memos hold:
+
+* the columnar lowering (:class:`repro.sim.burst.ColumnarBursts` arrays),
+* the ``row-aware`` batching permutation (``batch_order``) — the batched
+  arrays are just ``cols.permuted(order)``, so only the order is stored.
+
+Keys are SHA-256 digests of a canonical JSON blob: the artifact kind, a
+``LOWERING_VERSION`` schema constant (bump it when lowering semantics
+change — old entries become unreachable, not wrong), the workload / system
+names, resolved buffer sizes, the resolved fusion-plan signature,
+``row_reuse`` and the full arch fingerprint (every ``PIMArch`` field).
+Anything that could change the arrays is in the key, so entries never need
+explicit invalidation; loads additionally re-validate shape/conservation
+against the live trace (:func:`repro.sim.burst.check_columnar`) so a
+corrupt or stale file degrades to a miss, never a wrong replay.
+
+Environment knobs (read by :meth:`DiskCache.from_env`, which
+:class:`repro.experiment.runner.Experiment` consults by default):
+
+* ``REPRO_CACHE_DIR`` — cache directory; setting it enables the cache.
+* ``REPRO_CACHE`` — ``1``/``on`` enables at ``~/.cache/repro`` when no
+  directory is given; ``0``/``off`` force-disables even with a directory.
+* ``REPRO_CACHE_MAX_BYTES`` — prune least-recently-used entries beyond
+  this budget after each store (default: unbounded).
+
+The cache is OFF unless opted into, so test runs stay hermetic.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import TYPE_CHECKING, Any
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.pim.arch import PIMArch
+    from repro.sim.burst import ColumnarBursts
+
+# Bump when the burst-lowering semantics change: keys embed this, so stale
+# entries from an older lowering simply stop matching.
+LOWERING_VERSION = 1
+
+#: array fields persisted for a columnar lowering, in constructor order
+COLUMNAR_FIELDS = ("offsets", "cmd_index", "rescode", "unit", "bank",
+                   "row", "nbytes", "switch")
+
+_OFF = frozenset({"0", "off", "no", "false"})
+_ON = frozenset({"1", "on", "yes", "true"})
+
+
+def arch_fingerprint(arch: "PIMArch") -> dict[str, Any]:
+    """Every field of the arch as a JSON-able dict — part of the cache key
+    so two systems that differ in ANY timing or geometry parameter never
+    share an entry."""
+    import dataclasses
+
+    return dataclasses.asdict(arch)
+
+
+class DiskCache:
+    """A flat content-addressed store of ``.npz`` files under ``root``
+    (sharded by the first two key hex chars).  Writes are atomic
+    (``os.replace`` of a same-directory temp file) so concurrent sweep
+    workers may share one cache without locking; double-stores are
+    idempotent.  ``stats`` counts hits / misses / stores / evictions /
+    errors for the :class:`repro.obs.counters.CounterRegistry` snapshot."""
+
+    def __init__(self, root: str | os.PathLike[str],
+                 max_bytes: int | None = None) -> None:
+        self.root = Path(root)
+        self.max_bytes = max_bytes
+        self.stats: dict[str, int] = {"hits": 0, "misses": 0, "stores": 0,
+                                      "evictions": 0, "errors": 0}
+
+    @classmethod
+    def from_env(cls) -> "DiskCache | None":
+        """The cache the environment asks for, or ``None`` (disabled)."""
+        flag = os.environ.get("REPRO_CACHE", "").strip().lower()
+        if flag in _OFF:
+            return None
+        root = os.environ.get("REPRO_CACHE_DIR", "").strip()
+        if not root:
+            if flag not in _ON:
+                return None
+            root = str(Path.home() / ".cache" / "repro")
+        raw = os.environ.get("REPRO_CACHE_MAX_BYTES", "").strip()
+        return cls(root, max_bytes=int(raw) if raw else None)
+
+    # -- keys ------------------------------------------------------------
+
+    @staticmethod
+    def key_for(**fields: Any) -> str:
+        """SHA-256 of the canonical JSON encoding of ``fields``."""
+        blob = json.dumps(fields, sort_keys=True, separators=(",", ":"),
+                          default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    def path_for(self, key: str) -> Path:
+        return self.root / key[:2] / f"{key}.npz"
+
+    # -- raw array I/O ---------------------------------------------------
+
+    def _read(self, key: str) -> dict[str, Any] | None:
+        import numpy as np
+
+        path = self.path_for(key)
+        try:
+            with np.load(path) as data:
+                return {name: data[name] for name in data.files}
+        except FileNotFoundError:
+            self.stats["misses"] += 1
+            return None
+        except Exception:
+            self.stats["errors"] += 1
+            return None
+
+    def _write(self, key: str, arrays: dict[str, Any]) -> None:
+        import numpy as np
+
+        path = self.path_for(key)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **arrays)
+            os.replace(tmp, path)
+        except Exception:
+            self.stats["errors"] += 1
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return
+        self.stats["stores"] += 1
+        if self.max_bytes is not None:
+            self.prune(self.max_bytes)
+
+    # -- columnar lowerings ----------------------------------------------
+
+    def load_columnar(self, key: str, trace: Any = None,
+                      arch: "PIMArch | None" = None
+                      ) -> "ColumnarBursts | None":
+        """The cached lowering under ``key``, re-validated against the live
+        ``trace``/``arch`` (byte conservation, row geometry, segment
+        bounds) when given — validation failure counts as an error and
+        returns ``None`` so the caller rebuilds."""
+        from repro.sim.burst import ColumnarBursts, check_columnar
+
+        data = self._read(key)
+        if data is None:
+            return None
+        try:
+            cols = ColumnarBursts(**{f: data[f] for f in COLUMNAR_FIELDS})
+            if trace is not None:
+                if cols.n_cmds != len(trace):
+                    raise ValueError("command count mismatch")
+                if arch is not None:
+                    check_columnar(trace, cols, arch)
+        except Exception:
+            self.stats["errors"] += 1
+            return None
+        self.stats["hits"] += 1
+        return cols
+
+    def store_columnar(self, key: str, cols: "ColumnarBursts") -> None:
+        self._write(key, {f: getattr(cols, f) for f in COLUMNAR_FIELDS})
+
+    # -- batching permutations -------------------------------------------
+
+    def load_order(self, key: str,
+                   cols: "ColumnarBursts") -> "Any | None":
+        """The cached batching permutation under ``key``, validated to be a
+        within-command permutation of ``cols`` (a full permutation that
+        keeps ``cmd_index`` monotone — exactly the invariant
+        ``batch_same_row_columnar`` guarantees)."""
+        import numpy as np
+
+        data = self._read(key)
+        if data is None:
+            return None
+        order = data.get("order")
+        try:
+            if order is None or order.shape != (cols.n_bursts,):
+                raise ValueError("order shape mismatch")
+            if not np.array_equal(np.sort(order),
+                                  np.arange(cols.n_bursts)):
+                raise ValueError("not a permutation")
+            if order.size and np.any(np.diff(cols.cmd_index[order]) < 0):
+                raise ValueError("order crosses command segments")
+        except Exception:
+            self.stats["errors"] += 1
+            return None
+        self.stats["hits"] += 1
+        return order
+
+    def store_order(self, key: str, order: Any) -> None:
+        self._write(key, {"order": order})
+
+    # -- maintenance -----------------------------------------------------
+
+    def entries(self) -> list[Path]:
+        if not self.root.is_dir():
+            return []
+        return sorted(self.root.glob("*/*.npz"))
+
+    def total_bytes(self) -> int:
+        return sum(p.stat().st_size for p in self.entries())
+
+    def prune(self, max_bytes: int) -> int:
+        """Evict least-recently-used entries (by mtime) until the cache
+        fits ``max_bytes``; returns the number evicted."""
+        entries = [(p.stat().st_mtime, p.stat().st_size, p)
+                   for p in self.entries()]
+        entries.sort(reverse=True)              # newest first
+        budget, evicted = 0, 0
+        for _, size, path in entries:
+            budget += size
+            if budget > max_bytes:
+                try:
+                    path.unlink()
+                    evicted += 1
+                except OSError:
+                    pass
+        self.stats["evictions"] += evicted
+        return evicted
+
+    def clear(self) -> None:
+        for path in self.entries():
+            try:
+                path.unlink()
+            except OSError:
+                pass

@@ -35,7 +35,8 @@ from repro.core.fusion import (FusionPlan, PlanSig, plan_from_signature,
 from repro.core.graph import Graph
 from repro.experiment import systems as _systems  # registers built-ins
 from repro.experiment import workloads as _workloads  # registers built-ins
-from repro.experiment.backends import BACKENDS, EvalResult, EvalSpec
+from repro.experiment.backends import (BACKENDS, EvalResult, EvalSpec,
+                                       resolve_engine)
 from repro.experiment.registry import (SYSTEMS, WORKLOADS, Registry,
                                        SystemSpec, WorkloadSpec)
 from repro.obs.counters import CounterRegistry
@@ -73,14 +74,30 @@ def pareto_tags(results: Sequence[EvalResult]) -> list[bool]:
             for i, mine in enumerate(metrics)]
 
 
-def _sweep_worker(specs: list[EvalSpec]) -> tuple[list[EvalResult],
-                                                  dict[str, int]]:
+def _sweep_worker(job: dict[str, Any]) -> dict[str, Any]:
     """Process-pool entry point for :meth:`Experiment.sweep`: evaluate one
     chunk of grid points on a fresh Experiment (over the module-level
-    registries) and ship the results plus the build stats back for the
-    parent to merge."""
+    registries, with the parent's pinned plan overrides re-applied from
+    the shipped :func:`repro.plan.artifacts.override_records`) and ship
+    the results, build stats, folded collector and per-point progress
+    back for the parent to merge.  The worker's Experiment reads the
+    on-disk cache from the environment, so spawn pools stop re-lowering
+    the same trace once any process has stored it."""
     exp = Experiment()
-    return [exp.run(spec) for spec in specs], exp.stats
+    if job.get("overrides"):
+        from repro.plan.artifacts import apply_override_records
+        apply_override_records(exp.systems, job["overrides"])
+    collector = job.get("collector")
+    if collector is not None:
+        exp.collector = collector
+    results: list[EvalResult] = []
+    progress: list[tuple[EvalSpec, float]] = []
+    for spec in job["specs"]:
+        t0 = time.perf_counter()
+        results.append(exp.run(spec))
+        progress.append((spec, time.perf_counter() - t0))
+    return {"results": results, "stats": dict(exp.stats),
+            "collector": collector, "progress": progress}
 
 
 class Experiment:
@@ -90,11 +107,19 @@ class Experiment:
                  workloads: Registry[WorkloadSpec] = WORKLOADS,
                  systems: Registry[SystemSpec] = SYSTEMS,
                  backends: Registry = BACKENDS,
-                 baseline_system: str = BASELINE_SYSTEM) -> None:
+                 baseline_system: str = BASELINE_SYSTEM,
+                 disk_cache: Any = "env") -> None:
         self.workloads = workloads
         self.systems = systems
         self.backends = backends
         self.baseline_system = baseline_system
+        # on-disk cache for columnar lowerings / batch orders: the default
+        # sentinel reads $REPRO_CACHE_DIR / $REPRO_CACHE (off unless opted
+        # in); pass a DiskCache to force one, or None to disable
+        if disk_cache == "env":
+            from repro.experiment.cache import DiskCache
+            disk_cache = DiskCache.from_env()
+        self.disk_cache = disk_cache
         # a CounterRegistry IS a MutableMapping, so dict-style call sites
         # (tests assert stats["trace_hits"], dict(exp.stats)) keep working
         # while gaining the namespaced snapshot/JSON API of repro.obs
@@ -105,12 +130,16 @@ class Experiment:
             "columnar_lowerings": 0, "batchings": 0,
             "cycle_models": 0, "energy_models": 0,
             "backend_evals": 0, "result_hits": 0,
+            "disk_hits": 0, "disk_misses": 0, "disk_stores": 0,
+            "parallel_chunks": 0, "parallel_points": 0,
         })
         # optional repro.obs.trace.TraceCollector: when set, the burst-sim
         # backend streams replay events into it (EvalContext hook).  NOTE:
         # memoized results do not re-replay — attach the collector before
         # the point of interest is first evaluated (or use a fresh
-        # Experiment, as benchmarks/bottleneck_report.py does).
+        # Experiment, as benchmarks/bottleneck_report.py does).  A
+        # FoldingCollector (fork()/merge()) also rides sweep(workers=N)
+        # pools; any other collector keeps those sweeps serial.
         self.collector: Any = None
         self._graphs: dict[str, Graph] = {}
         self._plans: dict[tuple, FusionPlan] = {}
@@ -294,16 +323,30 @@ class Experiment:
         return tr
 
     def _per_trace(self, cache: dict, trace: Trace, arch: PIMArch,
-                   build, stat: str, extra: Any = None) -> Any:
+                   build, stat: str, extra: Any = None,
+                   load=None, store=None) -> Any:
+        """``load``/``store`` are the optional on-disk hooks wired by
+        :meth:`_disk_sync`: on an in-memory miss, ``load()`` is tried
+        first (a non-``None`` return is a disk hit), otherwise ``build()``
+        runs and ``store(value)`` persists it."""
         key = (id(trace), arch.name, arch.gbuf_bytes, arch.lbuf_bytes, extra)
         hit = cache.get(key)
         if hit is not None and hit[0] is trace:
             return hit[1]
-        # one span per derivation family: experiment.lowerings,
-        # experiment.batchings, experiment.cycle_models, ...
-        with span(f"experiment.{stat}"):
-            value = build()
-        self.stats[stat] += 1
+        value = None
+        if load is not None:
+            value = load()
+            self.stats["disk_hits" if value is not None
+                       else "disk_misses"] += 1
+        if value is None:
+            # one span per derivation family: experiment.lowerings,
+            # experiment.batchings, experiment.cycle_models, ...
+            with span(f"experiment.{stat}"):
+                value = build()
+            self.stats[stat] += 1
+            if store is not None:
+                store(value)
+                self.stats["disk_stores"] += 1
         cache[key] = (trace, value)
         return value
 
@@ -319,32 +362,36 @@ class Experiment:
                                "lowerings", extra=row_reuse)
 
     def columnar(self, trace: Trace, arch: PIMArch,
-                 row_reuse: bool = True) -> Any:
+                 row_reuse: bool = True, load=None, store=None) -> Any:
         """Columnar (structure-of-arrays) burst lowering for the fast-path
         engine — cached like :meth:`lowered`, and built directly from the
-        trace (vectorized emission, no intermediate ``BurstOp`` objects)."""
+        trace (vectorized emission, no intermediate ``BurstOp`` objects).
+        ``load``/``store`` are :meth:`_disk_sync`'s on-disk hooks."""
         from repro.sim.burst import lower_trace_columnar
         return self._per_trace(self._columnar, trace, arch,
                                lambda: lower_trace_columnar(
                                    trace, arch, row_reuse=row_reuse),
-                               "columnar_lowerings", extra=row_reuse)
+                               "columnar_lowerings", extra=row_reuse,
+                               load=load, store=store)
 
     def batched(self, trace: Trace, arch: PIMArch, row_reuse: bool,
-                policy: str, engine: str) -> Any:
+                policy: str, engine: str, load=None, store=None) -> Any:
         """Batched burst ordering for a batching policy (``row-aware``),
         cached per (lowering, policy) so a multi-policy sweep sorts each
-        command's bursts once instead of once per ``simulate()`` call."""
+        command's bursts once instead of once per ``simulate()`` call.
+        ``load``/``store`` are :meth:`_disk_sync`'s on-disk hooks."""
         def build():
             if engine == "columnar":
                 from repro.sim.scheduler import batch_same_row_columnar
                 return batch_same_row_columnar(
-                    self.columnar(trace, arch, row_reuse))
+                    self.columnar(trace, arch, row_reuse), policy)
             from repro.sim.scheduler import batch_same_row
             return [batch_same_row(ops)
                     for ops in self.lowered(trace, arch, row_reuse)]
         return self._per_trace(self._batched, trace, arch, build,
                                "batchings",
-                               extra=(row_reuse, policy, engine))
+                               extra=(row_reuse, policy, engine),
+                               load=load, store=store)
 
     def cycle_report(self, trace: Trace, arch: PIMArch) -> Any:
         """Analytic cycle report, policy-independent — computed once per
@@ -384,6 +431,49 @@ class Experiment:
             gbuf_bytes=g0 if spec.gbuf_bytes is None else spec.gbuf_bytes,
             lbuf_bytes=l0 if spec.lbuf_bytes is None else spec.lbuf_bytes)
 
+    def _disk_sync(self, spec: EvalSpec, trace: Trace,
+                   arch: PIMArch) -> None:
+        """Prime the in-memory columnar/batched memos from the on-disk
+        cache (or persist fresh builds into it) for one resolved burst-sim
+        grid point — the one place workload / system / resolved plan
+        signature are all known, so the content-addressed key can be
+        formed.  The backend's later ``ctx.columnar`` / ``ctx.batched``
+        calls then hit the primed memo."""
+        from repro.experiment.cache import LOWERING_VERSION, arch_fingerprint
+        from repro.sim.scheduler import BATCHING_POLICIES, seed_batched
+        dc = self.disk_cache
+        sys_spec = self.systems.get(spec.system)
+        plan_sig: Any = None
+        if sys_spec.tile_grid is not None:
+            plan_sig = self.plan(spec.workload, sys_spec.tile_grid,
+                                 system=spec.system, source=spec.plan,
+                                 gbuf_bytes=spec.gbuf_bytes,
+                                 lbuf_bytes=spec.lbuf_bytes).signature()
+        base_key = dc.key_for(
+            kind="columnar", version=LOWERING_VERSION,
+            workload=spec.workload, system=spec.system,
+            plan=plan_sig, row_reuse=spec.row_reuse,
+            arch=arch_fingerprint(arch))
+        cols = self.columnar(
+            trace, arch, spec.row_reuse,
+            load=lambda: dc.load_columnar(base_key, trace, arch),
+            store=lambda c: dc.store_columnar(base_key, c))
+        if spec.policy not in BATCHING_POLICIES:
+            return
+        order_key = dc.key_for(kind="batch-order", base=base_key,
+                               policy=spec.policy)
+
+        def load() -> Any:
+            order = dc.load_order(order_key, cols)
+            if order is None:
+                return None
+            return seed_batched(cols, spec.policy, order)
+
+        self.batched(trace, arch, spec.row_reuse, spec.policy, "columnar",
+                     load=load,
+                     store=lambda b: dc.store_order(order_key,
+                                                    b.batch_order))
+
     def run(self, spec: EvalSpec | None = None, **kwargs) -> EvalResult:
         """Evaluate one grid point (``EvalSpec`` or its fields as kwargs)."""
         if spec is None:
@@ -400,6 +490,9 @@ class Experiment:
         arch = sys_spec.make_arch(spec.gbuf_bytes, spec.lbuf_bytes)
         trace = self.trace(spec.workload, spec.system, spec.gbuf_bytes,
                            spec.lbuf_bytes, plan=spec.plan)
+        if (self.disk_cache is not None and spec.backend == "burst-sim"
+                and resolve_engine(spec.engine) == "columnar"):
+            self._disk_sync(spec, trace, arch)
         with span("experiment.evaluate", workload=spec.workload,
                   system=spec.system, backend=spec.backend):
             result = backend.evaluate(trace, arch, spec, ctx=self)
@@ -457,7 +550,9 @@ class Experiment:
         report (``<csv>.profile.json``, see :mod:`repro.obs.profile`)
         carrying the sweep's cache-stats delta.  ``verbose=True`` logs one
         structured line per grid point to stderr (spec fields, cache
-        hit/miss, elapsed seconds) as the sweep progresses.
+        hit/miss, elapsed seconds) as the sweep progresses — on the
+        parallel path workers time each point and the parent prints a
+        ``[sweep pool]`` line as each chunk's progress arrives.
         ``verify=True`` (burst-sim points only) runs the
         :mod:`repro.check` schedule verifier after every replay — see
         :class:`~repro.experiment.backends.EvalSpec`.
@@ -513,7 +608,8 @@ class Experiment:
         columns will need — evaluated on the pool rather than serially in
         the parent afterwards), then serve everything from the memo."""
         if workers > 1:
-            self._run_parallel(list(specs) + list(baselines), workers)
+            self._run_parallel(list(specs) + list(baselines), workers,
+                               verbose=verbose)
         if not verbose:
             return [self.run(spec) for spec in specs]
         results = []
@@ -532,32 +628,64 @@ class Experiment:
                   f"elapsed_s={elapsed:.3f}", file=_sys.stderr)
         return results
 
-    def _run_parallel(self, specs: Sequence[EvalSpec], workers: int) -> None:
+    def _shippable(self, specs: Sequence[EvalSpec]) -> dict[str, Any] | None:
+        """The worker-job template for ``specs`` — pinned plan-override
+        records plus a collector prototype — or ``None`` when the points
+        cannot be reconstructed in a spawn worker (genuinely custom
+        registries, a non-folding collector) and the sweep must stay
+        serial.
+
+        Pinned ``plan_overrides`` no longer force the serial path: a
+        registry entry that equals the module-level registration modulo
+        its overrides ships as :func:`repro.plan.artifacts
+        .override_records` and is re-pinned inside each worker."""
+        if self.backends is not BACKENDS:
+            return None
+        collector = self.collector
+        if collector is not None and not (hasattr(collector, "fork")
+                                          and hasattr(collector, "merge")):
+            # a plain collector's replay-order event stream cannot be
+            # folded back from a pool; keep replay observable serially
+            return None
+        for w in {spec.workload for spec in specs}:
+            if w not in WORKLOADS or self.workloads.get(w) \
+                    is not WORKLOADS.get(w):
+                return None
+        overrides: list[dict] = []
+        from repro.plan.artifacts import override_records
+        for s in sorted({spec.system for spec in specs}):
+            if s not in SYSTEMS:
+                return None
+            mine = self.systems.get(s)
+            if mine is not SYSTEMS.get(s):
+                stripped = dataclasses.replace(mine, plan_overrides=())
+                module = dataclasses.replace(SYSTEMS.get(s),
+                                             plan_overrides=())
+                if stripped != module:
+                    return None
+            if mine.plan_overrides:
+                overrides.extend(override_records(self.systems, names=(s,)))
+        return {"overrides": overrides, "collector": collector}
+
+    def _run_parallel(self, specs: Sequence[EvalSpec], workers: int,
+                      verbose: bool = False) -> None:
         """Evaluate not-yet-cached specs on a process pool and merge the
-        results (and the workers' build stats) into this Experiment.
+        results (plus the workers' build stats, folded collector state and
+        per-point progress) into this Experiment.
 
         Workers rebuild their own Experiment over the MODULE-LEVEL
-        registries, so custom in-process registries fall back to the
-        serial path (their entries would not exist in a fresh worker).
-        Points are chunked by fully-resolved grid point — (workload,
-        system, gbuf, lbuf, row-reuse) — the unit that actually shares a
-        mapped trace and burst lowering across its specs (policies /
-        backends); distinct buffer points share nothing, so they
-        parallelize freely even within one system.
+        registries — re-pinning any shipped plan overrides, re-attaching a
+        fork of a :class:`~repro.obs.trace.FoldingCollector`, and reading
+        the on-disk cache from the environment — so only genuinely custom
+        registries (or a non-folding collector) fall back to the serial
+        path.  Points are chunked by fully-resolved grid point —
+        (workload, system, gbuf, lbuf, row-reuse, plan) — the unit that
+        actually shares a mapped trace and burst lowering across its specs
+        (policies / backends); distinct buffer points share nothing, so
+        they parallelize freely even within one system.
         """
-        if (self.workloads is not WORKLOADS or self.systems is not SYSTEMS
-                or self.backends is not BACKENDS):
-            return
-        # an attached trace collector cannot ship to spawn workers (and a
-        # worker-side copy would strand its events); keep replay observable
-        # by falling back to the serial path
-        if self.collector is not None:
-            return
-        # runtime-pinned plan overrides live only in THIS process's
-        # registry objects; a spawned worker re-imports the module
-        # registrations and would silently plan without them
-        if any(self.systems.get(s).plan_overrides
-               for s in {spec.system for spec in specs}):
+        job_template = self._shippable(specs)
+        if job_template is None:
             return
         seen: set[EvalSpec] = set()
         chunks: dict[tuple, list[EvalSpec]] = {}
@@ -572,6 +700,13 @@ class Experiment:
                 []).append(spec)
         if not chunks:
             return
+        collector = job_template.pop("collector")
+        jobs = [dict(job_template, specs=chunk,
+                     collector=None if collector is None
+                     else collector.fork())
+                for chunk in chunks.values()]
+        self.stats["parallel_chunks"] += len(jobs)
+        self.stats["parallel_points"] += len(seen)
         import concurrent.futures
         import multiprocessing
         import os
@@ -587,16 +722,34 @@ class Experiment:
         masked = main_file is not None and not os.path.exists(main_file)
         if masked:
             del main.__file__
+        done, total = 0, len(seen)
         try:
             with concurrent.futures.ProcessPoolExecutor(
                     max_workers=workers,
                     mp_context=multiprocessing.get_context("spawn")) as pool:
-                for results, stats in pool.map(_sweep_worker,
-                                               list(chunks.values())):
-                    for r in results:
+                futures = [pool.submit(_sweep_worker, job) for job in jobs]
+                for fut in concurrent.futures.as_completed(futures):
+                    payload = fut.result()
+                    for r in payload["results"]:
                         self._results.setdefault(r.spec, r)
-                    for key, count in stats.items():
+                    for key, count in payload["stats"].items():
                         self.stats[key] = self.stats.get(key, 0) + count
+                    if collector is not None \
+                            and payload["collector"] is not None:
+                        collector.merge(payload["collector"])
+                    for spec, elapsed in payload["progress"]:
+                        done += 1
+                        if verbose:
+                            print(
+                                f"[sweep pool {done}/{total}] "
+                                f"workload={spec.workload} "
+                                f"system={spec.system} "
+                                f"gbuf={spec.gbuf_bytes} "
+                                f"lbuf={spec.lbuf_bytes} "
+                                f"plan={spec.plan} policy={spec.policy} "
+                                f"backend={spec.backend} "
+                                f"elapsed_s={elapsed:.3f}",
+                                file=_sys.stderr)
         finally:
             if masked:
                 main.__file__ = main_file

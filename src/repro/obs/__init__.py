@@ -2,10 +2,13 @@
 
 Four pieces, all zero-overhead when off:
 
-* :mod:`repro.obs.trace` — the :class:`TraceCollector` protocol and the
-  standard :class:`TimelineCollector`: both simulator engines emit
-  identical per-burst event streams (placement, row verdict, timeline
-  window, command/layer provenance) when a collector is attached;
+* :mod:`repro.obs.trace` — the :class:`TraceCollector` protocol, the
+  standard :class:`TimelineCollector`, and the bounded, process-mergeable
+  :class:`SummaryCollector` (the :class:`FoldingCollector` shape that
+  rides ``Experiment.sweep(workers=N)`` pools): both simulator engines
+  emit identical per-burst event streams (placement, row verdict,
+  timeline window, command/layer provenance) when a collector is
+  attached;
 * :mod:`repro.obs.perfetto` — Chrome/Perfetto ``trace_event`` JSON
   export (one track per bank / bus tap / core), loadable in
   ``ui.perfetto.dev``;
@@ -32,11 +35,13 @@ from repro.obs.perfetto import (trace_event_json, validate_trace_events,
 from repro.obs.profile import (Profiler, Span, active_profiler, profiled,
                                span)
 from repro.obs.trace import (VERDICT_NAMES, BurstEvent, CommandEvent,
+                             FoldingCollector, SummaryCollector,
                              TimelineCollector, TraceCollector)
 
 __all__ = [
     "BurstEvent", "CommandEvent", "CounterNamespace", "CounterRegistry",
-    "Profiler", "Span", "TimelineCollector", "TraceCollector",
+    "FoldingCollector", "Profiler", "Span", "SummaryCollector",
+    "TimelineCollector", "TraceCollector",
     "VERDICT_NAMES", "active_profiler", "base_layer",
     "counters_from_events", "counters_from_sim_result", "format_table",
     "layer_attribution", "profiled", "span", "trace_event_json",

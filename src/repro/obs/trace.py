@@ -79,6 +79,70 @@ class TraceCollector(Protocol):
     def on_command(self, event: CommandEvent) -> None: ...
 
 
+@runtime_checkable
+class FoldingCollector(TraceCollector, Protocol):
+    """A collector that can split across processes and fold back together:
+    ``fork()`` yields a fresh empty instance (picklable — it ships to
+    spawn workers), and ``merge(other)`` folds a fork's state into this
+    one.  ``merge`` must be commutative and associative — the sweep pool
+    merges forks in completion order, not grid order.  Collectors with
+    this shape keep ``Experiment.sweep(workers=N)`` on the parallel path;
+    plain collectors (e.g. :class:`TimelineCollector`, whose replay-order
+    event lists cannot be folded) still force the serial path."""
+
+    def fork(self) -> "FoldingCollector": ...
+
+    def merge(self, other: "FoldingCollector") -> None: ...
+
+
+class SummaryCollector:
+    """Bounded streaming collector with the :class:`FoldingCollector`
+    shape: per-(layer, resource) aggregates — burst counts, busy cycles,
+    bytes, row verdict counts — plus command count and makespan.  State is
+    O(layers × resources) no matter how many bursts stream through, so it
+    is safe to attach to a full multi-workload sweep, and folds across a
+    ``sweep(workers=N)`` pool (each worker replays into a fork; the
+    parent merges)."""
+
+    _ZERO = {"bursts": 0, "cycles": 0, "nbytes": 0,
+             "activate": 0, "hit": 0, "conflict": 0}
+
+    def __init__(self) -> None:
+        self.layers: dict[tuple[str, str], dict[str, int]] = {}
+        self.bursts = 0
+        self.commands = 0
+        self.makespan = 0
+
+    def on_burst(self, event: BurstEvent) -> None:
+        key = (event.layer, event.resource)
+        agg = self.layers.get(key)
+        if agg is None:
+            agg = self.layers[key] = dict(self._ZERO)
+        agg["bursts"] += 1
+        agg["cycles"] += event.duration
+        agg["nbytes"] += event.nbytes
+        if event.verdict:
+            agg[event.verdict] += 1
+        self.bursts += 1
+
+    def on_command(self, event: CommandEvent) -> None:
+        self.commands += 1
+        if event.finish > self.makespan:
+            self.makespan = event.finish
+
+    def fork(self) -> "SummaryCollector":
+        return type(self)()
+
+    def merge(self, other: "SummaryCollector") -> None:
+        for key, agg in other.layers.items():
+            mine = self.layers.setdefault(key, dict(self._ZERO))
+            for field, value in agg.items():
+                mine[field] = mine.get(field, 0) + value
+        self.bursts += other.bursts
+        self.commands += other.commands
+        self.makespan = max(self.makespan, other.makespan)
+
+
 class TimelineCollector:
     """The standard collector: append-only lists of burst and command
     events, in replay order (identical between engines).

@@ -29,9 +29,11 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.plan.dp import SearchResult
 
 SCHEMA = "repro.plan/1"
+OVERRIDE_SCHEMA = "repro.plan-override/1"
 
-__all__ = ["SCHEMA", "plan_record", "write_plan_json", "read_plan_json",
-           "load_plan"]
+__all__ = ["SCHEMA", "OVERRIDE_SCHEMA", "plan_record", "write_plan_json",
+           "read_plan_json", "load_plan", "override_records",
+           "apply_override_records"]
 
 
 def plan_record(search: "SearchResult", *, workload: str, system: str,
@@ -81,3 +83,43 @@ def load_plan(record: dict, graph: Graph, *,
     re-checked, so a stale artifact fails loudly instead of silently
     mapping a wrong partition."""
     return plan_from_dict(graph, record, validate=validate)
+
+
+# ---------------------------------------------------------------------------
+# pinned plan-override shipping (sweep workers, artifacts)
+# ---------------------------------------------------------------------------
+
+def override_records(systems, names=None) -> list[dict]:
+    """Flatten the pinned per-workload plan overrides of a system registry
+    (``SystemSpec.plan_overrides``) into JSON-able records — the wire
+    format ``Experiment.sweep(workers=N)`` ships to spawn workers, whose
+    fresh module-level registries would otherwise silently plan without
+    the parent's pins.  ``names`` restricts to those systems (default:
+    every registered system)."""
+    recs: list[dict] = []
+    for name in (systems.names() if names is None else names):
+        spec = systems.get(name)
+        for workload, sig in spec.plan_overrides:
+            groups, tail_start = sig
+            recs.append({"schema": OVERRIDE_SCHEMA, "system": name,
+                         "workload": workload,
+                         "groups": [list(g) for g in groups],
+                         "tail_start": tail_start})
+    return recs
+
+
+def apply_override_records(systems, records: list[dict]) -> None:
+    """Re-pin :func:`override_records` output onto a system registry
+    (validating each signature against the system's tile grid, as
+    ``SystemSpec.with_plan_override`` does).  Unknown schemas fail loudly
+    — a silent skip would evaluate the wrong plan."""
+    for rec in records:
+        if rec.get("schema") != OVERRIDE_SCHEMA:
+            raise ValueError(f"not a {OVERRIDE_SCHEMA} record "
+                             f"(schema={rec.get('schema')!r})")
+        spec = systems.get(rec["system"])
+        sig = (tuple(tuple(g) for g in rec["groups"]),
+               int(rec["tail_start"]))
+        systems.register(rec["system"],
+                         spec.with_plan_override(rec["workload"], sig),
+                         replace=True)

@@ -292,6 +292,16 @@ class ColumnarBursts:
 
     Equality is identity (``eq=False``) — compare arrays explicitly
     (e.g. via ``np.array_equal``) where needed.
+
+    Replay memos live as non-field attributes set with
+    ``object.__setattr__`` (so ``permuted()`` copies do NOT inherit them):
+    ``_profile_cache`` maps arch timing keys to the order-dependent
+    :class:`repro.sim.engine_vec._BurstProfile`, and ``_batched_cache``
+    (on a BASE lowering) maps policy names to the batched lowering built
+    by :func:`repro.sim.scheduler.batch_same_row_columnar` — whose own
+    ``_profile_cache`` therefore survives repeated row-aware replays.  A
+    batched copy additionally carries ``batch_order``, the permutation
+    that produced it (persisted by the on-disk experiment cache).
     """
 
     offsets: "np.ndarray"      # int64[n_cmds+1]: command segment bounds

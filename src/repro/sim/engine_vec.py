@@ -166,12 +166,17 @@ class _BurstProfile:
     replaying one lowering under several policies (the sweep's hot loop)
     pays for row resolution, durations and busy counters once."""
 
-    grp_sum: np.ndarray        # per-(cmd, timeline) run duration sums
-    grp_res: np.ndarray
-    grp_unit: np.ndarray
     grp_start: np.ndarray      # first burst index of each run
-    g_lo: np.ndarray           # run-index range per command
-    g_hi: np.ndarray
+    dur_csum: np.ndarray       # exclusive per-burst duration cumsum
+    n_timelines: int           # distinct (resource, unit) pairs in play
+    run_tl: list[int]          # dense timeline id per run (collector path)
+    run_sum: list[int]         # per-run duration sums (collector path)
+    run_lo: list[int]          # run-index range per command
+    run_hi: list[int]
+    seg_tl: list[int]          # dense timeline id per COLLAPSED segment
+    seg_sum: list[int]         # per-(cmd, timeline) collapsed duration sums
+    seg_lo: list[int]          # segment-index range per command
+    seg_hi: list[int]
     per_cmd_dur: np.ndarray    # total burst cycles per command
     dur: np.ndarray            # per-burst cycles (transfer+switch+row)
     verdict: np.ndarray        # per-burst VERDICT_NAMES codes (int8)
@@ -219,6 +224,30 @@ def _burst_profile(cols: ColumnarBursts, arch: PIMArch) -> _BurstProfile:
     starts = np.flatnonzero(new_grp)
     grp_sum = np.add.reduceat(dur, starts) if starts.size \
         else np.empty(0, dtype=np.int64)
+    g_lo = np.searchsorted(starts, cols.offsets[:-1], side="left")
+    g_hi = np.searchsorted(starts, cols.offsets[1:], side="left")
+
+    # Dense (resource, unit) timeline ids plus COLLAPSED per-(cmd, timeline)
+    # segment sums — the command loop's segmented group reduction.  Within
+    # one command, consecutive runs of a single timeline chain exactly
+    # (run k+1 anchors at max(t0, finish_k) = finish_k, since finish_k ≥
+    # t0), so summing them into one segment leaves every timeline's final
+    # finish — and the command end, their max — unchanged.  The replay
+    # recursion then walks plain Python ints over dense ids (a flat list
+    # ``free`` indexed by timeline) instead of hashing (res, unit) tuples.
+    grp_res = cols.rescode[starts].astype(np.int64)
+    grp_unit = cols.unit[starts].astype(np.int64)
+    uniq_tl, run_tl = np.unique(grp_res * (np.int64(1) << 32) + grp_unit,
+                                return_inverse=True)
+    n_tl = int(uniq_tl.size)
+    n_cmds = len(cols.offsets) - 1
+    cmd_of_run = np.repeat(np.arange(n_cmds, dtype=np.int64), g_hi - g_lo)
+    seg_key = cmd_of_run * max(n_tl, 1) + run_tl
+    uniq_seg, seg_inv = np.unique(seg_key, return_inverse=True)
+    seg_sum = np.zeros(uniq_seg.size, dtype=np.int64)
+    np.add.at(seg_sum, seg_inv, grp_sum)
+    seg_cmd = uniq_seg // max(n_tl, 1)
+    cmd_ids = np.arange(n_cmds, dtype=np.int64)
 
     # busy counters: masked sums over the duration vector
     bus_m = cols.rescode == _BUS
@@ -230,12 +259,17 @@ def _burst_profile(cols: ColumnarBursts, arch: PIMArch) -> _BurstProfile:
     csum = np.concatenate([np.zeros(1, dtype=np.int64), np.cumsum(dur)])
 
     profile = _BurstProfile(
-        grp_sum=grp_sum,
-        grp_res=cols.rescode[starts],
-        grp_unit=cols.unit[starts],
         grp_start=starts,
-        g_lo=np.searchsorted(starts, cols.offsets[:-1], side="left"),
-        g_hi=np.searchsorted(starts, cols.offsets[1:], side="left"),
+        dur_csum=csum,
+        n_timelines=n_tl,
+        run_tl=run_tl.tolist(),
+        run_sum=grp_sum.tolist(),
+        run_lo=g_lo.tolist(),
+        run_hi=g_hi.tolist(),
+        seg_tl=(uniq_seg - seg_cmd * max(n_tl, 1)).tolist(),
+        seg_sum=seg_sum.tolist(),
+        seg_lo=np.searchsorted(seg_cmd, cmd_ids, side="left").tolist(),
+        seg_hi=np.searchsorted(seg_cmd, cmd_ids, side="right").tolist(),
         per_cmd_dur=csum[cols.offsets[1:]] - csum[cols.offsets[:-1]],
         dur=dur,
         verdict=verdict,
@@ -271,8 +305,7 @@ def _emit_events(collector: "TraceCollector", trace: Trace,
         starts = p.grp_start
         gidx = np.repeat(np.arange(starts.size),
                          np.diff(np.append(starts, n)))
-        csum = np.concatenate([np.zeros(1, dtype=np.int64),
-                               np.cumsum(p.dur)])
+        csum = p.dur_csum
         burst_start = anchors[gidx] + csum[:-1] - csum[starts[gidx]]
         layers = [c.layer for c in trace]
         kinds = [c.kind.value for c in trace]
@@ -318,17 +351,25 @@ def simulate_columnar(trace: Trace, arch: PIMArch, policy: str = "serial",
     p = _burst_profile(cols, arch)
 
     # the only remaining sequential state: ready-time recursion over the
-    # dependency DAG and the per-timeline free-time carry-over
-    free: dict[tuple[int, int], int] = {}
+    # dependency DAG and the per-timeline free-time carry-over.  Timelines
+    # are dense profile ids into a flat list, and without a collector the
+    # loop walks the COLLAPSED per-(cmd, timeline) segments — everything
+    # else was reduced away at profile-build time.  With a collector the
+    # per-run variant records each run's anchor for event reconstruction.
+    free = [0] * max(p.n_timelines, 1)
     cmd_start = [0] * len(trace)
     cmd_finish = [0] * len(trace)
     issue = arch.cmd_issue_cycles
-    grp_sum, grp_res, grp_unit = p.grp_sum, p.grp_res, p.grp_unit
-    anchors = np.zeros(grp_sum.size, dtype=np.int64) \
-        if collector is not None else None
+    if collector is None:
+        lo_of, hi_of, tl_of, sum_of = p.seg_lo, p.seg_hi, p.seg_tl, p.seg_sum
+        anchors = None
+    else:
+        lo_of, hi_of, tl_of, sum_of = p.run_lo, p.run_hi, p.run_tl, p.run_sum
+        anchors = np.zeros(len(tl_of), dtype=np.int64)
     for i, c in enumerate(trace):
         ready = max((cmd_finish[j] for j in deps[i]), default=0)
-        if p.g_lo[i] == p.g_hi[i]:
+        lo, hi = lo_of[i], hi_of[i]
+        if lo == hi:
             # zero-byte transfer: not billed (mirrors the analytic model);
             # an op-less compute command still pays controller issue.
             cost = 0 if c.kind in _TRANSFER else issue
@@ -338,21 +379,26 @@ def simulate_columnar(trace: Trace, arch: PIMArch, policy: str = "serial",
         t0 = ready + issue
         end = t0
         if anchors is None:
-            for g in range(p.g_lo[i], p.g_hi[i]):
-                key = (int(grp_res[g]), int(grp_unit[g]))
-                finish = max(t0, free.get(key, 0)) + int(grp_sum[g])
-                free[key] = finish
-                if finish > end:
-                    end = finish
+            for g in range(lo, hi):
+                k = tl_of[g]
+                f = free[k]
+                if f < t0:
+                    f = t0
+                f += sum_of[g]
+                free[k] = f
+                if f > end:
+                    end = f
         else:
-            for g in range(p.g_lo[i], p.g_hi[i]):
-                key = (int(grp_res[g]), int(grp_unit[g]))
-                anchor = max(t0, free.get(key, 0))
-                anchors[g] = anchor
-                finish = anchor + int(grp_sum[g])
-                free[key] = finish
-                if finish > end:
-                    end = finish
+            for g in range(lo, hi):
+                k = tl_of[g]
+                a = free[k]
+                if a < t0:
+                    a = t0
+                anchors[g] = a
+                f = a + sum_of[g]
+                free[k] = f
+                if f > end:
+                    end = f
         cmd_start[i] = t0
         cmd_finish[i] = end
 

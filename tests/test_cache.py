@@ -1,0 +1,407 @@
+"""The raw-speed layer of ISSUE 8: policy-keyed batched/profile caches on
+``ColumnarBursts``, the content-addressed on-disk experiment cache, pinned
+plan-override shipping to ``sweep(workers=N)`` spawn pools, and the
+folding-collector parallel path.
+
+The contract everywhere is BIT-IDENTITY: a replay served from any cache
+level (instance memo, in-memory Experiment memo, on-disk entry, spawn
+worker) equals a fresh replay equals the reference engine — makespan,
+EventCounts, per-bank breakdowns, event streams.
+"""
+
+import itertools
+import json
+import os
+import tempfile
+from pathlib import Path
+
+import pytest
+
+np = pytest.importorskip("numpy")
+
+from repro.pim.ppa import (HEADLINE_CONFIGS,  # noqa: E402
+                           SYSTEMS as PPA_SYSTEMS, build_workload, trace_for)
+from repro.sim.burst import lower_trace_columnar  # noqa: E402
+from repro.sim.engine import simulate  # noqa: E402
+from repro.sim.engine_vec import simulate_columnar  # noqa: E402
+from repro.sim.scheduler import (batch_same_row_columnar,  # noqa: E402
+                                 seed_batched)
+
+KB = 1024
+_FIELDS = ("offsets", "cmd_index", "rescode", "unit", "bank", "row",
+           "nbytes", "switch")
+
+
+def _system_trace(system="Fused16", workload="ResNet18_First8Layers"):
+    gbuf, lbuf = HEADLINE_CONFIGS[system]
+    arch = PPA_SYSTEMS[system](gbuf_bytes=gbuf, lbuf_bytes=lbuf)
+    return trace_for(system, build_workload(workload), arch), arch
+
+
+def _assert_cols_equal(a, b, ctx=""):
+    for f in _FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), (ctx, f)
+
+
+# ---------------------------------------------------------------------------
+# policy-keyed batched cache on the base ColumnarBursts
+# ---------------------------------------------------------------------------
+
+def test_batch_same_row_columnar_caches_on_base_lowering():
+    trace, arch = _system_trace()
+    cols = lower_trace_columnar(trace, arch)
+    b1 = batch_same_row_columnar(cols)
+    b2 = batch_same_row_columnar(cols)
+    assert b1 is b2, "repeat batching must return the cached object"
+    assert hasattr(b1, "batch_order")
+    # the cached ordering equals a fresh sort of a fresh lowering
+    fresh = batch_same_row_columnar(lower_trace_columnar(trace, arch))
+    _assert_cols_equal(b1, fresh, "cached vs fresh batching")
+
+
+def test_batched_profile_survives_repeated_row_aware_replays():
+    trace, arch = _system_trace()
+    cols = lower_trace_columnar(trace, arch)
+    r1 = simulate_columnar(trace, arch, "row-aware", cols=cols)
+    batched = batch_same_row_columnar(cols)
+    assert getattr(batched, "_profile_cache", None), \
+        "first replay must memoize the batched-order burst profile"
+    profile = next(iter(batched._profile_cache.values()))
+    r2 = simulate_columnar(trace, arch, "row-aware", cols=cols)
+    assert next(iter(batched._profile_cache.values())) is profile, \
+        "second replay must reuse the memoized profile"
+    assert r1 == r2
+    assert r1 == simulate(trace, arch, "row-aware")
+
+
+def test_seed_batched_matches_fresh_batching():
+    trace, arch = _system_trace("Fused4")
+    cols = lower_trace_columnar(trace, arch)
+    order = batch_same_row_columnar(cols).batch_order
+    fresh_cols = lower_trace_columnar(trace, arch)
+    seeded = seed_batched(fresh_cols, "row-aware", order)
+    assert batch_same_row_columnar(fresh_cols) is seeded
+    _assert_cols_equal(seeded, batch_same_row_columnar(cols))
+
+
+def test_collector_replay_unaffected_by_warm_caches():
+    """Event streams (the collector path walks per-run state, not the
+    collapsed segments) stay identical to the reference engine when every
+    cache is warm."""
+    from repro.obs.trace import TimelineCollector
+
+    trace, arch = _system_trace("Fused4")
+    cols = lower_trace_columnar(trace, arch)
+    simulate_columnar(trace, arch, "row-aware", cols=cols)   # warm caches
+    vec_col, ref_col = TimelineCollector(), TimelineCollector()
+    vec = simulate_columnar(trace, arch, "row-aware", cols=cols,
+                            collector=vec_col)
+    ref = simulate(trace, arch, "row-aware", collector=ref_col)
+    assert vec == ref
+    assert vec_col.bursts == ref_col.bursts
+    assert vec_col.commands == ref_col.commands
+
+
+# ---------------------------------------------------------------------------
+# DiskCache unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_disk_cache_columnar_round_trip(tmp_path):
+    from repro.experiment.cache import DiskCache
+
+    trace, arch = _system_trace()
+    cols = lower_trace_columnar(trace, arch)
+    dc = DiskCache(tmp_path)
+    key = dc.key_for(kind="columnar", probe=1)
+    assert dc.load_columnar(key, trace, arch) is None
+    assert dc.stats["misses"] == 1
+    dc.store_columnar(key, cols)
+    assert dc.stats["stores"] == 1
+    loaded = dc.load_columnar(key, trace, arch)
+    assert loaded is not None and dc.stats["hits"] == 1
+    _assert_cols_equal(cols, loaded, "disk round trip")
+    # the loaded lowering replays bit-identically under every policy
+    for policy in ("serial", "overlap", "row-aware"):
+        assert simulate_columnar(trace, arch, policy, cols=loaded) \
+            == simulate_columnar(trace, arch, policy, cols=cols)
+
+
+def test_disk_cache_corrupt_entry_degrades_to_miss(tmp_path):
+    from repro.experiment.cache import DiskCache
+
+    dc = DiskCache(tmp_path)
+    key = dc.key_for(kind="columnar", probe="corrupt")
+    path = dc.path_for(key)
+    path.parent.mkdir(parents=True)
+    path.write_bytes(b"not an npz")
+    trace, arch = _system_trace()
+    assert dc.load_columnar(key, trace, arch) is None
+    assert dc.stats["errors"] == 1
+
+
+def test_disk_cache_rejects_invalid_orders(tmp_path):
+    from repro.experiment.cache import DiskCache
+
+    trace, arch = _system_trace("Fused4")
+    cols = lower_trace_columnar(trace, arch)
+    n = cols.n_bursts
+    dc = DiskCache(tmp_path)
+    bad = {
+        "short": np.arange(n - 1),
+        "dupes": np.zeros(n, dtype=np.int64),
+        # a permutation, but one that swaps bursts ACROSS command segments
+        "cross": np.concatenate([np.arange(n)[::-1]]),
+    }
+    for name, order in bad.items():
+        key = dc.key_for(kind="batch-order", probe=name)
+        dc.store_order(key, order)
+        assert dc.load_order(key, cols) is None, name
+    good = batch_same_row_columnar(cols).batch_order
+    key = dc.key_for(kind="batch-order", probe="good")
+    dc.store_order(key, good)
+    assert np.array_equal(dc.load_order(key, cols), good)
+
+
+def test_disk_cache_prune_evicts_lru(tmp_path):
+    from repro.experiment.cache import DiskCache
+
+    dc = DiskCache(tmp_path)
+    for i in range(4):
+        key = dc.key_for(probe=i)
+        dc.store_order(key, np.arange(1000))
+        # strictly increasing mtimes so LRU order is deterministic
+        os.utime(dc.path_for(key), (i, i))
+    per_entry = dc.total_bytes() // 4
+    evicted = dc.prune(2 * per_entry + per_entry // 2)
+    assert evicted == 2
+    assert len(dc.entries()) == 2
+    # the two NEWEST entries survive
+    survivors = {p.name for p in dc.entries()}
+    assert dc.path_for(dc.key_for(probe=3)).name in survivors
+    assert dc.path_for(dc.key_for(probe=2)).name in survivors
+
+
+def test_disk_cache_from_env(tmp_path, monkeypatch):
+    from repro.experiment.cache import DiskCache
+
+    monkeypatch.delenv("REPRO_CACHE_DIR", raising=False)
+    monkeypatch.delenv("REPRO_CACHE", raising=False)
+    assert DiskCache.from_env() is None                  # off by default
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    dc = DiskCache.from_env()
+    assert dc is not None and dc.root == Path(tmp_path)
+    monkeypatch.setenv("REPRO_CACHE", "off")             # force-disable wins
+    assert DiskCache.from_env() is None
+    monkeypatch.setenv("REPRO_CACHE", "1")
+    monkeypatch.setenv("REPRO_CACHE_MAX_BYTES", "12345")
+    assert DiskCache.from_env().max_bytes == 12345
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: cached/disk replays are bit-identical across the grid
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core.commands import CMD, Command
+
+    def _prefetch(nbytes):
+        return Command(CMD.PIM_BK2GBUF, "w", bytes_total=nbytes,
+                       prefetchable=True, note="weight fill")
+
+    def _gather(nbytes):
+        return Command(CMD.PIM_BK2GBUF, "act", bytes_total=nbytes)
+
+    def _writeback(nbytes):
+        return Command(CMD.PIM_GBUF2BK, "out", bytes_total=nbytes)
+
+    def _lbuf(nbytes):
+        return Command(CMD.PIM_BK2LBUF, "tile", bytes_total=nbytes,
+                       concurrent_cores=4)
+
+    def _cmp(nbytes):
+        return Command(CMD.PIMCORE_CMP, "conv", flag="CONV_BN", macs=64,
+                       bank_stream_bytes=nbytes, concurrent_cores=4,
+                       restream_bytes=nbytes // 2)
+
+    def _gbcore(_):
+        return Command(CMD.GBCORE_CMP, "pool", flag="POOL", alu_ops=32)
+
+    _commands = st.builds(lambda mk, nbytes: mk(nbytes),
+                          st.sampled_from((_prefetch, _gather, _writeback,
+                                           _lbuf, _cmp, _gbcore)),
+                          st.sampled_from([0, 64, 2 * KB, 3 * KB, 9 * KB]))
+    _traces = st.lists(_commands, min_size=1, max_size=24)
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is a dev dependency
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+    _HYPO_TMP = Path(tempfile.mkdtemp(prefix="repro-cache-test-"))
+    # unique per-example cache keys — id(trace) can be reused after GC
+    _EXAMPLE_IDS = itertools.count()
+
+    @settings(max_examples=25, deadline=None)
+    @given(trace=_traces, row_reuse=st.booleans())
+    def test_cached_and_disk_replays_bit_identical(trace, row_reuse):
+        """Across the policy × row_reuse grid on random traces: the second
+        (cache-served) replay and a replay of the disk round-tripped
+        lowering + batch order both equal the fresh replay and the
+        reference engine — makespan, EventCounts, per-bank breakdowns."""
+        from repro.experiment.cache import DiskCache
+
+        arch = PPA_SYSTEMS["Fused16"](gbuf_bytes=2 * KB, lbuf_bytes=256)
+        cols = lower_trace_columnar(trace, arch, row_reuse=row_reuse)
+        dc = DiskCache(_HYPO_TMP)
+        example = next(_EXAMPLE_IDS)
+        ckey = dc.key_for(kind="columnar", example=example,
+                          row_reuse=row_reuse)
+        dc.store_columnar(ckey, cols)
+        disk_cols = dc.load_columnar(ckey, trace, arch)
+        assert disk_cols is not None
+        for policy in ("serial", "overlap", "row-aware"):
+            ref = simulate(trace, arch, policy, row_reuse=row_reuse)
+            fresh = simulate_columnar(trace, arch, policy, cols=cols)
+            warm = simulate_columnar(trace, arch, policy, cols=cols)
+            from_disk = simulate_columnar(trace, arch, policy,
+                                          cols=disk_cols)
+            assert fresh == ref
+            assert warm == ref, "cache-served replay diverged"
+            assert from_disk == ref, "disk round-trip diverged"
+        # the batch order round-trips too
+        order = batch_same_row_columnar(cols).batch_order
+        okey = dc.key_for(kind="batch-order", example=example,
+                          row_reuse=row_reuse)
+        dc.store_order(okey, order)
+        loaded = dc.load_order(okey, disk_cols)
+        assert loaded is not None
+        seeded = seed_batched(disk_cols, "row-aware", loaded)
+        assert simulate_columnar(trace, arch, "row-aware", cols=seeded,
+                                 prebatched=True) \
+            == simulate(trace, arch, "row-aware", row_reuse=row_reuse)
+
+
+# ---------------------------------------------------------------------------
+# Experiment-level disk cache + distributed sweep
+# ---------------------------------------------------------------------------
+
+def test_experiment_disk_cache_round_trip(tmp_path):
+    from repro.experiment import DiskCache, Experiment
+
+    dc = DiskCache(tmp_path)
+    e1 = Experiment(disk_cache=dc)
+    r1 = e1.run(workload="ResNet18_First8Layers", system="Fused16",
+                backend="burst-sim", policy="row-aware")
+    assert e1.stats["disk_misses"] == 2      # lowering + batch order
+    assert e1.stats["disk_stores"] == 2
+    # a FRESH experiment (cold memos) over the same cache hits both
+    e2 = Experiment(disk_cache=DiskCache(tmp_path))
+    r2 = e2.run(workload="ResNet18_First8Layers", system="Fused16",
+                backend="burst-sim", policy="row-aware")
+    assert e2.stats["disk_hits"] == 2
+    assert e2.stats["disk_stores"] == 0
+    assert (r1.cycles, r1.energy_nj, r1.events) \
+        == (r2.cycles, r2.energy_nj, r2.events)
+
+
+def test_experiment_disk_cache_off_by_default(tmp_path, monkeypatch):
+    from repro.experiment import Experiment
+
+    monkeypatch.delenv("REPRO_CACHE_DIR", raising=False)
+    monkeypatch.delenv("REPRO_CACHE", raising=False)
+    exp = Experiment()
+    assert exp.disk_cache is None
+    exp.run(workload="ResNet18_First8Layers", system="Fused4",
+            backend="burst-sim", policy="row-aware")
+    assert exp.stats["disk_misses"] == 0 and exp.stats["disk_stores"] == 0
+
+
+def test_parallel_sweep_disk_cache_and_pinned_plan_parity(tmp_path,
+                                                          monkeypatch):
+    """The spawn-pool path of ISSUE 8 end to end: pinned plan overrides
+    ship to workers (no serial fallback), worker results match a serial
+    sweep bit-for-bit, and a second pool run on a fresh Experiment serves
+    lowerings from the shared on-disk cache."""
+    from repro.experiment import SYSTEMS, Experiment
+
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    workload, system = "ResNet18_First8Layers", "Fused16"
+    original = SYSTEMS.get(system)
+    try:
+        par = Experiment()
+        par.pin_plan(workload, system)
+        assert SYSTEMS.get(system).plan_overrides
+        results = par.sweep(workloads=workload,
+                            systems=(system, "Fused4"),
+                            backend="burst-sim", policy="row-aware",
+                            workers=2)
+        assert par.stats["parallel_chunks"] > 0, \
+            "pinned overrides must not force the serial path"
+        assert par.stats["parallel_points"] == len(results)
+
+        ser = Experiment()      # same (already pinned) global registry
+        expected = ser.sweep(workloads=workload, systems=(system, "Fused4"),
+                             backend="burst-sim", policy="row-aware",
+                             workers=1)
+        assert ser.stats["parallel_chunks"] == 0
+        for a, b in zip(results, expected):
+            assert a.spec == b.spec
+            assert (a.cycles, a.energy_nj, a.events) \
+                == (b.cycles, b.energy_nj, b.events)
+
+        # warm pool on a fresh parent: workers hit the disk cache
+        warm = Experiment()
+        warm.sweep(workloads=workload, systems=(system, "Fused4"),
+                   backend="burst-sim", policy="row-aware", workers=2)
+        assert warm.stats["disk_hits"] > 0, \
+            "warm spawn workers must serve lowerings from disk"
+    finally:
+        SYSTEMS.register(system, original, replace=True)
+
+
+def test_parallel_sweep_folding_collector_and_verbose(capsys):
+    """A FoldingCollector rides the pool (forked per chunk, merged back,
+    totals equal a serial collection) and verbose=True emits per-point
+    pool progress lines."""
+    from repro.experiment import Experiment
+    from repro.obs import SummaryCollector
+
+    par = Experiment(disk_cache=None)
+    par.collector = SummaryCollector()
+    par.sweep(workloads="ResNet18_First8Layers",
+              systems=("Fused16", "Fused4"), backend="burst-sim",
+              policy="overlap", workers=2, verbose=True)
+    assert par.stats["parallel_chunks"] > 0, \
+        "a folding collector must not force the serial path"
+    assert par.collector.bursts > 0
+    err = capsys.readouterr().err
+    assert "[sweep pool" in err, "parallel path must emit progress lines"
+
+    ser = Experiment(disk_cache=None)
+    ser.collector = SummaryCollector()
+    ser.sweep(workloads="ResNet18_First8Layers",
+              systems=("Fused16", "Fused4"), backend="burst-sim",
+              policy="overlap", workers=1)
+    assert par.collector.layers == ser.collector.layers
+    assert par.collector.bursts == ser.collector.bursts
+    assert par.collector.makespan == ser.collector.makespan
+
+
+def test_override_records_round_trip():
+    from repro.experiment import SYSTEMS, Experiment
+    from repro.plan.artifacts import (apply_override_records,
+                                      override_records)
+
+    exp = Experiment(systems=SYSTEMS.clone())
+    exp.pin_plan("ResNet18_First8Layers", "Fused4")
+    recs = override_records(exp.systems, names=("Fused4",))
+    assert len(recs) == 1
+    assert json.loads(json.dumps(recs)) == recs          # JSON-able
+    clone = SYSTEMS.clone()
+    apply_override_records(clone, recs)
+    assert clone.get("Fused4").plan_overrides \
+        == exp.systems.get("Fused4").plan_overrides
+    with pytest.raises(ValueError):
+        apply_override_records(clone, [{"schema": "bogus"}])
