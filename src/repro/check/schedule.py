@@ -54,6 +54,7 @@ from repro.pim.arch import PIMArch
 from repro.sim.scheduler import command_deps
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.faults.spec import FaultSpec
     from repro.obs.trace import BurstEvent, CommandEvent, TimelineCollector
     from repro.sim.engine import SimResult
 
@@ -201,12 +202,18 @@ def _check_burst_chaining(bursts: Sequence["BurstEvent"],
 
 
 def _check_durations(bursts: Sequence["BurstEvent"], arch: PIMArch,
-                     out: _Capped) -> None:
+                     out: _Capped,
+                     faults: "FaultSpec | None" = None) -> None:
     """Re-derive each duration from the burst's own fields: transfer at
     the resource bandwidth, the bus re-target charge on the stream-first
-    visit to each (command, bank), and the row charge the verdict
-    implies."""
+    visit to each (command, bank), the row charge the verdict implies,
+    and — under a transient ``faults`` model — the deterministic retry
+    charge keyed by the burst's stream position."""
     seen_bus: set[tuple[int, int]] = set()
+    retry_at = None
+    if faults is not None and faults.has_transient:
+        from repro.faults.inject import transient_planner
+        retry_at = transient_planner(faults)
     for i, b in enumerate(bursts):
         bw = _bandwidth(b.resource, arch)
         transfer = math.ceil(b.nbytes / bw) if b.nbytes and bw else 0
@@ -221,14 +228,16 @@ def _check_durations(bursts: Sequence["BurstEvent"], arch: PIMArch,
             row = arch.row_overhead_cycles
         elif b.verdict == "conflict":
             row = arch.row_overhead_cycles + arch.row_precharge_cycles
-        expect = transfer + switch + row
+        retry = retry_at(b.resource, i, b.nbytes) if retry_at else 0
+        expect = transfer + switch + row + retry
         if b.duration != expect:
             out.add("burst-duration",
                     f"burst[{i}] (cmd {b.cmd_index}, {b.resource} "
                     f"{b.unit})",
                     f"duration {b.duration} != {expect} (= transfer "
-                    f"{transfer} + switch {switch} + row {row} for "
-                    f"{b.nbytes} B, verdict {b.verdict or 'none'})")
+                    f"{transfer} + switch {switch} + row {row} + retry "
+                    f"{retry} for {b.nbytes} B, verdict "
+                    f"{b.verdict or 'none'})")
 
 
 def _check_cmd_windows(bursts: Sequence["BurstEvent"],
@@ -380,7 +389,8 @@ def _events(collector: "TimelineCollector | None",
 
 def verify_stream(bursts: Sequence["BurstEvent"],
                   commands: Sequence["CommandEvent"] = (),
-                  arch: PIMArch | None = None) -> CheckReport:
+                  arch: PIMArch | None = None,
+                  faults: "FaultSpec | None" = None) -> CheckReport:
     """The stream-only invariants — what a saved artifact can prove
     without its SimResult: segment ordering, per-timeline exclusivity,
     open-row legality, earliest-slot chaining, and (given the arch)
@@ -396,7 +406,7 @@ def verify_stream(bursts: Sequence["BurstEvent"],
         t0 = {c.index: c.start for c in commands}
         _check_burst_chaining(bursts, t0, out)
     if arch is not None:
-        _check_durations(bursts, arch, out)
+        _check_durations(bursts, arch, out, faults)
     return report
 
 
@@ -404,12 +414,17 @@ def verify_schedule(trace: Trace, arch: PIMArch, result: "SimResult",
                     collector: "TimelineCollector | None" = None,
                     bursts: Iterable["BurstEvent"] | None = None,
                     commands: Iterable["CommandEvent"] | None = None,
-                    policy: str | None = None) -> CheckReport:
+                    policy: str | None = None,
+                    faults: "FaultSpec | None" = None) -> CheckReport:
     """Verify one replay end to end: the event stream's internal legality
     plus its agreement with the :class:`~repro.sim.engine.SimResult` and
     the issue policy's hazard edges.  ``policy`` defaults to the one the
     result records.  Events come from ``collector`` or the explicit
-    ``bursts`` / ``commands`` streams."""
+    ``bursts`` / ``commands`` streams.  When the replay ran under a
+    transient ``faults`` model, pass the same spec so the duration
+    re-derivation charges the same deterministic retries (a degraded
+    STRUCTURAL trace needs nothing here — remapping happens before
+    lowering, so the stream is self-consistent)."""
     ev_bursts, ev_commands = _events(collector, bursts, commands)
     policy = result.policy if policy is None else policy
     report = CheckReport(checker="schedule-verify",
@@ -428,7 +443,7 @@ def verify_schedule(trace: Trace, arch: PIMArch, result: "SimResult",
     _check_row_state(ev_bursts, out)
     t0 = {c.index: c.start for c in ev_commands}
     _check_burst_chaining(ev_bursts, t0, out)
-    _check_durations(ev_bursts, arch, out)
+    _check_durations(ev_bursts, arch, out, faults)
     _check_cmd_windows(ev_bursts, ev_commands, trace, arch, out)
     _check_deps(ev_commands, trace, policy, out)
     _check_result(result, ev_bursts, ev_commands, trace, out)
@@ -437,26 +452,34 @@ def verify_schedule(trace: Trace, arch: PIMArch, result: "SimResult",
 
 def replay_and_verify(trace: Trace, arch: PIMArch, policy: str = "serial",
                       row_reuse: bool = True, engine: str = "reference",
-                      lint: bool = True) -> CheckReport:
+                      lint: bool = True,
+                      faults: "FaultSpec | None" = None) -> CheckReport:
     """Replay ``trace`` under an engine with a fresh collector, then run
     the full verification (plus the trace linter unless ``lint=False``).
-    One merged report — the CI grid gate calls this per point."""
+    One merged report — the CI grid gate calls this per point.  With a
+    ``faults`` spec the trace is first remapped onto the surviving
+    hardware (structural faults) and the engines/verifier charge the same
+    deterministic transient retries."""
     from repro.obs.trace import TimelineCollector
 
+    if faults is not None and faults.has_structural:
+        from repro.faults.remap import remap_trace
+        trace = remap_trace(trace, arch, faults)
     collector = TimelineCollector()
     if engine == "columnar":
         from repro.sim.engine_vec import simulate_columnar
         result = simulate_columnar(trace, arch, policy,
                                    row_reuse=row_reuse,
-                                   collector=collector)
+                                   collector=collector, faults=faults)
     elif engine == "reference":
         from repro.sim.engine import simulate
         result = simulate(trace, arch, policy, row_reuse=row_reuse,
-                          collector=collector)
+                          collector=collector, faults=faults)
     else:
         raise ValueError(f"unknown engine {engine!r}; "
                          "choose from ['columnar', 'reference']")
-    report = verify_schedule(trace, arch, result, collector=collector)
+    report = verify_schedule(trace, arch, result, collector=collector,
+                             faults=faults)
     report.context.update({"engine": engine, "row_reuse": row_reuse})
     if lint:
         report.extend(lint_trace(trace, arch))

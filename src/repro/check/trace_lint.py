@@ -42,7 +42,7 @@ import math
 from repro.check.report import CheckReport
 from repro.core.commands import CMD, Command, Trace
 from repro.pim.arch import PIMArch
-from repro.pim.events import core_banks, even_split
+from repro.pim.events import active_cores, core_banks, even_split
 from repro.pim.timing import banks_touched
 
 _SEQ = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)
@@ -79,12 +79,14 @@ def _max_rows_per_bank(c: Command, arch: PIMArch) -> int:
     if c.kind in _PAR:
         if not c.bytes_total:
             return 0
-        cores = max(c.concurrent_cores, 1)
+        cores = active_cores(c)
         worst = 0
-        core_restream = even_split(c.restream_bytes, cores)
-        for core, core_bytes in enumerate(even_split(c.bytes_total, cores)):
+        core_restream = even_split(c.restream_bytes, len(cores))
+        shares = even_split(c.bytes_total, len(cores))
+        for pos, core in enumerate(cores):
+            core_bytes = shares[pos]
             banks = core_banks(core, arch, c)
-            lane_restream = even_split(core_restream[core], len(banks))
+            lane_restream = even_split(core_restream[pos], len(banks))
             for lane, bank_bytes in enumerate(
                     even_split(core_bytes, len(banks))):
                 if bank_bytes:
@@ -96,7 +98,10 @@ def _max_rows_per_bank(c: Command, arch: PIMArch) -> int:
             return 0
         fr = _footprint_rows(c.bank_stream_bytes - c.restream_bytes,
                              arch.row_bytes)
-        banks = len(core_banks(0, arch, c))
+        # every active core streams the same chunk pattern; the worst bank
+        # belongs to the core with the fewest placed banks
+        banks = min(len(core_banks(core, arch, c))
+                    for core in active_cores(c))
         return math.ceil(fr / max(banks, 1))
     return 0
 
@@ -125,6 +130,11 @@ def lint_command(idx: int, c: Command, arch: PIMArch,
         report.add("core-bounds", where,
                    f"concurrent_cores={c.concurrent_cores} outside "
                    f"[1, {arch.num_pimcores}] for {arch.name}")
+    bad_cores = [k for k in c.cores if k >= arch.num_pimcores]
+    if bad_cores:
+        report.add("core-bounds", where,
+                   f"core placement names core(s) {bad_cores} outside "
+                   f"[0, {arch.num_pimcores})")
 
     if (c.kind is CMD.PIMCORE_CMP and c.flag in _POOL_ADD_FLAGS
             and not arch.pimcore_has_pool_add):

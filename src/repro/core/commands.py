@@ -52,6 +52,12 @@ class Command:
     # the order the sequential controller walks them.  Empty ⇒ legacy trace;
     # consumers fall back to the byte-count heuristic (timing.py).
     banks: tuple[int, ...] = ()
+    # explicit PIMcore placement for parallel/compute commands: the physical
+    # core ids the payload runs on, in lane order.  Empty ⇒ legacy trace;
+    # consumers use cores [0, concurrent_cores).  Set by the degraded-mode
+    # remapper (repro.faults.remap) when dead cores shift work onto
+    # survivors with non-contiguous ids.
+    cores: tuple[int, ...] = ()
     # True for bank→GBUF reads of STATIC data (weights): no RAW hazard
     # against earlier compute, so an overlap-aware scheduler may hoist them
     # behind in-flight PIMcore compute (sim/scheduler.py `overlap` policy).
@@ -85,6 +91,15 @@ class Command:
             raise ValueError(f"negative bank id in {self.banks}")
         if len(set(self.banks)) != len(self.banks):
             raise ValueError(f"duplicate bank ids in {self.banks}")
+        if any(k < 0 for k in self.cores):
+            raise ValueError(f"negative core id in {self.cores}")
+        if len(set(self.cores)) != len(self.cores):
+            raise ValueError(f"duplicate core ids in {self.cores}")
+        if self.cores and len(self.cores) != max(self.concurrent_cores, 1):
+            raise ValueError(
+                f"core placement {self.cores} disagrees with "
+                f"concurrent_cores={self.concurrent_cores} in "
+                f"{self.kind.value} '{self.layer}'")
         if self.prefetchable and self.kind is not CMD.PIM_BK2GBUF:
             raise ValueError("prefetchable only applies to bank→GBUF reads")
 

@@ -49,19 +49,21 @@ from repro.experiment.backends import (BACKENDS, AnalyticBackend,
                                        BurstSimBackend, EvalBackend,
                                        EvalResult, EvalSpec, resolve_engine)
 from repro.experiment.cache import DiskCache
+from repro.experiment.journal import SweepJournal, spec_signature
 from repro.experiment.registry import (SYSTEMS, WORKLOADS, Registry,
                                        SystemSpec, WorkloadSpec,
                                        register_system, register_workload)
 from repro.experiment.runner import (BASELINE_SYSTEM, Experiment,
-                                     ParetoPoint, default_experiment,
-                                     pareto_tags)
+                                     ParetoPoint, SweepFailure,
+                                     default_experiment, pareto_tags)
 
 __all__ = [
     "BACKENDS", "BASELINE_SYSTEM", "AnalyticBackend", "BurstSimBackend",
     "DiskCache", "EvalBackend", "EvalResult", "EvalSpec", "Experiment",
-    "ParetoPoint",
+    "ParetoPoint", "SweepFailure", "SweepJournal",
     "Registry", "SystemSpec", "WorkloadSpec", "SYSTEMS", "WORKLOADS",
     "default_artifact_dir", "default_experiment", "pareto_tags",
     "read_results_csv", "register_system", "register_workload",
-    "resolve_engine", "write_pareto_csv", "write_results_csv",
+    "resolve_engine", "spec_signature", "write_pareto_csv",
+    "write_results_csv",
 ]

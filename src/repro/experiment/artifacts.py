@@ -30,9 +30,9 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 
 CSV_FIELDS = (
     "workload", "system", "config", "backend", "policy", "row_reuse",
-    "engine", "plan", "gbuf_bytes", "lbuf_bytes", "cycles", "energy_nj",
-    "area_mm2", "cross_bank_bytes", "row_activations", "row_hits",
-    "norm_cycles", "norm_energy", "norm_area",
+    "engine", "plan", "faults", "gbuf_bytes", "lbuf_bytes", "cycles",
+    "energy_nj", "area_mm2", "cross_bank_bytes", "row_activations",
+    "row_hits", "norm_cycles", "norm_energy", "norm_area",
 )
 
 # Pareto artifacts carry the sweep schema plus the dominated tag
@@ -71,6 +71,10 @@ def result_row(result: "EvalResult",
         # resolved engine (spec.engine may have fallen back without numpy)
         "engine": result.detail.get("engine", spec.engine),
         "plan": spec.plan,
+        # the fault-scenario label ("none" for healthy hardware) — the
+        # degradation-curve axis of benchmarks/degradation_report.py
+        "faults": spec.faults.label() if spec.faults is not None
+        else "none",
         "gbuf_bytes": spec.gbuf_bytes,
         "lbuf_bytes": spec.lbuf_bytes,
         "cycles": result.cycles,

@@ -30,6 +30,7 @@ from typing import Any, Mapping, Protocol
 
 from repro.core.commands import Trace, cross_bank_bytes
 from repro.experiment.registry import Registry
+from repro.faults.spec import FaultSpec
 from repro.pim.arch import PIMArch, config_label
 from repro.pim.energy import EnergyReport, simulate_energy, system_area
 from repro.pim.events import EventCounts, assumed_hit_bits, trace_events
@@ -60,6 +61,12 @@ class EvalSpec:
     :class:`~repro.check.report.CheckError` on any violation and storing
     the :class:`~repro.check.report.CheckReport` under
     ``detail["check"]``.
+    ``faults`` (a :class:`repro.faults.spec.FaultSpec` or ``None``)
+    evaluates the point under a hardware fault scenario: structural
+    faults remap the trace onto the surviving banks/cores before either
+    backend sees it, transient faults charge deterministic per-burst
+    retries inside the burst-sim engines.  ``None`` and the null spec are
+    bit-identical to today's fault-free behaviour.
     """
 
     workload: str
@@ -72,6 +79,7 @@ class EvalSpec:
     engine: str = "columnar"
     plan: str = "default"
     verify: bool = False
+    faults: FaultSpec | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +139,9 @@ class EvalContext(Protocol):
     def batched(self, trace: Trace, arch: PIMArch, row_reuse: bool,
                 policy: str, engine: str) -> Any: ...
 
+    def degraded(self, trace: Trace, arch: PIMArch,
+                 faults: FaultSpec) -> Trace: ...
+
     def cycle_report(self, trace: Trace, arch: PIMArch) -> Any: ...
 
     def energy_report(self, trace: Trace, arch: PIMArch) -> Any: ...
@@ -140,6 +151,20 @@ def _cycle_report(trace: Trace, arch: PIMArch,
                   ctx: EvalContext | None) -> Any:
     fn = getattr(ctx, "cycle_report", None)
     return fn(trace, arch) if fn is not None else simulate_cycles(trace, arch)
+
+
+def _degraded_trace(trace: Trace, arch: PIMArch, spec: EvalSpec,
+                    ctx: EvalContext | None) -> Trace:
+    """Apply the spec's STRUCTURAL faults: remap the trace onto the
+    surviving hardware (via the driver's memo hook when offered — a
+    degraded trace is reusable across policies/engines like any other)."""
+    if spec.faults is None or not spec.faults.has_structural:
+        return trace
+    fn = getattr(ctx, "degraded", None)
+    if fn is not None:
+        return fn(trace, arch, spec.faults)
+    from repro.faults.remap import remap_trace
+    return remap_trace(trace, arch, spec.faults)
 
 
 @functools.lru_cache(maxsize=None)
@@ -203,6 +228,7 @@ class AnalyticBackend:
 
     def evaluate(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
                  ctx: EvalContext | None = None) -> EvalResult:
+        trace = _degraded_trace(trace, arch, spec, ctx)
         cycles = _cycle_report(trace, arch, ctx)
         return _common(spec, trace, arch, cycles.total, {"cycles": cycles},
                        ctx)
@@ -255,7 +281,8 @@ class BurstSimBackend:
                                 engine) if batch_fn is not None \
                     else batch_same_row_columnar(cols, spec.policy)
             return simulate_columnar(trace, arch, spec.policy, cols=cols,
-                                     prebatched=True, collector=collector)
+                                     prebatched=True, collector=collector,
+                                     faults=spec.faults)
         from repro.sim.burst import lower_trace
         from repro.sim.engine import simulate
         from repro.sim.scheduler import batch_same_row
@@ -269,7 +296,8 @@ class BurstSimBackend:
                                engine) if batch_fn is not None \
                 else [batch_same_row(ops) for ops in lowered]
         return simulate(trace, arch, spec.policy, lowered=lowered,
-                        prebatched=True, collector=collector)
+                        prebatched=True, collector=collector,
+                        faults=spec.faults)
 
     def evaluate(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
                  ctx: EvalContext | None = None) -> EvalResult:
@@ -279,6 +307,7 @@ class BurstSimBackend:
         from repro.sim.report import SimReport
 
         engine = resolve_engine(spec.engine)
+        trace = _degraded_trace(trace, arch, spec, ctx)
         collector = getattr(ctx, "collector", None)
         verifier_sink = None
         if spec.verify:
@@ -294,7 +323,8 @@ class BurstSimBackend:
             from repro.check import lint_trace, verify_schedule
             with span("backend.verify", engine=engine, policy=spec.policy):
                 check = verify_schedule(trace, arch, result,
-                                        collector=verifier_sink)
+                                        collector=verifier_sink,
+                                        faults=spec.faults)
                 check.extend(lint_trace(trace, arch))
             check.context.update({"workload": spec.workload,
                                   "system": spec.system, "engine": engine})

@@ -33,8 +33,10 @@ The cache is OFF unless opted into, so test runs stay hermetic.
 
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
+import logging
 import os
 import tempfile
 from pathlib import Path
@@ -54,6 +56,8 @@ COLUMNAR_FIELDS = ("offsets", "cmd_index", "rescode", "unit", "bank",
 
 _OFF = frozenset({"0", "off", "no", "false"})
 _ON = frozenset({"1", "on", "yes", "true"})
+
+_log = logging.getLogger(__name__)
 
 
 def arch_fingerprint(arch: "PIMArch") -> dict[str, Any]:
@@ -78,7 +82,9 @@ class DiskCache:
         self.root = Path(root)
         self.max_bytes = max_bytes
         self.stats: dict[str, int] = {"hits": 0, "misses": 0, "stores": 0,
-                                      "evictions": 0, "errors": 0}
+                                      "evictions": 0, "errors": 0,
+                                      "corrupt": 0}
+        self._warned: set[Path] = set()
 
     @classmethod
     def from_env(cls) -> "DiskCache | None":
@@ -108,6 +114,28 @@ class DiskCache:
 
     # -- raw array I/O ---------------------------------------------------
 
+    def _quarantine(self, key: str) -> None:
+        """Move a corrupt entry into the ``.bad/`` sidecar directory for
+        post-mortems (the ``.bad`` suffix keeps it out of
+        :meth:`entries`, so pruning/size accounting never resurrect it)
+        instead of silently re-missing on it forever.  Warns once per
+        path — a shared cache hit by many workers stays readable."""
+        path = self.path_for(key)
+        self.stats["corrupt"] += 1
+        bad = self.root / ".bad" / f"{path.name}.bad"
+        try:
+            bad.parent.mkdir(parents=True, exist_ok=True)
+            os.replace(path, bad)
+        except OSError:
+            # another process already quarantined it (or the file is
+            # gone) — the rebuild-and-restore path still heals the cache
+            with contextlib.suppress(OSError):
+                path.unlink()
+        if path not in self._warned:
+            self._warned.add(path)
+            _log.warning("quarantined corrupt cache entry %s -> %s",
+                         path, bad)
+
     def _read(self, key: str) -> dict[str, Any] | None:
         import numpy as np
 
@@ -119,7 +147,10 @@ class DiskCache:
             self.stats["misses"] += 1
             return None
         except Exception:
+            # unreadable bytes under a valid key = corruption (the key is
+            # content-addressed, so staleness cannot reach here)
             self.stats["errors"] += 1
+            self._quarantine(key)
             return None
 
     def _write(self, key: str, arrays: dict[str, Any]) -> None:
@@ -166,6 +197,7 @@ class DiskCache:
                     check_columnar(trace, cols, arch)
         except Exception:
             self.stats["errors"] += 1
+            self._quarantine(key)
             return None
         self.stats["hits"] += 1
         return cols
@@ -197,6 +229,7 @@ class DiskCache:
                 raise ValueError("order crosses command segments")
         except Exception:
             self.stats["errors"] += 1
+            self._quarantine(key)
             return None
         self.stats["hits"] += 1
         return order

@@ -1,0 +1,161 @@
+"""Append-only checkpoint journal for crash-resilient sweeps.
+
+``Experiment.sweep(..., checkpoint=path)`` records every completed grid
+point (and every quarantine decision) as one JSON line, keyed by a
+content signature of the fully-RESOLVED :class:`EvalSpec` — workload,
+system, resolved buffer sizes, backend, policy, row-reuse, engine, plan,
+verify and the fault scenario.  A re-run of the same sweep against the
+same journal restores finished points straight into the Experiment's
+result memo (``stats["journal_restored"]``) and only evaluates what is
+genuinely missing, so a parent crash mid-sweep costs at most the points
+in flight.
+
+The journal stores the *scalar* result row — the PPA triple, the
+cross-bank byte count and the full :class:`~repro.pim.events.EventCounts`
+— not the backend's rich ``detail`` reports; a restored result carries
+``detail={"journal": True, ...}`` instead.  That is exactly what sweep
+artifacts (:mod:`repro.experiment.artifacts`) and normalized reporting
+consume, and it keeps records small and schema-stable.
+
+Failure records are deliberately NOT restored: a point quarantined by a
+previous run is retried on resume (the crash may have been environmental),
+while its history stays in the journal for post-mortems.
+
+Torn or corrupt trailing lines — the signature of a crash mid-append —
+are skipped on load (:attr:`SweepJournal.dropped_lines` counts them); the
+journal itself is append-only, so no earlier record is ever at risk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import TYPE_CHECKING, Any
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.experiment.backends import EvalResult, EvalSpec
+
+JOURNAL_VERSION = 1
+
+_RESULT_FIELDS = ("config", "cycles", "energy_nj", "area_mm2",
+                  "cross_bank_bytes")
+
+
+def spec_signature(spec: "EvalSpec") -> str:
+    """Content signature of a resolved grid point: SHA-256 of the
+    canonical JSON encoding of every spec field (the nested
+    :class:`~repro.faults.spec.FaultSpec` included)."""
+    blob = json.dumps(dataclasses.asdict(spec), sort_keys=True,
+                      separators=(",", ":"), default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class SweepJournal:
+    """One append-only JSONL checkpoint file (created lazily on first
+    record).  Loading replays the file into an in-memory ``sig → record``
+    map (last record per signature wins), which also dedupes appends —
+    a point restored from the journal or merged twice is never
+    re-recorded."""
+
+    def __init__(self, path: "str | Path") -> None:
+        self.path = Path(path)
+        self._records: dict[str, dict[str, Any]] = {}
+        self._dropped = 0
+        self._load()
+
+    def _load(self) -> None:
+        if not self.path.exists():
+            return
+        with self.path.open("r", encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                    sig = rec["sig"]
+                    if rec["status"] not in ("ok", "fail"):
+                        raise ValueError(rec["status"])
+                except Exception:
+                    self._dropped += 1      # torn mid-append write: skip
+                    continue
+                self._records[sig] = rec
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    @property
+    def dropped_lines(self) -> int:
+        """Corrupt/torn lines skipped on load."""
+        return self._dropped
+
+    def _append(self, rec: dict[str, Any]) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with self.path.open("a", encoding="utf-8") as f:
+            f.write(json.dumps(rec, sort_keys=True, default=str) + "\n")
+            f.flush()
+        self._records[rec["sig"]] = rec
+
+    # -- recording -------------------------------------------------------
+
+    def record_ok(self, spec: "EvalSpec", result: "EvalResult") -> None:
+        """Checkpoint one completed grid point (idempotent per spec)."""
+        sig = spec_signature(spec)
+        prev = self._records.get(sig)
+        if prev is not None and prev.get("status") == "ok":
+            return
+        self._append({
+            "v": JOURNAL_VERSION, "sig": sig, "status": "ok",
+            "spec": dataclasses.asdict(spec),
+            "result": {
+                **{f: getattr(result, f) for f in _RESULT_FIELDS},
+                "events": dataclasses.asdict(result.events),
+                "engine": result.detail.get("engine", spec.engine),
+            }})
+
+    def record_failure(self, spec: "EvalSpec", code: str, message: str,
+                       attempts: int) -> None:
+        """Checkpoint one quarantine decision (never shadows a success)."""
+        sig = spec_signature(spec)
+        prev = self._records.get(sig)
+        if prev is not None and prev.get("status") == "ok":
+            return
+        self._append({
+            "v": JOURNAL_VERSION, "sig": sig, "status": "fail",
+            "spec": dataclasses.asdict(spec),
+            "code": code, "message": message, "attempts": attempts})
+
+    # -- restore ---------------------------------------------------------
+
+    def restore(self, spec: "EvalSpec") -> "EvalResult | None":
+        """The journaled result for a resolved spec, rebuilt as an
+        :class:`~repro.experiment.backends.EvalResult` with
+        ``detail={"journal": True, ...}`` — or ``None`` when the point
+        never finished (absent, failed, or the record is unreadable)."""
+        rec = self._records.get(spec_signature(spec))
+        if rec is None or rec.get("status") != "ok":
+            return None
+        from repro.experiment.backends import EvalResult
+        from repro.pim.events import EventCounts
+        data = rec["result"]
+        try:
+            return EvalResult(
+                spec=spec,
+                config=str(data["config"]),
+                cycles=int(data["cycles"]),
+                energy_nj=float(data["energy_nj"]),
+                area_mm2=float(data["area_mm2"]),
+                cross_bank_bytes=int(data["cross_bank_bytes"]),
+                events=EventCounts(**{k: int(v) for k, v
+                                      in data["events"].items()}),
+                detail={"journal": True, "engine": data.get("engine")})
+        except Exception:
+            return None     # schema drift degrades to a re-evaluation
+
+    def failures(self) -> list[dict[str, Any]]:
+        """Every still-standing failure record (not shadowed by a later
+        success), for post-mortems."""
+        return [rec for rec in self._records.values()
+                if rec.get("status") == "fail"]

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import sys as _sys
 import time
 from pathlib import Path
@@ -39,6 +40,7 @@ from repro.experiment.backends import (BACKENDS, EvalResult, EvalSpec,
                                        resolve_engine)
 from repro.experiment.registry import (SYSTEMS, WORKLOADS, Registry,
                                        SystemSpec, WorkloadSpec)
+from repro.faults.spec import FaultSpec
 from repro.obs.counters import CounterRegistry
 from repro.obs.profile import active_profiler, profiled, span
 from repro.pim.arch import PIMArch
@@ -56,6 +58,22 @@ class ParetoPoint:
 
     result: EvalResult
     dominated: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepFailure:
+    """One grid point a resilient sweep gave up on after its retry
+    budget: ``code`` is ``"crash"`` (a worker death broke the pool),
+    ``"timeout"`` (the chunk blew its wall-clock deadline) or ``"error"``
+    (the chunk raised).  Quarantined points are served as coded failure
+    rows (see :meth:`Experiment._failure_result`) instead of aborting the
+    sweep, recorded on :attr:`Experiment.failures` and — when a
+    checkpoint journal is attached — in the journal."""
+
+    spec: EvalSpec
+    code: str
+    message: str
+    attempts: int
 
 
 def _dominates(a: tuple[float, ...], b: tuple[float, ...]) -> bool:
@@ -82,7 +100,10 @@ def _sweep_worker(job: dict[str, Any]) -> dict[str, Any]:
     the results, build stats, folded collector and per-point progress
     back for the parent to merge.  The worker's Experiment reads the
     on-disk cache from the environment, so spawn pools stop re-lowering
-    the same trace once any process has stored it."""
+    the same trace once any process has stored it.  When ``REPRO_CHAOS``
+    is set, the chaos harness (:mod:`repro.faults.chaos`) gets a shot at
+    every point first — crash/hang injection for the resilience tests and
+    the CI chaos step; production sweeps never pay the check."""
     exp = Experiment()
     if job.get("overrides"):
         from repro.plan.artifacts import apply_override_records
@@ -90,9 +111,13 @@ def _sweep_worker(job: dict[str, Any]) -> dict[str, Any]:
     collector = job.get("collector")
     if collector is not None:
         exp.collector = collector
+    chaos = os.environ.get("REPRO_CHAOS")
     results: list[EvalResult] = []
     progress: list[tuple[EvalSpec, float]] = []
     for spec in job["specs"]:
+        if chaos:
+            from repro.faults.chaos import maybe_chaos
+            maybe_chaos(exp.resolve(spec))
         t0 = time.perf_counter()
         results.append(exp.run(spec))
         progress.append((spec, time.perf_counter() - t0))
@@ -131,7 +156,11 @@ class Experiment:
             "cycle_models": 0, "energy_models": 0,
             "backend_evals": 0, "result_hits": 0,
             "disk_hits": 0, "disk_misses": 0, "disk_stores": 0,
+            "disk_corrupt": 0,
             "parallel_chunks": 0, "parallel_points": 0,
+            "remaps": 0,
+            "sweep_retries": 0, "sweep_timeouts": 0,
+            "sweep_quarantined": 0, "journal_restored": 0,
         })
         # optional repro.obs.trace.TraceCollector: when set, the burst-sim
         # backend streams replay events into it (EvalContext hook).  NOTE:
@@ -156,7 +185,13 @@ class Experiment:
         self._batched: dict[tuple, tuple[Trace, Any]] = {}
         self._cycle_reports: dict[tuple, tuple[Trace, Any]] = {}
         self._energy_reports: dict[tuple, tuple[Trace, Any]] = {}
+        self._degraded: dict[tuple, tuple[Trace, Any]] = {}
         self._results: dict[EvalSpec, EvalResult] = {}
+        # sweep-resilience state: poison points quarantined after their
+        # retry budget (served as coded failure rows, never re-run in the
+        # parent) plus every quarantine decision in arrival order
+        self._quarantined: dict[EvalSpec, SweepFailure] = {}
+        self._failed: list[SweepFailure] = []
 
     # ------------------------------------------------------------------
     # memoized build pipeline
@@ -393,6 +428,18 @@ class Experiment:
                                extra=(row_reuse, policy, engine),
                                load=load, store=store)
 
+    def degraded(self, trace: Trace, arch: PIMArch,
+                 faults: FaultSpec) -> Trace:
+        """Degraded-mode trace for a STRUCTURAL fault scenario
+        (:func:`repro.faults.remap.remap_trace`), memoized per
+        (trace, arch, faults) — a degraded trace is shared across issue
+        policies and engines like any other per-trace derivation
+        (:class:`~repro.experiment.backends.EvalContext` hook)."""
+        from repro.faults.remap import remap_trace
+        return self._per_trace(self._degraded, trace, arch,
+                               lambda: remap_trace(trace, arch, faults),
+                               "remaps", extra=faults)
+
     def cycle_report(self, trace: Trace, arch: PIMArch) -> Any:
         """Analytic cycle report, policy-independent — computed once per
         (trace, arch) however many backends/policies consume it."""
@@ -416,7 +463,16 @@ class Experiment:
         :func:`repro.obs.counters.counters_from_sim_result`."""
         reg = CounterRegistry()
         reg.merge(self.stats, prefix="experiment")
+        if self.disk_cache is not None:
+            reg.merge(self.disk_cache.stats,
+                      prefix="experiment.disk_cache")
         return reg
+
+    @property
+    def failures(self) -> list[SweepFailure]:
+        """Every grid point resilient sweeps quarantined (gave up on
+        after the retry budget), in arrival order."""
+        return list(self._failed)
 
     # ------------------------------------------------------------------
     # evaluation
@@ -439,9 +495,20 @@ class Experiment:
         signature are all known, so the content-addressed key can be
         formed.  The backend's later ``ctx.columnar`` / ``ctx.batched``
         calls then hit the primed memo."""
+        dc = self.disk_cache
+        corrupt0 = dc.stats.get("corrupt", 0)
+        try:
+            self._disk_sync_inner(spec, trace, arch, dc)
+        finally:
+            # surface the cache's corruption-quarantine count on the
+            # Experiment so callers need not reach into DiskCache.stats
+            self.stats["disk_corrupt"] += \
+                dc.stats.get("corrupt", 0) - corrupt0
+
+    def _disk_sync_inner(self, spec: EvalSpec, trace: Trace,
+                         arch: PIMArch, dc: Any) -> None:
         from repro.experiment.cache import LOWERING_VERSION, arch_fingerprint
         from repro.sim.scheduler import BATCHING_POLICIES, seed_batched
-        dc = self.disk_cache
         sys_spec = self.systems.get(spec.system)
         plan_sig: Any = None
         if sys_spec.tile_grid is not None:
@@ -491,7 +558,12 @@ class Experiment:
         trace = self.trace(spec.workload, spec.system, spec.gbuf_bytes,
                            spec.lbuf_bytes, plan=spec.plan)
         if (self.disk_cache is not None and spec.backend == "burst-sim"
-                and resolve_engine(spec.engine) == "columnar"):
+                and resolve_engine(spec.engine) == "columnar"
+                # the disk key addresses the HEALTHY lowering; a
+                # structurally degraded point lowers its remapped trace
+                # in-memory instead of priming (or polluting) the cache
+                and (spec.faults is None
+                     or not spec.faults.has_structural)):
             self._disk_sync(spec, trace, arch)
         with span("experiment.evaluate", workload=spec.workload,
                   system=spec.system, backend=spec.backend):
@@ -531,7 +603,13 @@ class Experiment:
               engine: str = "columnar",
               plan: str = "default",
               verify: bool = False,
+              faults: "FaultSpec | Sequence[FaultSpec | None] | None"
+              = None,
               workers: int = 1,
+              point_timeout: float | None = 600.0,
+              retries: int = 2,
+              retry_backoff: float = 0.5,
+              checkpoint: "str | Path | None" = None,
               csv_path: str | None = None,
               verbose: bool = False) -> list[EvalResult]:
         """Evaluate the cross product workloads × systems × buffer points.
@@ -556,6 +634,24 @@ class Experiment:
         ``verify=True`` (burst-sim points only) runs the
         :mod:`repro.check` schedule verifier after every replay — see
         :class:`~repro.experiment.backends.EvalSpec`.
+
+        ``faults`` extends the grid along the hardware-fault axis: a
+        single :class:`~repro.faults.spec.FaultSpec` applies to every
+        point, a sequence (``None`` entries allowed for the healthy
+        reference) becomes a cross-product axis like ``buffers``.
+
+        Parallel sweeps are supervised: each pool chunk gets a hard
+        wall-clock deadline of ``point_timeout`` seconds per grid point
+        (``None`` disables), failures are retried up to ``retries`` times
+        with exponential ``retry_backoff`` (a crashed worker rebuilds the
+        pool first), and a point still failing after that is QUARANTINED
+        — reported as a coded failure row in the returned list (negative
+        cycles, ``config="FAILED:<code>"``) and on :attr:`failures` —
+        instead of aborting the whole sweep.  ``checkpoint`` names an
+        append-only :class:`~repro.experiment.journal.SweepJournal` file:
+        every completed point is journaled as it lands, and a re-run
+        against the same path restores finished points instead of
+        re-evaluating them (crash-resume for long sweeps).
         """
         if workloads is None:
             workloads = self.workloads.names()
@@ -566,15 +662,34 @@ class Experiment:
         elif isinstance(systems, str):
             systems = (systems,)
         points = buffers if buffers is not None else ((None, None),)
+        fault_axis: tuple = (faults,) \
+            if faults is None or isinstance(faults, FaultSpec) \
+            else tuple(faults)
         specs = [EvalSpec(workload=w, system=s, gbuf_bytes=g,
                           lbuf_bytes=lb, backend=backend,
                           policy=policy, row_reuse=row_reuse,
-                          engine=engine, plan=plan, verify=verify)
-                 for w in workloads for s in systems for g, lb in points]
+                          engine=engine, plan=plan, verify=verify,
+                          faults=fl)
+                 for w in workloads for s in systems
+                 for g, lb in points for fl in fault_axis]
+        # the normalization baseline stays on HEALTHY hardware: degraded
+        # points report their cost relative to the fault-free paper 1.0
         baselines = [EvalSpec(workload=w, system=self.baseline_system,
                               backend=backend, policy=policy,
                               row_reuse=row_reuse, engine=engine)
                      for w in workloads] if csv_path is not None else []
+        journal = None
+        if checkpoint is not None:
+            from repro.experiment.journal import SweepJournal
+            journal = SweepJournal(checkpoint)
+            for spec in [*specs, *baselines]:
+                resolved = self.resolve(spec)
+                if resolved in self._results:
+                    continue
+                restored = journal.restore(resolved)
+                if restored is not None:
+                    self._results[resolved] = restored
+                    self.stats["journal_restored"] += 1
         # profile the sweep: an already-active profiler (the caller's
         # ``with profiled():``) is reused; otherwise a csv_path sweep
         # activates its own so the report artifact is never empty
@@ -586,7 +701,11 @@ class Experiment:
             with span("experiment.sweep", points=len(specs),
                       workers=workers):
                 results = self._dispatch(specs, workers, baselines,
-                                         verbose=verbose)
+                                         verbose=verbose,
+                                         point_timeout=point_timeout,
+                                         retries=retries,
+                                         retry_backoff=retry_backoff,
+                                         journal=journal)
         if csv_path is not None:
             from repro.experiment.artifacts import write_results_csv
             write_results_csv(csv_path, results, experiment=self)
@@ -600,32 +719,66 @@ class Experiment:
                           "stats_delta": delta})
         return results
 
+    def _failure_result(self, spec: EvalSpec,
+                        failure: SweepFailure) -> EvalResult:
+        """The coded row a QUARANTINED grid point reports instead of
+        aborting the sweep: negative cycles and zero energy/area (no real
+        evaluation can produce either), ``config="FAILED:<code>"``, and
+        the :class:`SweepFailure` under ``detail["failure"]``.  Never
+        memoized into the result cache — a later sweep retries the
+        point."""
+        from repro.pim.events import EventCounts
+        return EvalResult(
+            spec=spec, config=f"FAILED:{failure.code}", cycles=-1,
+            energy_nj=0.0, area_mm2=0.0, cross_bank_bytes=0,
+            events=EventCounts(),
+            detail={"failure": failure, "engine": spec.engine})
+
     def _dispatch(self, specs: Sequence[EvalSpec], workers: int,
                   baselines: Sequence[EvalSpec] = (),
-                  verbose: bool = False) -> list[EvalResult]:
+                  verbose: bool = False,
+                  point_timeout: float | None = 600.0,
+                  retries: int = 2,
+                  retry_backoff: float = 0.5,
+                  journal: Any = None) -> list[EvalResult]:
         """Evaluate specs in order: one pool pass over the whole batch
         when ``workers > 1`` (plus the ``baselines`` a CSV's normalized
         columns will need — evaluated on the pool rather than serially in
-        the parent afterwards), then serve everything from the memo."""
+        the parent afterwards), then serve everything from the memo.
+        Points the pool QUARANTINED (see :meth:`_run_parallel`) are
+        served as coded failure rows, never re-run in the parent — a
+        poison point could hang or crash the whole process there."""
         if workers > 1:
             self._run_parallel(list(specs) + list(baselines), workers,
-                               verbose=verbose)
-        if not verbose:
-            return [self.run(spec) for spec in specs]
+                               verbose=verbose,
+                               point_timeout=point_timeout,
+                               retries=retries,
+                               retry_backoff=retry_backoff,
+                               journal=journal)
         results = []
         for k, spec in enumerate(specs):
             resolved = self.resolve(spec)
+            failure = self._quarantined.get(resolved)
+            if failure is not None:
+                results.append(self._failure_result(resolved, failure))
+                continue
             cached = resolved in self._results
             t = time.perf_counter()
-            results.append(self.run(resolved))
+            result = self.run(resolved)
             elapsed = time.perf_counter() - t
-            print(f"[sweep {k + 1}/{len(specs)}] "
-                  f"workload={resolved.workload} system={resolved.system} "
-                  f"gbuf={resolved.gbuf_bytes} lbuf={resolved.lbuf_bytes} "
-                  f"plan={resolved.plan} policy={resolved.policy} "
-                  f"backend={resolved.backend} "
-                  f"cached={'yes' if cached else 'no'} "
-                  f"elapsed_s={elapsed:.3f}", file=_sys.stderr)
+            if journal is not None:
+                journal.record_ok(resolved, result)
+            results.append(result)
+            if verbose:
+                print(f"[sweep {k + 1}/{len(specs)}] "
+                      f"workload={resolved.workload} "
+                      f"system={resolved.system} "
+                      f"gbuf={resolved.gbuf_bytes} "
+                      f"lbuf={resolved.lbuf_bytes} "
+                      f"plan={resolved.plan} policy={resolved.policy} "
+                      f"backend={resolved.backend} "
+                      f"cached={'yes' if cached else 'no'} "
+                      f"elapsed_s={elapsed:.3f}", file=_sys.stderr)
         return results
 
     def _shippable(self, specs: Sequence[EvalSpec]) -> dict[str, Any] | None:
@@ -668,7 +821,11 @@ class Experiment:
         return {"overrides": overrides, "collector": collector}
 
     def _run_parallel(self, specs: Sequence[EvalSpec], workers: int,
-                      verbose: bool = False) -> None:
+                      verbose: bool = False,
+                      point_timeout: float | None = 600.0,
+                      retries: int = 2,
+                      retry_backoff: float = 0.5,
+                      journal: Any = None) -> None:
         """Evaluate not-yet-cached specs on a process pool and merge the
         results (plus the workers' build stats, folded collector state and
         per-point progress) into this Experiment.
@@ -681,8 +838,25 @@ class Experiment:
         path.  Points are chunked by fully-resolved grid point —
         (workload, system, gbuf, lbuf, row-reuse, plan) — the unit that
         actually shares a mapped trace and burst lowering across its specs
-        (policies / backends); distinct buffer points share nothing, so
-        they parallelize freely even within one system.
+        (policies / backends / fault scenarios); distinct buffer points
+        share nothing, so they parallelize freely even within one system.
+
+        The pool is SUPERVISED: every chunk carries a wall-clock deadline
+        (``point_timeout`` seconds × chunk size; ``None`` disables), a
+        worker death (``BrokenProcessPool`` — the pool is unusable after
+        one) charges the lost chunk when it was alone in flight, else
+        requeues all in-flight chunks UNCHARGED on a fresh pool and
+        probes them one at a time until the culprit crashes alone (so a
+        poison point can never quarantine an innocent bystander), an
+        ordinary chunk exception retries with
+        exponential backoff, and a hung chunk past its deadline gets its
+        pool terminated (a hung worker cannot be cancelled), the
+        timed-out chunk charged an attempt and the innocent bystanders
+        requeued at their SAME attempt.  A chunk still failing after
+        ``retries`` retries is QUARANTINED (:class:`SweepFailure`, stat
+        ``sweep_quarantined``) — the sweep completes with coded failure
+        rows instead of aborting.  Every merged result and quarantine
+        decision is checkpointed into ``journal`` as it lands.
         """
         job_template = self._shippable(specs)
         if job_template is None:
@@ -691,7 +865,8 @@ class Experiment:
         chunks: dict[tuple, list[EvalSpec]] = {}
         for spec in specs:
             spec = self.resolve(spec)
-            if spec in self._results or spec in seen:
+            if spec in self._results or spec in seen \
+                    or spec in self._quarantined:
                 continue
             seen.add(spec)
             chunks.setdefault(
@@ -707,10 +882,11 @@ class Experiment:
                 for chunk in chunks.values()]
         self.stats["parallel_chunks"] += len(jobs)
         self.stats["parallel_points"] += len(seen)
+        import collections
         import concurrent.futures
         import multiprocessing
-        import os
         import sys
+        from concurrent.futures.process import BrokenProcessPool
         # spawn, not fork: the surrounding process may hold JAX (or other
         # multithreaded) state that a forked child would deadlock on; the
         # worker only needs the importable module-level registries anyway.
@@ -722,34 +898,171 @@ class Experiment:
         masked = main_file is not None and not os.path.exists(main_file)
         if masked:
             del main.__file__
-        done, total = 0, len(seen)
+
+        done_n, total = 0, len(seen)
+        pending: collections.deque = \
+            collections.deque((job, 0) for job in jobs)
+        # crash-isolation mode: a BrokenProcessPool with >1 chunk in
+        # flight cannot name the culprit, so nobody is charged and the
+        # requeued chunks run ONE AT A TIME until a crash happens alone
+        # (charged) or a chunk completes (back to full width) — an
+        # innocent bystander can never be quarantined by a poison point.
+        probe = False
+
+        def merge(payload: dict[str, Any]) -> None:
+            nonlocal done_n
+            for r in payload["results"]:
+                self._results.setdefault(r.spec, r)
+                if journal is not None:
+                    journal.record_ok(r.spec, r)
+            for key, count in payload["stats"].items():
+                self.stats[key] = self.stats.get(key, 0) + count
+            if collector is not None and payload["collector"] is not None:
+                collector.merge(payload["collector"])
+            for spec, elapsed in payload["progress"]:
+                done_n += 1
+                if verbose:
+                    print(f"[sweep pool {done_n}/{total}] "
+                          f"workload={spec.workload} "
+                          f"system={spec.system} "
+                          f"gbuf={spec.gbuf_bytes} "
+                          f"lbuf={spec.lbuf_bytes} "
+                          f"plan={spec.plan} policy={spec.policy} "
+                          f"backend={spec.backend} "
+                          f"elapsed_s={elapsed:.3f}",
+                          file=_sys.stderr)
+
+        def retry_or_quarantine(job: dict, attempt: int, code: str,
+                                message: str) -> None:
+            if attempt < retries:
+                pending.append((job, attempt + 1))
+                self.stats["sweep_retries"] += 1
+                return
+            for spec in job["specs"]:
+                failure = SweepFailure(spec=spec, code=code,
+                                       message=message,
+                                       attempts=attempt + 1)
+                self._quarantined[spec] = failure
+                self._failed.append(failure)
+                self.stats["sweep_quarantined"] += 1
+                if journal is not None:
+                    journal.record_failure(spec, code, message,
+                                           attempt + 1)
+
+        def kill_pool(pool: Any) -> None:
+            for p in list((getattr(pool, "_processes", None) or {})
+                          .values()):
+                with contextlib.suppress(Exception):
+                    p.terminate()
+
+        def chunk_label(job: dict) -> str:
+            return ", ".join(
+                f"{s.workload}/{s.system}/g{s.gbuf_bytes}"
+                f"/l{s.lbuf_bytes}/{s.policy}"
+                + (f"/{s.faults.label()}" if s.faults is not None else "")
+                for s in job["specs"])
+
         try:
-            with concurrent.futures.ProcessPoolExecutor(
+            while pending:
+                rebuild = False
+                pool = concurrent.futures.ProcessPoolExecutor(
                     max_workers=workers,
-                    mp_context=multiprocessing.get_context("spawn")) as pool:
-                futures = [pool.submit(_sweep_worker, job) for job in jobs]
-                for fut in concurrent.futures.as_completed(futures):
-                    payload = fut.result()
-                    for r in payload["results"]:
-                        self._results.setdefault(r.spec, r)
-                    for key, count in payload["stats"].items():
-                        self.stats[key] = self.stats.get(key, 0) + count
-                    if collector is not None \
-                            and payload["collector"] is not None:
-                        collector.merge(payload["collector"])
-                    for spec, elapsed in payload["progress"]:
-                        done += 1
-                        if verbose:
-                            print(
-                                f"[sweep pool {done}/{total}] "
-                                f"workload={spec.workload} "
-                                f"system={spec.system} "
-                                f"gbuf={spec.gbuf_bytes} "
-                                f"lbuf={spec.lbuf_bytes} "
-                                f"plan={spec.plan} policy={spec.policy} "
-                                f"backend={spec.backend} "
-                                f"elapsed_s={elapsed:.3f}",
-                                file=_sys.stderr)
+                    mp_context=multiprocessing.get_context("spawn"))
+                inflight: dict[Any, tuple[dict, int, float]] = {}
+                try:
+                    while (pending or inflight) and not rebuild:
+                        while pending and not (probe and inflight):
+                            job, attempt = pending.popleft()
+                            if attempt and retry_backoff:
+                                time.sleep(retry_backoff
+                                           * (2 ** (attempt - 1)))
+                            deadline = float("inf") \
+                                if point_timeout is None \
+                                else (time.monotonic() + point_timeout
+                                      * len(job["specs"]))
+                            try:
+                                fut = pool.submit(_sweep_worker, job)
+                            except BrokenProcessPool:
+                                pending.appendleft((job, attempt))
+                                rebuild = True
+                                break
+                            inflight[fut] = (job, attempt, deadline)
+                        if rebuild or not inflight:
+                            break
+                        wait_s = None
+                        if point_timeout is not None:
+                            wait_s = max(
+                                0.05,
+                                min(dl for _, _, dl in inflight.values())
+                                - time.monotonic())
+                        ready, _ = concurrent.futures.wait(
+                            set(inflight), timeout=wait_s,
+                            return_when=concurrent.futures.FIRST_COMPLETED)
+                        for fut in ready:
+                            job, attempt, _ = inflight.pop(fut)
+                            try:
+                                payload = fut.result()
+                            except BrokenProcessPool:
+                                # a worker died (crash/OOM-kill class) and
+                                # took the pool with it — every in-flight
+                                # chunk is lost.  Alone in flight, the
+                                # chunk IS the culprit: charge it.  With
+                                # company the blame is ambiguous: requeue
+                                # everyone uncharged and probe serially.
+                                lost = [(job, attempt)] + \
+                                    [(j, a) for j, a, _
+                                     in inflight.values()]
+                                inflight.clear()
+                                if len(lost) == 1:
+                                    retry_or_quarantine(
+                                        job, attempt, "crash",
+                                        "worker process died mid-chunk "
+                                        f"(chunk [{chunk_label(job)}])")
+                                else:
+                                    probe = True
+                                    for j, a in lost:
+                                        pending.append((j, a))
+                                        self.stats["sweep_retries"] += 1
+                                rebuild = True
+                                break
+                            except Exception as exc:
+                                retry_or_quarantine(
+                                    job, attempt, "error",
+                                    f"{type(exc).__name__}: {exc} "
+                                    f"(chunk [{chunk_label(job)}])")
+                            else:
+                                merge(payload)
+                                probe = False    # a survivor: end probing
+                        if rebuild:
+                            break
+                        now = time.monotonic()
+                        expired = [f for f, (_, _, dl) in inflight.items()
+                                   if now >= dl]
+                        if expired:
+                            # a hung worker cannot be cancelled: kill the
+                            # pool's processes, charge the timed-out
+                            # chunk(s), requeue the innocent bystanders
+                            # at their SAME attempt and rebuild
+                            kill_pool(pool)
+                            for f in expired:
+                                job, attempt, _ = inflight.pop(f)
+                                self.stats["sweep_timeouts"] += 1
+                                retry_or_quarantine(
+                                    job, attempt, "timeout",
+                                    f"grid point(s) [{chunk_label(job)}] "
+                                    "exceeded the "
+                                    f"{point_timeout:.0f}s/point "
+                                    "wall-clock deadline")
+                            for _, (j, a, _) in inflight.items():
+                                pending.append((j, a))
+                            inflight.clear()
+                            rebuild = True
+                finally:
+                    if rebuild:
+                        kill_pool(pool)
+                        pool.shutdown(wait=False, cancel_futures=True)
+                    else:
+                        pool.shutdown(wait=True)
         finally:
             if masked:
                 main.__file__ = main_file

@@ -1,0 +1,29 @@
+"""Hardware fault injection and graceful degradation (pure stdlib core).
+
+* :class:`FaultSpec` — deterministic, seedable fault scenarios (dead
+  banks / dead PIMcores / transient bus+port error rates with a
+  retry-cost model); an :class:`repro.experiment.backends.EvalSpec` grid
+  axis.
+* :func:`remap_trace` — degraded-mode remapper: re-lowers a Command
+  trace onto the surviving hardware so the schedule verifier still
+  passes on the degraded replay.
+* :mod:`repro.faults.inject` — the deterministic per-burst transient
+  error stream both engines and the verifier share.
+* :mod:`repro.faults.chaos` — test/CI harness injecting worker crashes,
+  hangs and cache corruption to exercise sweep recovery paths.
+"""
+
+from repro.faults.inject import retry_mask_np, transient_planner
+from repro.faults.remap import (FaultDomainError, remap_trace,
+                                surviving_banks, usable_cores)
+from repro.faults.spec import FaultSpec
+
+__all__ = [
+    "FaultSpec",
+    "FaultDomainError",
+    "remap_trace",
+    "surviving_banks",
+    "usable_cores",
+    "transient_planner",
+    "retry_mask_np",
+]

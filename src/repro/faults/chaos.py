@@ -1,0 +1,128 @@
+"""Chaos harness: injected worker crashes/hangs and cache corruption.
+
+Tests and the CI chaos step use this to prove every recovery path in
+``Experiment.sweep(workers=N)`` — retry after a worker crash, pool
+replacement after a hang, quarantine of poison points, disk-cache
+corruption quarantine — actually fires.  Production runs never import
+it: the sweep worker only calls :func:`maybe_chaos` when the
+``REPRO_CHAOS`` environment variable is set.
+
+``REPRO_CHAOS`` holds semicolon-separated directives::
+
+    action:match[:times]
+
+* ``action`` — ``crash`` (the worker process ``os._exit``\\ s) or
+  ``hang`` (sleeps far past any sane point timeout).
+* ``match`` — substring of the grid point's label
+  (``workload/system/gGBUF/lLBUF/...``); empty matches every point.
+* ``times`` — how many times the directive fires (default 1).  Fire
+  counts persist across worker processes via ``O_EXCL`` marker files in
+  ``REPRO_CHAOS_DIR``, so a retried point succeeds on its next attempt —
+  without a marker directory the directive fires every time.
+
+:func:`corrupt_cache_entry` is the cache-corruption injector for tests
+and CI: it truncates one on-disk :class:`~repro.experiment.cache.DiskCache`
+entry in place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import time
+from pathlib import Path
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.experiment.backends import EvalSpec
+    from repro.experiment.cache import DiskCache
+
+ENV_PLAN = "REPRO_CHAOS"
+ENV_DIR = "REPRO_CHAOS_DIR"
+ENV_HANG_S = "REPRO_CHAOS_HANG_S"
+
+CRASH_EXIT_CODE = 17
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosDirective:
+    action: str         # "crash" | "hang"
+    match: str = ""     # substring of the grid-point label; "" = all
+    times: int = 1      # total firings across all worker processes
+
+
+def parse_plan(text: str) -> list[ChaosDirective]:
+    """Parse a ``REPRO_CHAOS`` value into directives (bad entries raise)."""
+    out = []
+    for part in text.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        fields = part.split(":")
+        action = fields[0]
+        if action not in ("crash", "hang"):
+            raise ValueError(f"unknown chaos action {action!r} in {part!r}")
+        match = fields[1] if len(fields) > 1 else ""
+        times = int(fields[2]) if len(fields) > 2 else 1
+        out.append(ChaosDirective(action, match, times))
+    return out
+
+
+def spec_label(spec: "EvalSpec") -> str:
+    """The grid-point label directives match against."""
+    faults = getattr(spec, "faults", None)
+    return (f"{spec.workload}/{spec.system}/g{spec.gbuf_bytes}"
+            f"/l{spec.lbuf_bytes}/{spec.backend}/{spec.policy}"
+            f"/{spec.engine}/{faults.label() if faults else 'none'}")
+
+
+def _claim(directive: ChaosDirective, chaos_dir: str) -> bool:
+    """Atomically claim one firing of ``directive``; False once its
+    ``times`` budget is spent.  O_EXCL marker files make the count safe
+    across concurrent worker processes."""
+    digest = hashlib.sha1(
+        f"{directive.action}:{directive.match}".encode()).hexdigest()[:12]
+    root = Path(chaos_dir)
+    root.mkdir(parents=True, exist_ok=True)
+    for n in range(directive.times):
+        marker = root / f"{digest}.{n}"
+        try:
+            fd = os.open(marker, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            continue
+        os.close(fd)
+        return True
+    return False
+
+
+def maybe_chaos(spec: "EvalSpec") -> None:
+    """Fire the first matching, unspent directive for this grid point.
+    Called from the sweep worker, once per point, only when
+    ``REPRO_CHAOS`` is set."""
+    plan = os.environ.get(ENV_PLAN, "")
+    if not plan:
+        return
+    label = spec_label(spec)
+    chaos_dir = os.environ.get(ENV_DIR, "")
+    for directive in parse_plan(plan):
+        if directive.match and directive.match not in label:
+            continue
+        if chaos_dir and not _claim(directive, chaos_dir):
+            continue
+        if directive.action == "crash":
+            # simulate a hard worker death (segfault/OOM-kill class):
+            # no exception propagates, the pool just breaks
+            os._exit(CRASH_EXIT_CODE)
+        time.sleep(float(os.environ.get(ENV_HANG_S, "3600")))
+
+
+def corrupt_cache_entry(cache: "DiskCache", index: int = 0) -> Path:
+    """Truncate one stored cache entry to garbage (keeping the header
+    bytes short so ``np.load`` fails).  Returns the corrupted path."""
+    paths = sorted(cache.entries())
+    if not paths:
+        raise FileNotFoundError(f"no cache entries under {cache.root}")
+    path = paths[index % len(paths)]
+    path.write_bytes(b"\x00corrupt")
+    return path

@@ -1,0 +1,104 @@
+"""Deterministic transient-error injection shared by both engines and the
+schedule verifier.
+
+The error stream is a pure function of ``(FaultSpec.seed, position)``
+where *position* is the burst's index in the replay stream — the flat
+order both engines visit bursts in after scheduling/batching, which the
+bit-identity contract already pins to be identical between the reference
+and columnar engines (and which :mod:`repro.check.schedule` re-walks).
+Each position hashes through a splitmix64 mix; a burst errors iff its
+64-bit hash falls below ``rate · 2**64`` for its resource's error rate
+(``bus_error_rate`` on the sequential GBUF bus, ``port_error_rate`` on
+bank/core ports; GBcore ops and zero-byte bursts never error).  An
+errored burst pays ``FaultSpec.retry_cycles`` extra on its timeline —
+the detect-and-replay penalty of the retry-cost model.
+
+Two implementations are kept bit-equal by test: a pure-Python path (the
+reference engine and the verifier) and a vectorised NumPy path (the
+columnar engine).  NumPy is imported lazily so this module stays
+importable on the stdlib-only fallback path.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Callable
+
+from repro.faults.spec import FaultSpec
+
+if TYPE_CHECKING:  # pragma: no cover - typing only (numpy is optional)
+    import numpy as np
+
+_MASK = (1 << 64) - 1
+_GOLDEN = 0x9E3779B97F4A7C15
+_MIX1 = 0xBF58476D1CE4E5B9
+_MIX2 = 0x94D049BB133111EB
+
+# repro.sim.burst.RES_SORT_CODE order: bank=0, bus=1, core=2, gbcore=3
+# (restated here so the stdlib path needs no sim import at call time)
+_RESCODE_BY_NAME = {"bank": 0, "bus": 1, "core": 2, "gbcore": 3}
+
+
+def mix64(x: int) -> int:
+    """splitmix64's output mix over one 64-bit lane (pure Python)."""
+    x = (x + _GOLDEN) & _MASK
+    x = ((x ^ (x >> 30)) * _MIX1) & _MASK
+    x = ((x ^ (x >> 27)) * _MIX2) & _MASK
+    return x ^ (x >> 31)
+
+
+def threshold(rate: float) -> int:
+    """Error threshold: a position errors iff its hash < this value.
+    ``rate`` is validated to [0, 1) by :class:`FaultSpec`, so the result
+    always fits 64 bits."""
+    return int(rate * float(1 << 64))
+
+
+def stream_base(seed: int) -> int:
+    """Seed-derived base offset of the per-burst hash stream."""
+    return mix64(seed & _MASK)
+
+
+def transient_planner(faults: FaultSpec) -> Callable[[str, int, int], int]:
+    """Scalar retry oracle: ``extra(resource, position, nbytes)`` returns
+    the retry cycles (0 or ``faults.retry_cycles``) burst *position* pays
+    on ``resource`` (a :class:`repro.sim.burst.Resource` value string).
+    Used by the reference engine and the schedule verifier."""
+    base = stream_base(faults.seed)
+    thr = {"bus": threshold(faults.bus_error_rate),
+           "bank": threshold(faults.port_error_rate),
+           "core": threshold(faults.port_error_rate),
+           "gbcore": 0}
+    retry = faults.retry_cycles
+
+    def extra(resource: str, position: int, nbytes: int) -> int:
+        t = thr.get(resource, 0)
+        if not t or nbytes <= 0:
+            return 0
+        return retry if mix64((base + position) & _MASK) < t else 0
+
+    return extra
+
+
+def retry_mask_np(faults: FaultSpec, rescode: "np.ndarray",
+                  nbytes: "np.ndarray") -> Any:
+    """Vectorised twin of :func:`transient_planner`: a boolean mask over
+    the columnar burst stream (position == array index) marking bursts
+    that error.  Bit-equal to the scalar path by construction (and pinned
+    by test)."""
+    import numpy as np
+
+    n = len(rescode)
+    thr_by_code = np.array(
+        [threshold(faults.port_error_rate),     # 0: bank port
+         threshold(faults.bus_error_rate),      # 1: bus
+         threshold(faults.port_error_rate),     # 2: core port
+         0],                                    # 3: gbcore
+        dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        x = np.uint64(stream_base(faults.seed)) \
+            + np.arange(n, dtype=np.uint64)
+        x = x + np.uint64(_GOLDEN)
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(_MIX1)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(_MIX2)
+        x = x ^ (x >> np.uint64(31))
+    return (x < thr_by_code[rescode]) & (nbytes > 0)

@@ -1,0 +1,167 @@
+"""Degraded-mode remapping: re-lower a ``Command`` trace onto the banks
+and PIMcores that survive a structural :class:`~repro.faults.spec.FaultSpec`.
+
+The remapper rewrites placements only — it never drops payload:
+
+* **sequential commands** (``PIM_BK2GBUF`` / ``PIM_GBUF2BK``) tap banks
+  over the shared bus directly, independent of core liveness.  Dead banks
+  drop out of the placement walk; alive spare banks (not already placed)
+  are appended to restore the stripe width where possible, and the full
+  payload round-robins over whatever survives.
+* **parallel / compute commands** (``PIM_BK2LBUF`` / ``PIM_LBUF2BK`` /
+  ``PIMCORE_CMP``) need a live PIMcore that still owns at least one live
+  bank.  Work shifts from dead cores onto usable spares (capped at the
+  original parallelism), the explicit ``Command.cores`` placement records
+  the surviving physical ids, and each survivor's bank list is the alive
+  subset of its owned range.  For ``PIMCORE_CMP`` the per-core operand
+  stream is rescaled so total DRAM traffic is conserved
+  (``ceil``-inflated by at most ``new_cores - 1`` bytes of padding).
+* ``GBCORE_CMP`` runs in the channel-level GBcore and is untouched.
+
+Every rewritten command re-validates, so the degraded trace is legal
+Command IR and :func:`repro.check.schedule.verify_schedule` passes on its
+replay.  When no banks (or, for parallel work, no usable cores) survive,
+:class:`FaultDomainError` is raised — the scenario has no degraded mode.
+
+Pure stdlib: safe to import from the experiment layer's numpy-free
+fallback path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.commands import CMD, Command, Trace
+from repro.faults.spec import FaultSpec
+from repro.pim.arch import PIMArch
+from repro.pim.events import active_cores
+from repro.pim.timing import banks_touched
+
+_SEQ = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK)
+_PAR = (CMD.PIM_BK2LBUF, CMD.PIM_LBUF2BK)
+
+
+class FaultDomainError(ValueError):
+    """The fault scenario leaves no hardware able to run the trace."""
+
+
+def surviving_banks(arch: PIMArch, faults: FaultSpec) -> list[int]:
+    """Bank ids still alive under ``faults`` (dead ids beyond the channel
+    are ignored)."""
+    dead = set(faults.dead_banks)
+    return [b for b in range(arch.num_banks) if b not in dead]
+
+
+def usable_cores(arch: PIMArch, faults: FaultSpec) -> list[int]:
+    """PIMcore ids that are alive AND still own at least one live bank —
+    a core whose whole bank range died has no near-bank path left."""
+    dead_banks = set(faults.dead_banks)
+    dead_cores = set(faults.dead_cores)
+    bpc = arch.banks_per_pimcore
+    out = []
+    for k in range(arch.num_pimcores):
+        if k in dead_cores:
+            continue
+        if any(b not in dead_banks for b in range(k * bpc, (k + 1) * bpc)):
+            out.append(k)
+    return out
+
+
+def _owned_alive(core: int, arch: PIMArch, dead: set[int],
+                 restrict: set[int] | None) -> list[int]:
+    """Live banks core ``core`` streams through after remap: the original
+    placement restricted to its owned range when that intersection has
+    survivors, else its full owned range minus dead banks (mirroring the
+    fallback in :func:`repro.pim.events.core_banks`, which the rewritten
+    placement must never let reach a dead bank)."""
+    bpc = arch.banks_per_pimcore
+    owned = range(core * bpc, (core + 1) * bpc)
+    if restrict is not None:
+        placed = [b for b in owned if b in restrict and b not in dead]
+        if placed:
+            return placed
+    return [b for b in owned if b not in dead]
+
+
+def _remap_sequential(c: Command, arch: PIMArch, dead: set[int],
+                      alive: list[int]) -> Command:
+    placement = list(c.banks) if c.banks \
+        else list(range(banks_touched(c, arch)))
+    if not any(b in dead for b in placement):
+        return c
+    kept = [b for b in placement if b not in dead]
+    spares = [b for b in alive if b not in placement]
+    new_banks = kept + spares[:len(placement) - len(kept)]
+    return dataclasses.replace(c, banks=tuple(new_banks))
+
+
+def _remap_parallel(c: Command, arch: PIMArch, dead: set[int],
+                    usable: list[int]) -> Command:
+    old = active_cores(c)
+    restrict = set(c.banks) if c.banks else None
+    untouched = (
+        all(k in usable for k in old)
+        and not any(b in dead for k in old
+                    for b in _owned_alive(k, arch, set(), restrict)))
+    if untouched:
+        return c
+
+    # survivors first, then spares, capped at the original parallelism;
+    # a candidate must still resolve to at least one live bank
+    candidates = [k for k in old if k in usable] \
+        + [k for k in usable if k not in old]
+    kept: list[int] = []
+    for k in candidates:
+        if len(kept) == len(old):
+            break
+        if _owned_alive(k, arch, dead, restrict):
+            kept.append(k)
+    if not kept:
+        raise FaultDomainError(
+            f"{c.kind.value} '{c.layer}': no usable PIMcore survives "
+            f"dead_banks={sorted(dead)} dead_cores on {arch.name}")
+    kept.sort()
+    placement = [b for k in kept for b in _owned_alive(k, arch, dead,
+                                                       restrict)]
+    new_n = len(kept)
+    fields: dict = {
+        "concurrent_cores": new_n,
+        "cores": () if kept == list(range(new_n)) else tuple(kept),
+        "banks": tuple(placement),
+    }
+    if c.kind is CMD.PIMCORE_CMP:
+        # conserve total operand traffic: rescale the per-core stream
+        # (ceil models padding the short lanes up to the widest)
+        old_n = len(old)
+        per_core = math.ceil(c.bank_stream_bytes * old_n / new_n)
+        restream = min(per_core,
+                       math.ceil(c.restream_bytes * old_n / new_n))
+        fields["bank_stream_bytes"] = per_core
+        fields["restream_bytes"] = restream
+    return dataclasses.replace(c, **fields)
+
+
+def remap_trace(trace: Trace, arch: PIMArch, faults: FaultSpec) -> Trace:
+    """Re-lower ``trace`` onto the hardware surviving ``faults``.
+
+    Returns a new trace list; commands the faults don't touch are reused
+    by identity.  Every rewritten command is re-validated."""
+    if not faults.has_structural:
+        return trace
+    dead = set(b for b in faults.dead_banks if b < arch.num_banks)
+    alive = surviving_banks(arch, faults)
+    if not alive:
+        raise FaultDomainError(
+            f"all {arch.num_banks} banks dead on {arch.name}")
+    usable = usable_cores(arch, faults)
+    out: Trace = []
+    for c in trace:
+        if c.kind in _SEQ:
+            if c.bytes_total:
+                c = _remap_sequential(c, arch, dead, alive)
+        elif c.kind in _PAR or c.kind is CMD.PIMCORE_CMP:
+            c = _remap_parallel(c, arch, dead, usable)
+        c.validate()
+        out.append(c)
+    return out

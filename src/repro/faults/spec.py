@@ -1,0 +1,101 @@
+"""Deterministic, seedable hardware fault specifications.
+
+:class:`FaultSpec` is the single value the whole fault-injection stack
+keys on.  It describes two orthogonal fault classes:
+
+* **structural** faults — ``dead_banks`` / ``dead_cores`` name DRAM banks
+  and PIMcores that no longer function.  They change *where* work runs:
+  :func:`repro.faults.remap.remap_trace` re-lowers a ``Command`` trace
+  onto the survivors before any engine sees it.
+* **transient** faults — ``bus_error_rate`` / ``port_error_rate`` are
+  per-burst error probabilities on the sequential GBUF bus and the
+  near-bank ports.  They change *how long* work takes: each errored burst
+  pays ``retry_cycles`` extra on its timeline (a detect-and-replay
+  penalty), charged deterministically from ``seed`` and the burst's
+  position in the replay stream (:mod:`repro.faults.inject`), so both
+  engines and the schedule verifier agree on every retry.
+
+A ``FaultSpec`` is frozen and hashable (it becomes part of
+:class:`repro.experiment.backends.EvalSpec`, which is used as a dict
+key), normalises its bank/core tuples to sorted-unique form, and the
+null spec — ``FaultSpec()`` — is the contract point: evaluating with
+``faults=None`` and ``faults=FaultSpec()`` must be bit-identical to
+today's fault-free behaviour.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic hardware fault scenario.
+
+    ``dead_banks`` / ``dead_cores`` are physical ids (normalised to
+    sorted-unique tuples).  Error rates are probabilities in ``[0, 1)``
+    applied per *burst*; ``retry_cycles`` is the flat timeline penalty an
+    errored burst pays; ``seed`` makes the transient error stream
+    reproducible.
+    """
+
+    dead_banks: tuple[int, ...] = ()
+    dead_cores: tuple[int, ...] = ()
+    bus_error_rate: float = 0.0
+    port_error_rate: float = 0.0
+    retry_cycles: int = 32
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "dead_banks",
+                           tuple(sorted(set(int(b) for b in self.dead_banks))))
+        object.__setattr__(self, "dead_cores",
+                           tuple(sorted(set(int(k) for k in self.dead_cores))))
+        if any(b < 0 for b in self.dead_banks):
+            raise ValueError(f"negative bank id in {self.dead_banks}")
+        if any(k < 0 for k in self.dead_cores):
+            raise ValueError(f"negative core id in {self.dead_cores}")
+        for field in ("bus_error_rate", "port_error_rate"):
+            rate = getattr(self, field)
+            if not 0.0 <= rate < 1.0:
+                raise ValueError(f"{field}={rate} outside [0, 1)")
+        if self.retry_cycles < 0:
+            raise ValueError(f"negative retry_cycles={self.retry_cycles}")
+
+    @property
+    def has_structural(self) -> bool:
+        """True when the spec kills banks or cores (trace must be remapped)."""
+        return bool(self.dead_banks or self.dead_cores)
+
+    @property
+    def has_transient(self) -> bool:
+        """True when bursts can error (engines charge retries)."""
+        return self.bus_error_rate > 0.0 or self.port_error_rate > 0.0
+
+    @property
+    def is_null(self) -> bool:
+        """The no-faults spec: must behave bit-identically to ``None``."""
+        return not (self.has_structural or self.has_transient)
+
+    def transient_key(self) -> tuple:
+        """Hashable signature of the transient model only — cache key
+        material for the columnar engine's burst-profile memo."""
+        return (self.bus_error_rate, self.port_error_rate,
+                self.retry_cycles, self.seed)
+
+    def label(self) -> str:
+        """Compact human-readable tag for CSV rows and artifacts."""
+        if self.is_null:
+            return "none"
+        parts = []
+        if self.dead_banks:
+            parts.append("bk" + "+".join(str(b) for b in self.dead_banks))
+        if self.dead_cores:
+            parts.append("co" + "+".join(str(k) for k in self.dead_cores))
+        if self.bus_error_rate:
+            parts.append(f"bus{self.bus_error_rate:g}")
+        if self.port_error_rate:
+            parts.append(f"port{self.port_error_rate:g}")
+        if self.has_transient:
+            parts.append(f"s{self.seed}")
+        return "_".join(parts)

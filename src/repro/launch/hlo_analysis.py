@@ -177,6 +177,12 @@ _DOT = re.compile(r"dot\(\s*%?([\w.\-]+)")
 _LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 
+def _dot_args(body: str) -> str:
+    """The operand list inside ``dot(...)`` — symbol refs contain no
+    parens, so the first ``)`` closes the call."""
+    return body.split(" dot(", 1)[1].split(")", 1)[0]
+
+
 def comp_dot_flops(comp: Computation) -> float:
     syms = _symbol_types(comp)
     flops = 0.0
@@ -190,17 +196,22 @@ def comp_dot_flops(comp: Computation) -> float:
         for _, dims in out_dims[:1]:
             for d in dims:
                 out_elems *= d
-        md = _DOT.search(body)
+        # lhs shape: some XLA versions print operand types inline
+        # (``dot(f32[128,256]{1,0} %a, ...)``), others just ``dot(%a, ...)``
+        args = _dot_args(body)
+        lhs_dims = _shape_dims(args)[:1]
+        if not lhs_dims:
+            md = _DOT.search(body)
+            if md and md.group(1) in syms:
+                lhs_dims = _shape_dims(syms[md.group(1)])[:1]
         contract = 1
-        if md and md.group(1) in syms:
-            lhs_dims = _shape_dims(syms[md.group(1)])
-            mc = _LHS_CDIMS.search(body)
-            if mc and lhs_dims:
-                idxs = [int(i) for i in mc.group(1).split(",") if i != ""]
-                dims = lhs_dims[0][1]
-                for i in idxs:
-                    if i < len(dims):
-                        contract *= dims[i]
+        mc = _LHS_CDIMS.search(body)
+        if mc and lhs_dims:
+            idxs = [int(i) for i in mc.group(1).split(",") if i != ""]
+            dims = lhs_dims[0][1]
+            for i in idxs:
+                if i < len(dims):
+                    contract *= dims[i]
         flops += 2.0 * out_elems * contract
     return flops
 
@@ -220,11 +231,15 @@ def comp_hbm_bytes(comp: Computation) -> float:
             continue
         body = m.group(2)
         total += _shape_bytes(body.split(" dot(")[0])       # output
-        mo = re.search(r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", body)
-        if mo:
-            for operand in mo.groups():
-                if operand in syms:
-                    total += _shape_bytes(syms[operand])
+        args = _dot_args(body)
+        if _SHAPE_RE.search(args):                  # inline operand types
+            total += _shape_bytes(args)
+        else:                                       # bare %syms: look up
+            mo = re.search(r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", body)
+            if mo:
+                for operand in mo.groups():
+                    if operand in syms:
+                        total += _shape_bytes(syms[operand])
     return total
 
 

@@ -29,6 +29,13 @@ from repro.train.trainer import (TrainStepConfig, init_train_state,
                                  make_train_step, state_spec)
 
 
+def _mesh_context(mesh):
+    """``jax.set_mesh`` on newer jax; the Mesh's own (legacy global-mesh)
+    context manager on jax 0.4.x — both scope jit/lower to the mesh."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -83,7 +90,7 @@ def main() -> None:
     count = [0]
 
     def step_and_log(state, batch):
-        with jax.set_mesh(mesh):
+        with _mesh_context(mesh):
             state, metrics = step_fn(state, batch)
         count[0] += 1
         k = count[0]

@@ -134,6 +134,10 @@ def counters_from_sim_result(result: "SimResult",
            pre + "bank_port_busy_cycles":
                sum(result.bank_port_busy.values()),
            pre + "core_busy_cycles": sum(result.core_busy.values())}
+    if result.retried_bursts:
+        # only under active transient-fault injection, so fault-free
+        # counter snapshots stay bit-identical to the pre-faults schema
+        out[pre + "retried_bursts"] = result.retried_bursts
     for k, v in result.bus_busy.items():
         out[f"{pre}bus_busy.{k}"] = v
     for k, v in result.busy_by_kind.items():

@@ -59,6 +59,16 @@ def even_split(nbytes: int, parts: int) -> list[int]:
     return [base + (1 if i < rem else 0) for i in range(parts)]
 
 
+def active_cores(c: Command) -> list[int]:
+    """Physical PIMcore ids a parallel/compute command runs on, in lane
+    order: the explicit ``cores`` placement when present (degraded-mode
+    traces from :mod:`repro.faults.remap`), else the legacy positional
+    range ``[0, concurrent_cores)``."""
+    if c.cores:
+        return list(c.cores)
+    return list(range(max(c.concurrent_cores, 1)))
+
+
 def core_banks(core: int, arch: PIMArch, c: Command) -> list[int]:
     """Banks PIMcore ``core`` streams through for command ``c``: the
     explicit placement restricted to the core's bank range when present
@@ -119,9 +129,9 @@ def predicted_activations(c: Command, arch: PIMArch) -> int:
         if c.bytes_total == 0:
             return 0
         acts = 0
-        for core, core_bytes in enumerate(even_split(c.bytes_total,
-                                                     max(c.concurrent_cores,
-                                                         1))):
+        cores = active_cores(c)
+        for core, core_bytes in zip(cores,
+                                    even_split(c.bytes_total, len(cores))):
             banks = core_banks(core, arch, c)
             acts += sum(len(row_chunks(b, arch.row_bytes))
                         for b in even_split(core_bytes, len(banks)))

@@ -27,6 +27,14 @@ partitions (the hand splits are in the search space and are beaten), both
 under the analytic model and under burst-sim replay.  The greedy rule
 therefore remains the default plan source everywhere; searched plans are
 an opt-in axis.
+
+Caveat under fault injection: the search costs plans on HEALTHY
+hardware.  An ``EvalSpec`` with structural faults replays the
+fault-free-optimal plan through the degraded remapping
+(:mod:`repro.faults.remap`) — it does not re-partition around dead
+banks/cores, so a searched plan's win can shrink (or invert) as banks
+die.  ``benchmarks/degradation_report.py`` measures exactly that slope;
+fault-aware re-planning is an open item (ROADMAP).
 """
 
 from repro.core.fusion import (RECOVERABLE_CODES, group_legality,

@@ -51,7 +51,7 @@ from typing import TYPE_CHECKING, Any
 
 from repro.core.commands import CMD, Command, Trace
 from repro.pim.arch import PIMArch
-from repro.pim.events import core_banks, even_split, row_chunks
+from repro.pim.events import active_cores, core_banks, even_split, row_chunks
 from repro.pim.timing import banks_touched
 
 if TYPE_CHECKING:  # pragma: no cover - typing only (numpy is optional)
@@ -148,13 +148,15 @@ def _lower_parallel(idx: int, c: Command, arch: PIMArch,
     """Near-bank path: even per-core split, then even per-bank split; every
     bank streams its chunks through its own port concurrently.  The
     restream share splits the same way and wraps per-bank."""
-    cores = max(c.concurrent_cores, 1)
+    cores = active_cores(c)
     base = idx * _ROW_SPAN
     ops: list[BurstOp] = []
-    core_restream = even_split(c.restream_bytes, cores)
-    for core, core_bytes in enumerate(even_split(c.bytes_total, cores)):
+    core_restream = even_split(c.restream_bytes, len(cores))
+    core_bytes_split = even_split(c.bytes_total, len(cores))
+    for pos, core in enumerate(cores):
+        core_bytes = core_bytes_split[pos]
         banks = core_banks(core, arch, c)
-        lane_restream = even_split(core_restream[core], len(banks))
+        lane_restream = even_split(core_restream[pos], len(banks))
         for lane, bank_bytes in enumerate(even_split(core_bytes, len(banks))):
             bank = banks[lane]
             fr = _footprint_rows(bank_bytes - lane_restream[lane],
@@ -173,12 +175,11 @@ def _lower_cmp(idx: int, c: Command, arch: PIMArch,
     of its banks at aggregate port bandwidth; rows open sequentially, and
     the restream share (``restream_bytes`` is per-core in CMP context)
     wraps onto the unique weight footprint's rows."""
-    cores = max(c.concurrent_cores, 1)
     fr = _footprint_rows(c.bank_stream_bytes - c.restream_bytes,
                          arch.row_bytes)
     base = idx * _ROW_SPAN
     ops: list[BurstOp] = []
-    for core in range(cores):
+    for core in active_cores(c):
         banks = core_banks(core, arch, c)
         for i, chunk in enumerate(row_chunks(c.bank_stream_bytes,
                                              arch.row_bytes)):
@@ -396,13 +397,15 @@ def _emit_parallel(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
                    out: list, np: Any) -> None:
     """Vectorized :func:`_lower_parallel`: per-core then per-lane even
     split; each lane's chunks stream through its own bank port."""
-    cores = max(c.concurrent_cores, 1)
+    cores = active_cores(c)
     base = idx * _ROW_SPAN
-    core_restream = even_split(c.restream_bytes, cores)
+    core_restream = even_split(c.restream_bytes, len(cores))
+    core_bytes_split = even_split(c.bytes_total, len(cores))
     code = RES_SORT_CODE[Resource.BANK_PORT]
-    for core, core_bytes in enumerate(even_split(c.bytes_total, cores)):
+    for pos, core in enumerate(cores):
+        core_bytes = core_bytes_split[pos]
         banks = core_banks(core, arch, c)
-        lane_restream = even_split(core_restream[core], len(banks))
+        lane_restream = even_split(core_restream[pos], len(banks))
         for lane, bank_bytes in enumerate(even_split(core_bytes,
                                                      len(banks))):
             full, tail = divmod(bank_bytes, arch.row_bytes)
@@ -428,7 +431,6 @@ def _emit_cmp(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
               out: list, np: Any) -> None:
     """Vectorized :func:`_lower_cmp`: every core streams the same chunk
     pattern through its own port; only the bank mapping differs per core."""
-    cores = max(c.concurrent_cores, 1)
     full, tail = divmod(c.bank_stream_bytes, arch.row_bytes)
     n = full + (1 if tail else 0)
     if not n:
@@ -442,7 +444,7 @@ def _emit_cmp(idx: int, c: Command, arch: PIMArch, row_reuse: bool,
     lr = i % fr if row_reuse else i
     row = idx * _ROW_SPAN + lr
     code = RES_SORT_CODE[Resource.CORE_PORT]
-    for core in range(cores):
+    for core in active_cores(c):
         banks = np.asarray(core_banks(core, arch, c), dtype=np.int64)
         out.append((np.full(n, idx, dtype=np.int64),
                     np.full(n, code, dtype=np.int64),

@@ -66,6 +66,7 @@ from repro.sim.burst import BurstOp, Resource, lower_trace
 from repro.sim.scheduler import BATCHING_POLICIES, batch_same_row, command_deps
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.faults.spec import FaultSpec
     from repro.obs.trace import TraceCollector
 
 _TRANSFER = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK,
@@ -86,6 +87,7 @@ class SimResult:
     bank_rows: dict[int, dict[str, int]]  # per-bank {"act","hit","conflict"}
     busy_by_kind: dict[str, int]        # burst cycles per command kind
     events: EventCounts                 # observed event counts (energy input)
+    retried_bursts: int = 0             # transient-fault retries replayed
 
     # the activation/hit totals live in ``events`` (the energy input) —
     # these accessors are views, never a second copy to keep in sync
@@ -118,16 +120,25 @@ def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
              lowered: list[list[BurstOp]] | None = None,
              row_reuse: bool = True,
              prebatched: bool = False,
-             collector: "TraceCollector | None" = None) -> SimResult:
+             collector: "TraceCollector | None" = None,
+             faults: "FaultSpec | None" = None) -> SimResult:
     """Replay a trace.  ``row_reuse`` selects the lowering's row addressing
     when ``lowered`` is not supplied (callers passing a pre-lowered trace
     have already made that choice).  ``prebatched=True`` marks a lowering
     whose ``row-aware`` same-row batching was already applied (e.g. the
     Experiment's memoized ordering) so it is not re-sorted per call.
     ``collector`` (a :class:`repro.obs.trace.TraceCollector`) receives
-    per-burst and per-command timeline events as they replay."""
+    per-burst and per-command timeline events as they replay.  ``faults``
+    applies the transient retry-cost model (structural faults are a trace
+    rewrite — :func:`repro.faults.remap.remap_trace` — applied *before*
+    the engine); with no transient rates the replay is bit-identical to
+    ``faults=None``."""
     if collector is not None:
         from repro.obs.trace import BurstEvent, CommandEvent
+    retry_at = None
+    if faults is not None and faults.has_transient:
+        from repro.faults.inject import transient_planner
+        retry_at = transient_planner(faults)
     deps = command_deps(trace, policy)
     if lowered is None:
         lowered = lower_trace(trace, arch, row_reuse=row_reuse)
@@ -141,7 +152,11 @@ def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
     bank_port_busy: dict[int, int] = {}
     core_busy: dict[int, int] = {}
     bus_busy = {"xfer": 0, "switch": 0, "row": 0}
+    if retry_at is not None:
+        bus_busy["retry"] = 0
     busy_by_kind: dict[str, int] = {}
+    retried = 0
+    position = 0        # flat replay-stream index (transient-error key)
     open_row: dict[int, int] = {}       # bank → currently open row id
     bank_rows: dict[int, dict[str, int]] = {}
     activations = hits = conflicts = 0
@@ -192,6 +207,14 @@ def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
                         events["act"] += 1
                         verdict = "activate"
                     open_row[op.bank] = op.row
+            if retry_at is not None:
+                extra = retry_at(op.resource.value, position, op.nbytes)
+                if extra:
+                    retried += 1
+                    dur += extra
+                    if op.resource is Resource.BUS:
+                        bus_busy["retry"] += extra
+            position += 1
             dur += row_cyc
             finish = start + dur
             free[key] = finish
@@ -241,4 +264,5 @@ def simulate(trace: Trace, arch: PIMArch, policy: str = "serial",
         bank_rows=bank_rows,
         busy_by_kind=busy_by_kind,
         events=events,
+        retried_bursts=retried,
     )

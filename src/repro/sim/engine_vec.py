@@ -53,6 +53,7 @@ from repro.sim.scheduler import BATCHING_POLICIES, batch_same_row_columnar, \
     command_deps
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.faults.spec import FaultSpec
     from repro.obs.trace import TraceCollector
 
 _TRANSFER = (CMD.PIM_BK2GBUF, CMD.PIM_GBUF2BK,
@@ -189,12 +190,16 @@ class _BurstProfile:
     bank_bus_busy: dict[int, int]
     bank_port_busy: dict[int, int]
     core_busy: dict[int, int]
+    retried: int = 0
 
 
-def _burst_profile(cols: ColumnarBursts, arch: PIMArch) -> _BurstProfile:
+def _burst_profile(cols: ColumnarBursts, arch: PIMArch,
+                   faults: "FaultSpec | None" = None) -> _BurstProfile:
+    transient = faults is not None and faults.has_transient
     key = (arch.bank_io_bytes_per_cycle, arch.bus_bytes_per_cycle,
            arch.core_bank_bytes_per_cycle, arch.row_overhead_cycles,
-           arch.row_precharge_cycles)
+           arch.row_precharge_cycles,
+           faults.transient_key() if transient else None)
     cache = getattr(cols, "_profile_cache", None)
     if cache is not None and key in cache:
         return cache[key]
@@ -207,6 +212,17 @@ def _burst_profile(cols: ColumnarBursts, arch: PIMArch) -> _BurstProfile:
     (row_cyc, verdict, activations, hits, conflicts, hit_bits,
      bank_rows) = _resolve_rows(cols, arch)
     dur = transfer + cols.switch + row_cyc
+    retried = 0
+    retry = None
+    if transient:
+        # deterministic transient errors: position == columnar index ==
+        # the reference engine's flat replay-stream counter
+        from repro.faults.inject import retry_mask_np
+        mask = retry_mask_np(faults, cols.rescode, cols.nbytes)
+        retry = np.where(mask, np.int64(faults.retry_cycles),
+                         np.int64(0))
+        dur = dur + retry
+        retried = int(mask.sum())
 
     # segmented per-timeline duration sums.  No sort: the lowering emits
     # each (resource, unit) stream contiguously, so timelines appear as
@@ -254,6 +270,8 @@ def _burst_profile(cols: ColumnarBursts, arch: PIMArch) -> _BurstProfile:
     bus_busy = {"xfer": int(transfer[bus_m].sum()),
                 "switch": int(cols.switch[bus_m].sum()),
                 "row": int(row_cyc[bus_m].sum())}
+    if retry is not None:
+        bus_busy["retry"] = int(retry[bus_m].sum())
     has_bank = cols.bank >= 0
     core_m = cols.rescode == _CORE
     csum = np.concatenate([np.zeros(1, dtype=np.int64), np.cumsum(dur)])
@@ -280,6 +298,7 @@ def _burst_profile(cols: ColumnarBursts, arch: PIMArch) -> _BurstProfile:
         bank_port_busy=_sum_by(cols.bank[~bus_m & has_bank],
                                dur[~bus_m & has_bank]),
         core_busy=_sum_by(cols.unit[core_m], dur[core_m]),
+        retried=retried,
     )
     if cache is None:
         cache = {}
@@ -329,7 +348,8 @@ def simulate_columnar(trace: Trace, arch: PIMArch, policy: str = "serial",
                       cols: ColumnarBursts | None = None,
                       row_reuse: bool = True,
                       prebatched: bool = False,
-                      collector: "TraceCollector | None" = None) -> SimResult:
+                      collector: "TraceCollector | None" = None,
+                      faults: "FaultSpec | None" = None) -> SimResult:
     """Drop-in vectorized equivalent of :func:`repro.sim.engine.simulate`
     over a columnar lowering.  ``cols`` of ``None`` lowers the trace here
     (``row_reuse`` selecting the addressing mode, as in the reference);
@@ -348,7 +368,7 @@ def simulate_columnar(trace: Trace, arch: PIMArch, policy: str = "serial",
         cols = lower_trace_columnar(trace, arch, row_reuse=row_reuse)
     if policy in BATCHING_POLICIES and not prebatched:
         cols = batch_same_row_columnar(cols)
-    p = _burst_profile(cols, arch)
+    p = _burst_profile(cols, arch, faults)
 
     # the only remaining sequential state: ready-time recursion over the
     # dependency DAG and the per-timeline free-time carry-over.  Timelines
@@ -432,4 +452,5 @@ def simulate_columnar(trace: Trace, arch: PIMArch, policy: str = "serial",
         bank_rows={b: dict(v) for b, v in p.bank_rows.items()},
         busy_by_kind=busy_by_kind,
         events=events,
+        retried_bursts=p.retried,
     )

@@ -27,6 +27,7 @@ def test_policies_lower_both_meshes():
     policy must produce FEWER all-gather bytes (the paper's claim)."""
     out = _run("""
 import jax, json
+set_mesh = getattr(jax, 'set_mesh', None) or (lambda m: m)
 from repro.configs import get_config
 from repro.models import build_model
 from repro.core.policies import get_policy
@@ -45,7 +46,7 @@ for pol_name in ['layerwise_tp', 'fused_seq']:
     step = make_train_step(m, TrainStepConfig())
     batch = make_batch_specs(cfg, 8, 32)
     state_shapes = {'params': pshapes, 'opt': jax.eval_shape(adamw_init, pshapes)}
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         comp = jax.jit(step, in_shardings=(
             named(mesh, state_spec(pol, pshapes)),
             named(mesh, pol.batch_spec(batch)))).lower(
@@ -152,8 +153,12 @@ x = jnp.arange(4 * 8, dtype=jnp.float32).reshape(1, 32, 1, 1)
 def f(xs):
     return exchange_halo(xs, 2, 2, 'model')
 
-y = jax.shard_map(f, mesh=mesh, in_specs=(P(None, 'model', None, None),),
-                  out_specs=P(None, 'model', None, None))(x)
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+y = shard_map(f, mesh=mesh, in_specs=(P(None, 'model', None, None),),
+              out_specs=P(None, 'model', None, None))(x)
 y = np.asarray(y).reshape(4, 12)
 # shard 0: top halo zero-filled; shard 1 top halo = last rows of shard 0
 assert (y[0, :2] == 0).all()

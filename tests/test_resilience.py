@@ -1,0 +1,125 @@
+"""Crash-resilient sweeps: checkpoint journal resume, disk-cache
+corruption quarantine, and the chaos harness (worker crash / hang /
+poison point) driving the supervised pool's recovery paths."""
+
+import time
+
+from repro.experiment import Experiment, SweepJournal, spec_signature
+
+GRID = dict(workloads="MobileNetV1", systems=("Fused4", "AiM-like"),
+            backend="analytic")
+
+
+def _exp():
+    return Experiment(disk_cache=None)
+
+
+def _cycles(results):
+    return [r.cycles for r in results]
+
+
+def test_journal_checkpoint_resume(tmp_path):
+    ck = tmp_path / "sweep.jsonl"
+    first = _exp()
+    want = _cycles(first.sweep(**GRID, checkpoint=ck))
+    n = len(ck.read_text().splitlines())
+    assert n >= len(want)
+
+    resumed = _exp()
+    got = resumed.sweep(**GRID, checkpoint=ck)
+    assert _cycles(got) == want
+    assert resumed.stats["journal_restored"] >= len(want)
+    # restored rows are flagged, not re-evaluated
+    assert all(r.detail.get("journal") for r in got[:len(want)])
+
+
+def test_journal_survives_torn_and_garbage_lines(tmp_path):
+    ck = tmp_path / "sweep.jsonl"
+    want = _cycles(_exp().sweep(**GRID, checkpoint=ck))
+    with ck.open("a") as f:
+        f.write("not json at all\n")
+        f.write('{"sig": "abc", "status": "ok"')     # torn write, no \n
+    j = SweepJournal(ck)
+    assert j.dropped_lines == 2 and len(j) > 0
+    resumed = _exp()
+    assert _cycles(resumed.sweep(**GRID, checkpoint=ck)) == want
+    assert resumed.stats["journal_restored"] >= len(want)
+
+
+def test_spec_signature_stable():
+    from repro.experiment.backends import EvalSpec
+    exp = _exp()
+    spec = exp.resolve(EvalSpec(workload="MobileNetV1", system="Fused4"))
+    assert spec_signature(spec) == spec_signature(exp.resolve(spec))
+    assert len(spec_signature(spec)) == 64
+
+
+def test_disk_cache_corruption_quarantined_and_healed(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    from repro.faults.chaos import corrupt_cache_entry
+
+    grid = dict(workloads="MobileNetV1", systems="Fused4",
+                backend="burst-sim", policy="row-aware")
+    cold = Experiment()
+    r0 = cold.sweep(**grid)
+    assert cold.stats["disk_stores"] > 0
+    n_entries = len(cold.disk_cache.entries())
+    bad = corrupt_cache_entry(cold.disk_cache)
+
+    warm = Experiment()
+    r1 = warm.sweep(**grid)
+    assert _cycles(r1) == _cycles(r0)
+    assert warm.stats["disk_corrupt"] > 0
+    assert list((warm.disk_cache.root / ".bad").iterdir())
+    # healed: rebuilt + re-stored under the same content-addressed key
+    assert bad.exists() and len(warm.disk_cache.entries()) == n_entries
+    snap = warm.counters().snapshot("experiment.disk_cache")
+    assert snap["experiment.disk_cache.corrupt"] > 0
+
+    third = Experiment()
+    third.sweep(**grid)
+    assert third.stats["disk_corrupt"] == 0
+    assert third.stats["disk_stores"] == 0
+
+
+def test_chaos_worker_crash_recovers(tmp_path, monkeypatch):
+    want = _cycles(_exp().sweep(**GRID))
+    monkeypatch.setenv("REPRO_CHAOS", "crash:Fused4")
+    monkeypatch.setenv("REPRO_CHAOS_DIR", str(tmp_path / "m"))
+    exp = _exp()
+    res = exp.sweep(**GRID, workers=2, retry_backoff=0.05)
+    assert _cycles(res) == want
+    assert exp.stats["sweep_retries"] > 0
+    assert exp.stats["sweep_quarantined"] == 0 and not exp.failures
+
+
+def test_chaos_worker_hang_times_out_and_recovers(tmp_path, monkeypatch):
+    want = _cycles(_exp().sweep(**GRID))
+    monkeypatch.setenv("REPRO_CHAOS", "hang:Fused4")
+    monkeypatch.setenv("REPRO_CHAOS_DIR", str(tmp_path / "m"))
+    monkeypatch.setenv("REPRO_CHAOS_HANG_S", "120")
+    exp = _exp()
+    t0 = time.monotonic()
+    res = exp.sweep(**GRID, workers=2, point_timeout=5.0, retry_backoff=0.05)
+    assert time.monotonic() - t0 < 60          # deadline, not the hang
+    assert _cycles(res) == want
+    assert exp.stats["sweep_timeouts"] > 0 and exp.stats["sweep_retries"] > 0
+    assert exp.stats["sweep_quarantined"] == 0
+
+
+def test_chaos_poison_point_quarantined(monkeypatch):
+    """A point that crashes on EVERY attempt yields a coded failure row
+    (never aborts the sweep) and the good points still come back right."""
+    want = _cycles(_exp().sweep(**GRID))
+    monkeypatch.setenv("REPRO_CHAOS", "crash:Fused4")   # no marker dir:
+    monkeypatch.delenv("REPRO_CHAOS_DIR", raising=False)  # fires always
+    exp = _exp()
+    res = exp.sweep(**GRID, workers=2, retries=1, retry_backoff=0.05)
+    assert len(res) == len(want)
+    bad = [r for r in res if r.cycles < 0]
+    good = [r for r in res if r.cycles >= 0]
+    assert bad and all(r.config.startswith("FAILED:crash") for r in bad)
+    assert good and all(r.cycles in want for r in good)
+    assert exp.stats["sweep_quarantined"] > 0
+    f = exp.failures[0]
+    assert f.code == "crash" and f.attempts == 2
