@@ -1,8 +1,9 @@
-"""Per-layer bottleneck report for one burst-sim grid point.
+"""Per-layer bottleneck + critical-path report for one burst-sim point.
 
 Replays the point with a :class:`repro.obs.trace.TimelineCollector`
-attached and a profiler active, then writes the observability artifact
-set (``$REPRO_ARTIFACT_DIR``, default ``artifacts/``):
+attached and a profiler active, walks the critical chain over the
+collected stream, and writes the observability artifact set
+(``$REPRO_ARTIFACT_DIR``, default ``artifacts/``):
 
 * ``bottleneck_<workload>_<system>.trace.json`` — Chrome/Perfetto
   ``trace_event`` timeline (one track per bank tap / bus / core; open at
@@ -11,21 +12,33 @@ set (``$REPRO_ARTIFACT_DIR``, default ``artifacts/``):
   snapshot (experiment cache stats + replay breakdown + event counts);
 * ``bottleneck_<workload>_<system>.profile.json`` — the per-phase
   profiling report of the evaluation itself;
+* ``bottleneck_<workload>_<system>.critpath.json`` — the critical-path
+  summary: chain attribution by resource / layer / blocking edge, the
+  verifier-shaped component split, slack, and the what-if table;
+* with ``--diff A B``, ``bottleneck_<workload>_<system>.plandiff.json`` —
+  the structural plan diff (added/removed/shifted work between the two
+  fusion-plan sources, e.g. greedy vs searched).
 
-and prints the per-layer attribution table (bus vs near-bank port vs
-core-streaming cycles, row hit rate, cross-bank bytes — the paper's
-"where do the cycles go" argument, per layer).
+Prints the per-layer attribution table, the critical-path table (which
+(layer, resource) pairs the makespan-defining chain actually runs
+through — busiest is not the same as binding), and the what-if table
+(estimated makespan lower bounds under a 2×/4× bus, free row penalties,
+free retries).
 
 Run:  PYTHONPATH=src python benchmarks/bottleneck_report.py \
-          [workload] [system] [policy]
+          [workload] [system] [policy] [--verify] [--diff greedy searched]
       (defaults: ResNet18_Full Fused16 row-aware)
 
-Runs as a plain script (no ``benchmarks`` package import), so the
-acceptance command above works from a bare checkout.
+``--verify`` cross-checks the walker's blocking-edge labels against the
+:mod:`repro.check` stream verifier (and fails loudly on any finding —
+the CI gate runs with it).  Runs as a plain script (no ``benchmarks``
+package import), so the acceptance command above works from a bare
+checkout.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 from pathlib import Path
@@ -33,21 +46,24 @@ from pathlib import Path
 from repro.experiment import EvalSpec, Experiment
 from repro.experiment.artifacts import default_artifact_dir
 from repro.obs import (TimelineCollector, counters_from_sim_result,
-                       format_table, layer_attribution, profiled,
-                       validate_trace_events, write_perfetto)
+                       critical_path, format_table, layer_attribution,
+                       profiled, validate_trace_events, write_perfetto)
 
 
 def build_report(workload: str, system: str, policy: str,
-                 out_dir: Path) -> dict[str, Path]:
+                 out_dir: Path, verify: bool = False,
+                 diff_plans: tuple[str, str] | None = None
+                 ) -> dict[str, Path]:
     """Evaluate one grid point with full observability attached and write
-    the three artifacts; returns their paths."""
+    the artifact set; returns the paths keyed by artifact kind."""
     # a fresh Experiment: memoized results never re-replay, so the
     # collector must be attached before the point is first evaluated
     exp = Experiment()
     exp.collector = TimelineCollector()
+    spec = EvalSpec(workload=workload, system=system,
+                    backend="burst-sim", policy=policy)
     with profiled() as prof:
-        result = exp.run(EvalSpec(workload=workload, system=system,
-                                  backend="burst-sim", policy=policy))
+        result = exp.run(spec)
 
     stem = f"bottleneck_{workload}_{system}"
     label = f"{workload} on {system} ({policy})"
@@ -62,6 +78,22 @@ def build_report(workload: str, system: str, policy: str,
         meta={"workload": workload, "system": system, "policy": policy,
               "config": result.config, "engine": result.detail["engine"]})
 
+    # walk the ALREADY-collected stream (no second replay): the replayed
+    # trace is the memoized mapping, and the chain must reconcile with
+    # the run's own SimResult
+    crit = critical_path(
+        exp.trace(*_resolved_point(exp, spec)), _arch(exp, spec),
+        collector=exp.collector, policy=policy,
+        result=result.detail["sim"].result, cross_check=verify,
+        meta={"workload": workload, "system": system,
+              "policy": policy, "engine": result.detail["engine"]})
+    assert crit.chain_cycles == result.cycles, \
+        f"chain {crit.chain_cycles} != makespan {result.cycles}"
+    crit_path = crit.write_json(
+        out_dir / f"{stem}.critpath.json",
+        extra={"layer_attribution": layer_attribution(exp.collector),
+               "check": crit.check.to_dict()})
+
     profile_path = prof.write_report(
         out_dir / f"{stem}.profile.json",
         meta={"workload": workload, "system": system, "policy": policy})
@@ -70,15 +102,67 @@ def build_report(workload: str, system: str, policy: str,
           f"makespan {result.cycles} cycles, "
           f"{len(exp.collector)} bursts collected")
     print(format_table(layer_attribution(exp.collector), top=20))
-    return {"trace": trace_path, "counters": counters_path,
-            "profile": profile_path}
+    print(f"\n# critical path — {len(crit.segments)} segments, "
+          f"chain sum {crit.chain_cycles} == makespan (verified"
+          f"{', cross-checked' if verify else ''}); "
+          f"edges {crit.by_edge()}")
+    print(crit.format_table(top=12))
+    print("\n# what-if (estimated LOWER BOUNDS — the chain shrinks, "
+          "another path may bind)")
+    for name, cycles in crit.what_if_table().items():
+        delta = cycles - crit.makespan
+        print(f"  {name:18s} {cycles:>10d} cycles"
+              + (f"  ({delta / crit.makespan:+.1%})" if delta else ""))
+
+    paths = {"trace": trace_path, "counters": counters_path,
+             "critpath": crit_path, "profile": profile_path}
+
+    if diff_plans is not None:
+        plan_a, plan_b = diff_plans
+        d = exp.diff(EvalSpec(workload=workload, system=system,
+                              backend="burst-sim", policy=policy,
+                              plan=plan_a),
+                     EvalSpec(workload=workload, system=system,
+                              backend="burst-sim", policy=policy,
+                              plan=plan_b))
+        print(f"\n# plan diff ({plan_a} -> {plan_b})")
+        print(d.format_table(top=12))
+        paths["plandiff"] = d.write_json(
+            out_dir / f"{stem}.plandiff.json",
+            extra={"workload": workload, "system": system,
+                   "policy": policy})
+    return paths
+
+
+def _resolved_point(exp: Experiment,
+                    spec: EvalSpec) -> tuple[str, str, int, int]:
+    r = exp.resolve(spec)
+    return r.workload, r.system, r.gbuf_bytes, r.lbuf_bytes
+
+
+def _arch(exp: Experiment, spec: EvalSpec):
+    r = exp.resolve(spec)
+    return exp.systems.get(r.system).make_arch(r.gbuf_bytes, r.lbuf_bytes)
 
 
 def main(argv: list[str]) -> None:
-    workload = argv[1] if len(argv) > 1 else "ResNet18_Full"
-    system = argv[2] if len(argv) > 2 else "Fused16"
-    policy = argv[3] if len(argv) > 3 else "row-aware"
-    paths = build_report(workload, system, policy, default_artifact_dir())
+    parser = argparse.ArgumentParser(
+        description="per-layer bottleneck + critical-path report for one "
+                    "burst-sim grid point")
+    parser.add_argument("workload", nargs="?", default="ResNet18_Full")
+    parser.add_argument("system", nargs="?", default="Fused16")
+    parser.add_argument("policy", nargs="?", default="row-aware")
+    parser.add_argument("--verify", action="store_true",
+                        help="cross-check the walker against the "
+                             "repro.check stream verifier")
+    parser.add_argument("--diff", nargs=2, metavar=("PLAN_A", "PLAN_B"),
+                        help="additionally diff two fusion-plan sources "
+                             "(e.g. --diff greedy searched)")
+    args = parser.parse_args(argv[1:])
+    paths = build_report(args.workload, args.system, args.policy,
+                         default_artifact_dir(), verify=args.verify,
+                         diff_plans=None if args.diff is None
+                         else (args.diff[0], args.diff[1]))
     for kind, path in paths.items():
         print(f"[bottleneck_report] wrote {kind}: {path}", file=sys.stderr)
 

@@ -16,9 +16,14 @@ zero-fault point:
 
 The interesting output is the RELATIVE slope: a steeper fused curve
 quantifies the fragility cost of bank-affinity, a flatter one shows the
-remapper amortizing it.
+remapper amortizing it — and each point now carries its critical-path
+split (``crit=bus/port/retry`` share of the makespan-defining chain,
+from :meth:`Experiment.critical_path` over the degraded replay), so the
+slope comes with its mechanism: remapped halo traffic shows up as a
+growing bus share, a shrunken compute fleet as a growing port share.
 
 Run:  PYTHONPATH=src python -m benchmarks.degradation_report [workload]
+          [--policy P] [--row-reuse | --no-row-reuse]
 CSV rows (``name,us_per_call,derived``) go to stdout, the table to
 stderr, and every grid point lands in
 ``$REPRO_ARTIFACT_DIR/degradation_report.csv`` for the figure scripts.
@@ -26,6 +31,7 @@ stderr, and every grid point lands in
 
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -38,36 +44,57 @@ SYSTEMS = ("Fused16", "AiM-like")        # fused vs layer-by-layer
 DEAD_BANK_COUNTS = (0, 1, 2, 4, 6)
 
 
+def _crit_share(exp: Experiment, workload: str, system: str, policy: str,
+                row_reuse: bool, faults: FaultSpec | None) -> str:
+    """``bus/port/retry`` share of the critical chain at one point —
+    the explanation column (what the makespan-defining chain runs on)."""
+    rep = exp.critical_path(workload=workload, system=system,
+                            policy=policy, row_reuse=row_reuse,
+                            faults=faults)
+    res = rep.by_resource()
+    retry = rep.components()["retry"]
+    total = max(rep.makespan, 1)
+    return (f"{res.get('bus', 0) / total:.0%}/"
+            f"{res.get('bank', 0) / total:.0%}/"
+            f"{retry / total:.0%}")
+
+
 def run_report(workload: str = WORKLOAD,
                dead_bank_counts: tuple = DEAD_BANK_COUNTS,
-               exp: Experiment | None = None) -> list[str]:
+               exp: Experiment | None = None,
+               policy: str = "row-aware",
+               row_reuse: bool = True) -> list[str]:
     exp = exp if exp is not None else default_experiment()
     rows: list[str] = []
     results = []
-    print(f"== degradation curves: {workload}, row-aware burst-sim, "
-          f"verify=on ==", file=sys.stderr)
+    print(f"== degradation curves: {workload}, {policy} burst-sim, "
+          f"row_reuse={row_reuse}, verify=on ==", file=sys.stderr)
     for system in SYSTEMS:
         t0 = time.perf_counter()
         points = []
         for n in dead_bank_counts:
             faults = FaultSpec(dead_banks=tuple(range(n))) if n else None
             r = exp.run(workload=workload, system=system,
-                        backend="burst-sim", policy="row-aware",
-                        verify=True, faults=faults)
-            points.append((n, r))
+                        backend="burst-sim", policy=policy,
+                        row_reuse=row_reuse, verify=True, faults=faults)
+            crit = _crit_share(exp, workload, system, policy, row_reuse,
+                               faults)
+            points.append((n, r, crit))
             results.append(r)
         us = (time.perf_counter() - t0) * 1e6
         base = points[0][1]
         curve = []
-        for n, r in points:
+        for n, r, crit in points:
             cyc = r.cycles / max(base.cycles, 1)
             enj = r.energy_nj / max(base.energy_nj, 1e-9)
-            curve.append((n, cyc, enj))
+            curve.append((n, cyc, enj, crit))
             print(f"  {system:>9s} dead={n:2d}  cycles={r.cycles:>10d} "
                   f"({cyc:6.3f}x)  energy={r.energy_nj:>12.0f} nJ "
-                  f"({enj:6.3f}x)", file=sys.stderr)
-        derived = ";".join(f"dead{n}={cyc:.4f}x/{enj:.4f}x"
-                           for n, cyc, enj in curve)
+                  f"({enj:6.3f}x)  crit bus/port/retry={crit}",
+                  file=sys.stderr)
+        derived = ";".join(
+            f"dead{n}={cyc:.4f}x/{enj:.4f}x/crit={crit}"
+            for n, cyc, enj, crit in curve)
         rows.append(f"degradation/{workload}/{system},{us:.0f},{derived}")
     csv_path = default_artifact_dir() / "degradation_report.csv"
     write_results_csv(csv_path, results, exp)
@@ -76,9 +103,19 @@ def run_report(workload: str = WORKLOAD,
 
 
 def main() -> None:
-    workload = sys.argv[1] if len(sys.argv) > 1 else WORKLOAD
+    parser = argparse.ArgumentParser(
+        description="degraded-mode (dead-bank) curves with critical-path "
+                    "attribution")
+    parser.add_argument("workload", nargs="?", default=WORKLOAD)
+    parser.add_argument("--policy", default="row-aware",
+                        choices=("serial", "overlap", "row-aware"))
+    parser.add_argument("--row-reuse", default=True,
+                        action=argparse.BooleanOptionalAction,
+                        help="row-reuse lowering mode (default: on)")
+    args = parser.parse_args()
     print("name,us_per_call,derived")
-    for row in run_report(workload):
+    for row in run_report(args.workload, policy=args.policy,
+                          row_reuse=args.row_reuse):
         print(row)
 
 

@@ -25,7 +25,12 @@ Measured in one run, so the speedup numbers are internally consistent:
   vs the same replay with a TimelineCollector attached plus the full
   :func:`repro.check.replay_and_verify` audit (what an
   ``EvalSpec(verify=True)`` evaluation pays on top of replay).  Under
-  ``--check`` the audit must also come back finding-free.
+  ``--check`` the audit must also come back finding-free;
+* **critpath** — critical-path walker overhead: a collected columnar
+  replay vs the backward chain walk over its stream
+  (:func:`repro.obs.critpath.critical_path`) — what
+  ``Experiment.critical_path`` pays on top of its replay.  Under
+  ``--check`` the walked chain must sum to the replayed makespan.
 
 ``BENCH_sim.json`` is a HISTORY: every run appends one entry stamped with
 the git commit and UTC date, so the bench trajectory rides along in the
@@ -220,6 +225,42 @@ def bench_verify(trace, arch) -> dict:
     }
 
 
+def bench_critpath(trace, arch) -> dict:
+    """Critical-path walker overhead on the bench point: a collected
+    columnar replay (the stream the walker consumes) vs the backward
+    walk itself — ``overhead_x`` is walk time over collect time, i.e.
+    what an ``Experiment.critical_path`` call pays on top of its
+    replay."""
+    from repro.obs.critpath import critical_path
+    from repro.obs.trace import TimelineCollector
+
+    collector = TimelineCollector()
+    last: dict = {}
+
+    def collect() -> None:
+        collector.clear()
+        last["result"] = simulate_columnar(trace, arch, "row-aware",
+                                           collector=collector)
+
+    t_collect = _best_of(collect)
+    rep = None
+
+    def walk() -> None:
+        nonlocal rep
+        rep = critical_path(trace, arch, collector=collector,
+                            policy="row-aware", result=last["result"])
+
+    t_walk = _best_of(walk)
+    return {
+        "policy": "row-aware",
+        "collect_s": round(t_collect, 4),
+        "walk_s": round(t_walk, 4),
+        "overhead_x": round(t_walk / t_collect, 2),
+        "chain_segments": len(rep.segments),
+        "chain_ok": rep.chain_cycles == last["result"].makespan,
+    }
+
+
 def bench_sim_sweep() -> dict:
     from benchmarks.sim_sweep import run_sweep
     times = {}
@@ -276,6 +317,7 @@ def main(argv: list[str] | None = None) -> int:
         "sim_sweep": bench_sim_sweep(),
         "sweep_parallel": bench_parallel_sweep(),
         "verify": bench_verify(trace, arch),
+        "critpath": bench_critpath(trace, arch),
     }
     doc = load_history()
     doc["history"].append(entry)
@@ -303,6 +345,10 @@ def main(argv: list[str] | None = None) -> int:
         if not entry["verify"]["ok"]:
             print(f"[perf_bench] FAIL: schedule verification found "
                   f"{entry['verify']['findings']} issue(s)", file=sys.stderr)
+            return 1
+        if not entry["critpath"]["chain_ok"]:
+            print("[perf_bench] FAIL: critical-path chain does not sum "
+                  "to the replayed makespan", file=sys.stderr)
             return 1
         print("[perf_bench] regression + verification checks passed",
               file=sys.stderr)

@@ -11,7 +11,11 @@ back into figures under ``<artifact_dir>/figs/``:
   no normalized columns;
 * Pareto CSVs (a ``dominated`` column) → cycles-vs-energy scatter with
   the frontier highlighted;
-* plan JSONs    → searched-vs-greedy cost bar chart across workloads.
+* plan JSONs    → searched-vs-greedy cost bar chart across workloads;
+* critpath JSONs (``bottleneck_*.critpath.json``) → stacked per-layer
+  resource bars (bus / near-bank port / core busy cycles from the
+  attribution table) with the layer's critical-path share overlaid — the
+  figure that separates "busiest" from "binding".
 
 matplotlib is OPTIONAL: without it the driver prints the same summaries
 as text and exits 0 (CI's pure-stdlib entry-points job runs it that way),
@@ -133,6 +137,51 @@ def plot_plan_jsons(paths: list[Path], plt, out_dir: Path) -> str:
     return f"{len(records)} plan artifacts: " + "; ".join(summary)
 
 
+def plot_critpath_json(path: Path, plt, out_dir: Path) -> str:
+    """Stacked per-layer resource bars + critical-path share, from one
+    ``bottleneck_*.critpath.json`` artifact (attribution rides along
+    under ``layer_attribution``, chain shares under ``by_layer``)."""
+    import json
+    doc = json.loads(path.read_text())
+    rows = doc.get("layer_attribution") or []
+    makespan = max(doc.get("makespan", 0), 1)
+    crit = doc.get("by_layer", {})
+    rows = sorted(rows, key=lambda r: -(r["bus_cycles"] + r["port_cycles"]
+                                        + r["core_cycles"]))[:16]
+    summary = ", ".join(
+        f"{layer.split(':')[-1]}={cycles / makespan:.0%}"
+        for layer, cycles in sorted(crit.items(),
+                                    key=lambda kv: -kv[1])[:4])
+    if plt is not None and rows:
+        import numpy as np  # matplotlib implies numpy
+        labels = [r["layer"].split(":")[-1] for r in rows]
+        x = np.arange(len(rows))
+        bus = np.array([r["bus_cycles"] for r in rows])
+        port = np.array([r["port_cycles"] for r in rows])
+        core = np.array([r["core_cycles"] for r in rows])
+        share = np.array([crit.get(r["layer"], 0) / makespan
+                          for r in rows])
+        fig, ax = plt.subplots(figsize=(max(6, 0.55 * len(rows)), 4.5))
+        ax.bar(x, bus, label="bus (shared)")
+        ax.bar(x, port, bottom=bus, label="near-bank port")
+        ax.bar(x, core, bottom=bus + port, label="PIMcore port")
+        ax.set_xticks(x)
+        ax.set_xticklabels(labels, rotation=60, ha="right", fontsize=7)
+        ax.set_ylabel("busy cycles")
+        ax2 = ax.twinx()
+        ax2.plot(x, share, "k.--", label="critical-path share")
+        ax2.set_ylabel("share of makespan on the critical path")
+        ax2.set_ylim(0, max(share.max() * 1.2, 0.05))
+        ax.set_title(f"{path.stem} — per-layer resource busy vs "
+                     "critical share")
+        ax.legend(loc="upper right", fontsize=7)
+        fig.tight_layout()
+        fig.savefig(out_dir / f"{path.stem}.png", dpi=120)
+        plt.close(fig)
+    return (f"{path.name}: makespan {doc.get('makespan')}, "
+            f"top critical layers {summary or 'n/a'}")
+
+
 def main(argv: list[str] | None = None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     art_dir = Path(argv[0]) if argv else default_artifact_dir()
@@ -150,13 +199,16 @@ def main(argv: list[str] | None = None) -> int:
 
     csvs = sorted(art_dir.glob("*.csv"))
     plans = sorted(art_dir.glob("plan_*.json"))
-    if not csvs and not plans:
+    critpaths = sorted(art_dir.glob("*.critpath.json"))
+    if not csvs and not plans and not critpaths:
         print(f"no artifacts under {art_dir}", file=sys.stderr)
         return 1
     for path in csvs:
         print(plot_results_csv(path, plt, out_dir))
     if plans:
         print(plot_plan_jsons(plans, plt, out_dir))
+    for path in critpaths:
+        print(plot_critpath_json(path, plt, out_dir))
     if plt is not None:
         made = sorted(p.name for p in out_dir.glob("*.png"))
         print(f"wrote {len(made)} figures to {out_dir}")

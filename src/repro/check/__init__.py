@@ -24,14 +24,15 @@ from repro.check.plan_lint import (lint_plan_overrides, lint_plan_record,
                                    lint_plan_sig)
 from repro.check.report import (CheckError, CheckReport, Finding,
                                 merge_reports)
-from repro.check.schedule import (replay_and_verify, verify_schedule,
-                                  verify_stream)
+from repro.check.schedule import (burst_components, replay_and_verify,
+                                  verify_schedule, verify_stream)
 from repro.check.trace_lint import lint_command, lint_trace
 
 __all__ = [
     "CheckError",
     "CheckReport",
     "Finding",
+    "burst_components",
     "lint_command",
     "lint_plan_overrides",
     "lint_plan_record",

@@ -201,19 +201,24 @@ def _check_burst_chaining(bursts: Sequence["BurstEvent"],
         free[key] = b.start + b.duration
 
 
-def _check_durations(bursts: Sequence["BurstEvent"], arch: PIMArch,
-                     out: _Capped,
-                     faults: "FaultSpec | None" = None) -> None:
-    """Re-derive each duration from the burst's own fields: transfer at
-    the resource bandwidth, the bus re-target charge on the stream-first
-    visit to each (command, bank), the row charge the verdict implies,
-    and — under a transient ``faults`` model — the deterministic retry
-    charge keyed by the burst's stream position."""
+def burst_components(bursts: Sequence["BurstEvent"], arch: PIMArch,
+                     faults: "FaultSpec | None" = None
+                     ) -> list[tuple[int, int, int, int]]:
+    """Per-burst ``(transfer, switch, row, retry)`` cycles re-derived from
+    each event's own fields — the engines' duration recipe rebuilt from
+    first principles: transfer at the resource bandwidth, the bus
+    re-target charge on the stream-first visit to each (command, bank),
+    the row charge the verdict implies, and — under a transient ``faults``
+    model — the deterministic retry charge keyed by the burst's stream
+    position.  Shared by :func:`verify_schedule`'s duration check and the
+    :mod:`repro.obs.critpath` walker's what-if component split, so the
+    two can never disagree about where a burst's cycles come from."""
     seen_bus: set[tuple[int, int]] = set()
     retry_at = None
     if faults is not None and faults.has_transient:
         from repro.faults.inject import transient_planner
         retry_at = transient_planner(faults)
+    out: list[tuple[int, int, int, int]] = []
     for i, b in enumerate(bursts):
         bw = _bandwidth(b.resource, arch)
         transfer = math.ceil(b.nbytes / bw) if b.nbytes and bw else 0
@@ -229,6 +234,17 @@ def _check_durations(bursts: Sequence["BurstEvent"], arch: PIMArch,
         elif b.verdict == "conflict":
             row = arch.row_overhead_cycles + arch.row_precharge_cycles
         retry = retry_at(b.resource, i, b.nbytes) if retry_at else 0
+        out.append((transfer, switch, row, retry))
+    return out
+
+
+def _check_durations(bursts: Sequence["BurstEvent"], arch: PIMArch,
+                     out: _Capped,
+                     faults: "FaultSpec | None" = None) -> None:
+    """Every duration must equal the :func:`burst_components` sum."""
+    components = burst_components(bursts, arch, faults)
+    for i, b in enumerate(bursts):
+        transfer, switch, row, retry = components[i]
         expect = transfer + switch + row + retry
         if b.duration != expect:
             out.add("burst-duration",

@@ -299,6 +299,25 @@ class BurstSimBackend:
                         prebatched=True, collector=collector,
                         faults=spec.faults)
 
+    def collect(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
+                ctx: EvalContext | None = None,
+                collector: Any = None) -> tuple[Trace, Any]:
+        """Replay one grid point streaming into ``collector`` and return
+        ``(replayed trace, SimResult)`` — the replayed trace is the
+        DEGRADED one under structural faults, i.e. what the engine and any
+        downstream analysis (:mod:`repro.obs.critpath`) must agree on.
+        Unlike :meth:`evaluate` this is never memoized at the result
+        layer, so the stream is always freshly collected; lowerings still
+        come from the driver's memo caches via ``ctx``."""
+        from repro.obs.profile import span
+
+        engine = resolve_engine(spec.engine)
+        trace = _degraded_trace(trace, arch, spec, ctx)
+        with span("backend.collect", engine=engine, policy=spec.policy):
+            result = self._replay(trace, arch, spec, engine, ctx,
+                                  collector=collector)
+        return trace, result
+
     def evaluate(self, trace: Trace, arch: PIMArch, spec: EvalSpec,
                  ctx: EvalContext | None = None) -> EvalResult:
         # local import: keeps the analytic path importable without repro.sim

@@ -593,6 +593,90 @@ class Experiment:
                                                row_reuse=result.spec.row_reuse,
                                                engine=result.spec.engine))
 
+    # ------------------------------------------------------------------
+    # stream analysis: critical path & structural diff
+    # ------------------------------------------------------------------
+
+    def _collect_stream(self, spec: EvalSpec | None = None,
+                        **kwargs) -> tuple[EvalSpec, Trace, PIMArch,
+                                           Any, Any]:
+        """Freshly replay one grid point with a
+        :class:`~repro.obs.trace.TimelineCollector` attached and return
+        ``(resolved spec, replayed trace, arch, SimResult, collector)``.
+        Analysis needs the full replay-order event stream, which memoized
+        :meth:`run` results do not carry — so this always replays, but
+        through :meth:`BurstSimBackend.collect` with ``ctx=self``, reusing
+        every memoized lowering / batching / degraded-trace derivation
+        (and priming the on-disk cache like :meth:`run` does).  The
+        backend is forced to ``burst-sim`` — the analytic model has no
+        event stream to analyze."""
+        from repro.obs.trace import TimelineCollector
+        if spec is None:
+            spec = EvalSpec(backend="burst-sim", **kwargs)
+        elif kwargs:
+            spec = dataclasses.replace(spec, **kwargs)
+        spec = self.resolve(dataclasses.replace(spec, backend="burst-sim"))
+        backend = self.backends.get("burst-sim")
+        sys_spec = self.systems.get(spec.system)
+        arch = sys_spec.make_arch(spec.gbuf_bytes, spec.lbuf_bytes)
+        trace = self.trace(spec.workload, spec.system, spec.gbuf_bytes,
+                           spec.lbuf_bytes, plan=spec.plan)
+        if (self.disk_cache is not None
+                and resolve_engine(spec.engine) == "columnar"
+                and (spec.faults is None
+                     or not spec.faults.has_structural)):
+            self._disk_sync(spec, trace, arch)
+        collector = TimelineCollector()
+        replayed, result = backend.collect(trace, arch, spec, ctx=self,
+                                           collector=collector)
+        return spec, replayed, arch, result, collector
+
+    def critical_path(self, spec: EvalSpec | None = None, *,
+                      cross_check: bool = False, **kwargs) -> Any:
+        """Replay one grid point (``EvalSpec`` or its fields as kwargs)
+        and walk its critical chain —
+        :func:`repro.obs.critpath.critical_path` over a fresh collected
+        stream, reconciled against the replay's ``SimResult``.
+        ``cross_check=True`` additionally runs the :mod:`repro.check`
+        stream verifier first, cross-checking the walker's blocking-edge
+        labels against the independent dependency / row replay."""
+        from repro.obs.critpath import critical_path as _walk
+        spec, trace, arch, result, collector = \
+            self._collect_stream(spec, **kwargs)
+        meta = {"workload": spec.workload, "system": spec.system,
+                "policy": spec.policy, "row_reuse": spec.row_reuse,
+                "engine": resolve_engine(spec.engine), "plan": spec.plan}
+        if spec.faults is not None:
+            meta["faults"] = spec.faults.label()
+        return _walk(trace, arch, collector=collector, policy=spec.policy,
+                     faults=spec.faults, result=result,
+                     cross_check=cross_check, meta=meta)
+
+    def diff(self, spec_a: EvalSpec, spec_b: EvalSpec, *,
+             label_a: str | None = None,
+             label_b: str | None = None) -> Any:
+        """Structurally diff two grid points' replays
+        (:func:`repro.obs.diff.diff_timelines`): added / removed /
+        shifted work by (aligned layer, kind, bank) provenance plus
+        per-resource and makespan deltas.  Default labels name the spec
+        fields that differ (``plan=greedy`` vs ``plan=searched``)."""
+        from repro.obs.diff import diff_timelines
+        ra = self._collect_stream(spec_a)
+        rb = self._collect_stream(spec_b)
+        if label_a is None or label_b is None:
+            sa, sb = ra[0], rb[0]
+            fields = [f.name for f in dataclasses.fields(EvalSpec)
+                      if getattr(sa, f.name) != getattr(sb, f.name)]
+            if fields:
+                la = ",".join(f"{n}={getattr(sa, n)}" for n in fields)
+                lb = ",".join(f"{n}={getattr(sb, n)}" for n in fields)
+            else:
+                la, lb = "a", "b"
+            label_a = la if label_a is None else label_a
+            label_b = lb if label_b is None else label_b
+        return diff_timelines(ra[4], rb[4], label_a=label_a,
+                              label_b=label_b)
+
     def sweep(self,
               workloads: str | Iterable[str] | None = None,
               systems: str | Iterable[str] | None = None,

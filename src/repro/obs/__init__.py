@@ -1,6 +1,6 @@
 """``repro.obs`` — observability for the simulation/evaluation stack.
 
-Four pieces, all zero-overhead when off:
+Collection, all zero-overhead when off:
 
 * :mod:`repro.obs.trace` — the :class:`TraceCollector` protocol, the
   standard :class:`TimelineCollector`, and the bounded, process-mergeable
@@ -19,8 +19,17 @@ Four pieces, all zero-overhead when off:
   ``Experiment.run/sweep``, the backends and the ``repro.plan`` search,
   with aggregated per-phase reports.
 
-:mod:`repro.obs.bottleneck` folds a collected stream into the per-layer
-attribution table behind ``benchmarks/bottleneck_report.py``.
+And analysis on top of the collected streams:
+
+* :mod:`repro.obs.bottleneck` — the per-layer busy-time attribution
+  table behind ``benchmarks/bottleneck_report.py``;
+* :mod:`repro.obs.critpath` — the critical-path walker: the backward
+  blocking-edge chain that tiles ``[0, makespan]`` exactly, slack
+  attribution, what-if lower bounds, and the foldable
+  :class:`ChainSummaryCollector`;
+* :mod:`repro.obs.diff` — structural trace/counter diffing by
+  ``(aligned layer, kind, bank)`` provenance: added / removed / shifted
+  work and per-resource deltas between two replays.
 
 Everything here is pure stdlib — attaching observability never adds a
 dependency the reference engine doesn't already have.
@@ -30,6 +39,10 @@ from repro.obs.bottleneck import base_layer, format_table, layer_attribution
 from repro.obs.counters import (CounterNamespace, CounterRegistry,
                                 counters_from_events,
                                 counters_from_sim_result)
+from repro.obs.critpath import (ChainSegment, ChainSummaryCollector,
+                                CriticalPathReport, critical_path)
+from repro.obs.diff import (CounterDiff, DiffEntry, TraceDiff, align_layer,
+                            diff_counters, diff_timelines)
 from repro.obs.perfetto import (trace_event_json, validate_trace_events,
                                 write_perfetto)
 from repro.obs.profile import (Profiler, Span, active_profiler, profiled,
@@ -39,11 +52,13 @@ from repro.obs.trace import (VERDICT_NAMES, BurstEvent, CommandEvent,
                              TimelineCollector, TraceCollector)
 
 __all__ = [
-    "BurstEvent", "CommandEvent", "CounterNamespace", "CounterRegistry",
-    "FoldingCollector", "Profiler", "Span", "SummaryCollector",
-    "TimelineCollector", "TraceCollector",
-    "VERDICT_NAMES", "active_profiler", "base_layer",
-    "counters_from_events", "counters_from_sim_result", "format_table",
+    "BurstEvent", "ChainSegment", "ChainSummaryCollector", "CommandEvent",
+    "CounterDiff", "CounterNamespace", "CounterRegistry",
+    "CriticalPathReport", "DiffEntry", "FoldingCollector", "Profiler",
+    "Span", "SummaryCollector", "TimelineCollector", "TraceCollector",
+    "TraceDiff", "VERDICT_NAMES", "active_profiler", "align_layer",
+    "base_layer", "counters_from_events", "counters_from_sim_result",
+    "critical_path", "diff_counters", "diff_timelines", "format_table",
     "layer_attribution", "profiled", "span", "trace_event_json",
     "validate_trace_events", "write_perfetto",
 ]

@@ -1,0 +1,548 @@
+"""Critical-path analysis over a collected replay: why THIS makespan.
+
+A collected event stream (:class:`~repro.obs.trace.TimelineCollector`)
+records *when* every burst ran; this module reconstructs *why*.  Both
+engines schedule deterministically over a timing-independent structure:
+a command issues ``cmd_issue_cycles`` after its policy dependencies
+(:func:`repro.sim.scheduler.command_deps`) retire, and each of its bursts
+starts at ``max(command issue, timeline free)`` in lowering order.  Every
+instant a burst waits for is therefore exactly some other event's finish,
+so walking backward from the makespan-defining burst through whichever
+edge was binding — **resource** occupancy (the previous burst on the same
+bus tap / bank port / core port), command **issue** (the controller
+charge), or a **dependency** (the policy hazard edge whose retire set the
+command's ready time) — yields a contiguous segment chain that tiles
+``[0, makespan]``: the durations sum EXACTLY to the makespan, by
+construction, and :func:`critical_path` asserts it.
+
+Per-burst durations are split into their transfer / bus-switch /
+row-penalty / fault-retry components by the *verifier's* own recipe
+(:func:`repro.check.schedule.burst_components` — the same re-derivation
+``verify_schedule`` gates on), so row reopens (ACTIVATE / CONFLICT) and
+transient retries on the critical path are attributed, not lumped into
+"busy".  Because the schedule structure is timing-independent, the
+what-if estimators (:meth:`CriticalPathReport.what_if`: a wider bus, free
+retries, free row penalties) are true LOWER BOUNDS on the modified
+scenario's replayed makespan: shrinking chain segments can only leave the
+longest path at least as long as the shrunk chain.  They are estimates,
+not replays — after a change a *different* chain usually binds, so the
+real makespan lands between the estimate and the original.
+
+An inconsistent or incomplete stream (a saved artifact missing command
+events, truncated bursts, tampered starts) surfaces as a coded
+:class:`~repro.check.report.CheckError` (codes ``critpath-empty`` /
+``critpath-incomplete`` / ``critpath-broken-chain`` /
+``critpath-makespan``) instead of a silently wrong path; pass
+``cross_check=True`` to additionally run the stream through
+:func:`repro.check.schedule.verify_stream` first, cross-checking the
+walker's blocking-edge labels against the verifier's independent
+dependency / row-state replay.
+
+:class:`ChainSummaryCollector` is the bounded, process-mergeable
+(:class:`~repro.obs.trace.FoldingCollector`) companion: it cannot carry a
+full chain across a ``sweep(workers=N)`` pool, but folds the makespan-
+defining command and the per-resource latest finish — where the critical
+chain *ends* — in O(layers × resources) state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from pathlib import Path
+from typing import TYPE_CHECKING, Any, NamedTuple, Sequence
+
+from repro.check.report import CheckReport
+from repro.check.schedule import burst_components
+from repro.obs.bottleneck import base_layer
+from repro.obs.trace import BurstEvent, CommandEvent, SummaryCollector
+from repro.pim.arch import PIMArch
+from repro.sim.scheduler import command_deps
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.commands import Trace
+    from repro.faults.spec import FaultSpec
+    from repro.obs.trace import TimelineCollector
+    from repro.sim.engine import SimResult
+
+# edge labels: why a chain segment STARTS when it does
+EDGE_RESOURCE = "resource"      # previous burst on the same timeline
+EDGE_ISSUE = "issue"            # the command's controller issue window
+EDGE_DEPENDENCY = "dependency"  # a policy hazard edge's retire
+EDGE_ORIGIN = "origin"          # time zero — the chain's first segment
+
+# segment kinds
+SEG_BURST = "burst"             # a replayed burst on a resource timeline
+SEG_ISSUE = "issue"             # a controller window (issue charge or an
+#                                 op-less command's zero/issue-cost window)
+
+_CTRL = "ctrl"                  # pseudo-resource for SEG_ISSUE segments
+
+
+class ChainSegment(NamedTuple):
+    """One backward-walk step: a half-open window ``[start, end)`` of the
+    critical chain, the event occupying it, and the ``edge`` that made it
+    start exactly when the previous (earlier) segment finished."""
+
+    start: int
+    end: int
+    kind: str           # SEG_BURST | SEG_ISSUE
+    edge: str           # EDGE_RESOURCE | EDGE_ISSUE | EDGE_DEPENDENCY |
+    #                     EDGE_ORIGIN
+    cmd_index: int
+    layer: str
+    cmd_kind: str       # CMD value of the issuing command
+    resource: str       # burst resource value, or "ctrl" for issue windows
+    unit: int
+    bank: int           # -1 when not bank-attributed
+    burst_index: int    # stream position; -1 for issue windows
+    nbytes: int
+    transfer: int       # duration components (issue windows: all zero,
+    switch: int         # the window length is pure controller charge)
+    row: int
+    retry: int
+
+    @property
+    def duration(self) -> int:
+        return self.end - self.start
+
+
+@dataclasses.dataclass
+class CriticalPathReport:
+    """The walked chain plus the stream-wide context needed to read it:
+    per-resource/per-layer busy totals (for slack — work that ran OFF the
+    path), the arch (for what-if re-pricing) and free-form ``meta``."""
+
+    makespan: int
+    policy: str
+    arch: PIMArch
+    segments: list[ChainSegment]        # in time order, tiling [0, makespan]
+    busy_by_resource: dict[str, int]    # whole-stream busy cycles
+    busy_by_layer: dict[str, int]       # whole-stream, base_layer-collapsed
+    check: CheckReport
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- chain attribution ---------------------------------------------
+    @property
+    def chain_cycles(self) -> int:
+        return sum(s.duration for s in self.segments)
+
+    def by_resource(self) -> dict[str, int]:
+        """Critical cycles per resource ("ctrl" = controller issue)."""
+        out: dict[str, int] = {}
+        for s in self.segments:
+            out[s.resource] = out.get(s.resource, 0) + s.duration
+        return out
+
+    def by_layer(self) -> dict[str, int]:
+        """Critical cycles per model layer (phase labels collapsed)."""
+        out: dict[str, int] = {}
+        for s in self.segments:
+            key = base_layer(s.layer)
+            out[key] = out.get(key, 0) + s.duration
+        return out
+
+    def by_edge(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for s in self.segments:
+            out[s.edge] = out.get(s.edge, 0) + s.duration
+        return out
+
+    def components(self) -> dict[str, int]:
+        """Critical cycles split the verifier's way, plus the controller
+        issue share — sums to the makespan."""
+        out = {"transfer": 0, "switch": 0, "row": 0, "retry": 0,
+               "issue": 0}
+        for s in self.segments:
+            if s.kind == SEG_ISSUE:
+                out["issue"] += s.duration
+            else:
+                out["transfer"] += s.transfer
+                out["switch"] += s.switch
+                out["row"] += s.row
+                out["retry"] += s.retry
+        return out
+
+    def slack_by_resource(self) -> dict[str, int]:
+        """Busy cycles each resource spent OFF the critical path — work
+        that ran in parallel with (or was hidden behind) the chain.  Port
+        and core totals sum across units, so their slack measures
+        parallel work, not idle time."""
+        crit = self.by_resource()
+        return {res: busy - crit.get(res, 0)
+                for res, busy in sorted(self.busy_by_resource.items())}
+
+    # -- what-if estimators --------------------------------------------
+    def what_if(self, *, bus_scale: float | None = None,
+                free_retries: bool = False,
+                free_row_penalty: bool = False,
+                free_issue: bool = False) -> int:
+        """Estimated makespan after a hypothetical change, by shrinking
+        the chain's own segments: ``bus_scale=k`` re-prices critical bus
+        transfers at ``k×`` bandwidth, ``free_retries`` /
+        ``free_row_penalty`` / ``free_issue`` zero those components.  A
+        LOWER BOUND on the modified scenario's replayed makespan (see the
+        module docstring for why, and its caveat)."""
+        saved = 0
+        bw = self.arch.bus_bytes_per_cycle
+        for s in self.segments:
+            if s.kind == SEG_ISSUE:
+                if free_issue:
+                    saved += s.duration
+                continue
+            if bus_scale and s.resource == "bus" and s.nbytes:
+                faster = math.ceil(s.nbytes / (bw * bus_scale))
+                saved += s.transfer - faster
+            if free_retries:
+                saved += s.retry
+            if free_row_penalty:
+                saved += s.row
+        return self.makespan - saved
+
+    def what_if_table(self) -> dict[str, int]:
+        """The standard scenarios the bottleneck report prints."""
+        return {
+            "baseline": self.makespan,
+            "bus_2x": self.what_if(bus_scale=2),
+            "bus_4x": self.what_if(bus_scale=4),
+            "free_row_penalty": self.what_if(free_row_penalty=True),
+            "free_retries": self.what_if(free_retries=True),
+            "free_issue": self.what_if(free_issue=True),
+        }
+
+    # -- rendering ------------------------------------------------------
+    def format_table(self, top: int = 12) -> str:
+        """Aligned text: per-(layer, resource) critical share, largest
+        first, with the component split."""
+        agg: dict[tuple[str, str], dict[str, int]] = {}
+        for s in self.segments:
+            key = (base_layer(s.layer), s.resource)
+            row = agg.setdefault(key, {"cycles": 0, "transfer": 0,
+                                       "switch": 0, "row": 0, "retry": 0,
+                                       "segments": 0})
+            row["cycles"] += s.duration
+            row["transfer"] += s.transfer
+            row["switch"] += s.switch
+            row["row"] += s.row
+            row["retry"] += s.retry
+            row["segments"] += 1
+        ranked = sorted(agg.items(), key=lambda kv: -kv[1]["cycles"])
+        header = (f"{'layer':30s} {'resource':>8s} {'cycles':>10s} "
+                  f"{'share':>7s} {'xfer':>9s} {'row':>8s} {'retry':>7s} "
+                  f"{'segs':>5s}")
+        lines = [header, "-" * len(header)]
+        for (layer, res), row in ranked[:top]:
+            share = row["cycles"] / max(self.makespan, 1)
+            lines.append(
+                f"{layer[:30]:30s} {res:>8s} {row['cycles']:>10d} "
+                f"{share:>7.1%} {row['transfer'] + row['switch']:>9d} "
+                f"{row['row']:>8d} {row['retry']:>7d} "
+                f"{row['segments']:>5d}")
+        if len(ranked) > top:
+            rest = sum(r["cycles"] for _, r in ranked[top:])
+            lines.append(f"... and {len(ranked) - top} more rows "
+                         f"({rest} cycles, "
+                         f"{rest / max(self.makespan, 1):.1%})")
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        """JSON-friendly summary (the ``.critpath.json`` artifact body)."""
+        return {
+            "makespan": self.makespan,
+            "policy": self.policy,
+            "arch": self.arch.name,
+            "chain_segments": len(self.segments),
+            "by_resource": self.by_resource(),
+            "by_layer": self.by_layer(),
+            "by_edge": self.by_edge(),
+            "components": self.components(),
+            "slack_by_resource": self.slack_by_resource(),
+            "busy_by_resource": dict(sorted(
+                self.busy_by_resource.items())),
+            "what_if": self.what_if_table(),
+            "meta": {k: str(v) for k, v in self.meta.items()},
+        }
+
+    def write_json(self, path: "str | Path",
+                   extra: dict | None = None) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        doc = self.to_dict()
+        if extra:
+            doc.update(extra)
+        path.write_text(json.dumps(doc, indent=2) + "\n")
+        return path
+
+
+def _issue_segment(edge: str, start: int, end: int, i: int,
+                   layer: str, kind: str) -> ChainSegment:
+    return ChainSegment(start=start, end=end, kind=SEG_ISSUE, edge=edge,
+                        cmd_index=i, layer=layer, cmd_kind=kind,
+                        resource=_CTRL, unit=0, bank=-1, burst_index=-1,
+                        nbytes=0, transfer=0, switch=0, row=0, retry=0)
+
+
+def critical_path(trace: "Trace", arch: PIMArch, *,
+                  bursts: Sequence[BurstEvent] | None = None,
+                  commands: Sequence[CommandEvent] | None = None,
+                  collector: "TimelineCollector | None" = None,
+                  policy: str = "serial",
+                  faults: "FaultSpec | None" = None,
+                  result: "SimResult | None" = None,
+                  cross_check: bool = False,
+                  meta: dict[str, Any] | None = None
+                  ) -> CriticalPathReport:
+    """Walk the critical chain of one collected replay.
+
+    ``trace`` must be the trace the engine actually replayed (for a
+    structurally degraded point: the REMAPPED trace) — the policy's
+    hazard edges are re-derived from it.  Events come from ``collector``
+    or the explicit ``bursts`` / ``commands`` streams.  ``result`` (when
+    given) is reconciled against the stream makespan, and the returned
+    chain is asserted to sum exactly to it.  Raises
+    :class:`~repro.check.report.CheckError` with coded findings on an
+    incomplete or inconsistent stream."""
+    if collector is not None:
+        bursts = list(collector.bursts)
+        commands = list(collector.commands)
+    bursts = list(bursts or ())
+    commands = list(commands or ())
+    report = CheckReport(checker="critpath",
+                         context={"arch": arch.name, "policy": policy,
+                                  "bursts": len(bursts),
+                                  "commands": len(commands)})
+
+    if cross_check:
+        from repro.check.schedule import verify_stream
+        report.extend(verify_stream(bursts, commands, arch, faults))
+        report.raise_if_failed()
+
+    if not commands and trace:
+        report.add("critpath-empty", "stream",
+                   f"{len(trace)}-command trace but no command events — "
+                   "attach a TimelineCollector to the replay")
+        report.raise_if_failed()
+    if len(commands) != len(trace) \
+            or any(c.index != i for i, c in enumerate(commands)):
+        report.add("critpath-incomplete", "commands",
+                   f"{len(commands)} command events for a "
+                   f"{len(trace)}-command trace (or indices out of "
+                   "order) — the walker needs one event per command")
+        report.raise_if_failed()
+
+    start_of = [c.start for c in commands]
+    finish_of = [c.finish for c in commands]
+    makespan = max(finish_of, default=0)
+    if result is not None and result.makespan != makespan:
+        report.add("critpath-makespan", "makespan",
+                   f"SimResult.makespan={result.makespan} but the latest "
+                   f"command event retires at {makespan} — stream and "
+                   "result disagree")
+        report.raise_if_failed()
+
+    # full-stream prep: component split (verifier's recipe), per-timeline
+    # predecessor links, per-command burst ranges, busy totals
+    comps = burst_components(bursts, arch, faults)
+    pred: list[int] = [-1] * len(bursts)
+    last_on: dict[tuple[str, int], int] = {}
+    cmd_bursts: dict[int, list[int]] = {}
+    busy_res: dict[str, int] = {}
+    busy_layer: dict[str, int] = {}
+    for bi, b in enumerate(bursts):
+        key = (b.resource, b.unit)
+        prev = last_on.get(key)
+        if prev is not None:
+            pred[bi] = prev
+        last_on[key] = bi
+        cmd_bursts.setdefault(b.cmd_index, []).append(bi)
+        busy_res[b.resource] = busy_res.get(b.resource, 0) + b.duration
+        lk = base_layer(b.layer)
+        busy_layer[lk] = busy_layer.get(lk, 0) + b.duration
+        # a duration the component recipe cannot explain would silently
+        # skew the what-if split — fold the residual into transfer and
+        # leave a warning (cross_check=True turns it into a hard error)
+        t, sw, row, retry = comps[bi]
+        residual = b.duration - (t + sw + row + retry)
+        if residual:
+            comps[bi] = (t + residual, sw, row, retry)
+            report.add("critpath-components", f"burst[{bi}]",
+                       f"duration {b.duration} != derived "
+                       f"{t + sw + row + retry} — residual {residual} "
+                       "attributed to transfer", severity="warning")
+
+    deps = command_deps(trace, policy)
+    issue = arch.cmd_issue_cycles
+
+    def burst_seg(bi: int, edge: str) -> ChainSegment:
+        b = bursts[bi]
+        t, sw, row, retry = comps[bi]
+        return ChainSegment(start=b.start, end=b.start + b.duration,
+                            kind=SEG_BURST, edge=edge,
+                            cmd_index=b.cmd_index, layer=b.layer,
+                            cmd_kind=b.kind, resource=b.resource,
+                            unit=b.unit, bank=b.bank, burst_index=bi,
+                            nbytes=b.nbytes, transfer=t, switch=sw,
+                            row=row, retry=retry)
+
+    def broken(where: str, msg: str) -> None:
+        report.add("critpath-broken-chain", where, msg)
+        report.raise_if_failed()
+
+    rev: list[ChainSegment] = []
+    if makespan > 0:
+        # seed: the makespan-defining command (latest retire; ties break
+        # toward the later command — deterministic on both engines)
+        i = max(range(len(commands)),
+                key=lambda j: (finish_of[j], j))
+        state: tuple[str, int] = ("cmd", i)
+        t = makespan
+        while True:
+            mode, cur = state
+            if mode == "cmd":
+                # explain command `cur` retiring at `t`
+                cands = [bi for bi in cmd_bursts.get(cur, ())
+                         if bursts[bi].start + bursts[bi].duration == t]
+                if cands:
+                    state = ("burst", max(cands))
+                    continue
+                if cmd_bursts.get(cur):
+                    broken(f"cmd[{cur}]",
+                           f"window retires at {t} but no burst of the "
+                           "command finishes there — truncated stream?")
+                # op-less window [start, finish] — pure controller charge
+                # (compute kinds) or a zero-cost marker (transfers)
+                c = commands[cur]
+                rev.append(_issue_segment(
+                    EDGE_DEPENDENCY if c.start > 0 else EDGE_ORIGIN,
+                    c.start, t, cur, c.layer, c.kind))
+                t = c.start
+                if t == 0:
+                    break
+                state = ("dep", cur)
+                continue
+            if mode == "burst":
+                bi = cur
+                b = bursts[bi]
+                t = b.start
+                pj = pred[bi]
+                if pj >= 0 and bursts[pj].start + bursts[pj].duration == t:
+                    rev.append(burst_seg(bi, EDGE_RESOURCE))
+                    state = ("burst", pj)
+                    continue
+                if t == start_of[b.cmd_index]:
+                    rev.append(burst_seg(bi, EDGE_ISSUE))
+                    ready = t - issue
+                    if ready < 0:
+                        broken(f"burst[{bi}]",
+                               f"command issue at {t} implies a negative "
+                               f"ready time ({ready})")
+                    rev.append(_issue_segment(
+                        EDGE_DEPENDENCY if ready > 0 else EDGE_ORIGIN,
+                        ready, t, b.cmd_index,
+                        commands[b.cmd_index].layer,
+                        commands[b.cmd_index].kind))
+                    t = ready
+                    if t == 0:
+                        break
+                    state = ("dep", b.cmd_index)
+                    continue
+                pfin = (bursts[pj].start + bursts[pj].duration
+                        if pj >= 0 else "none")
+                broken(f"burst[{bi}] (cmd {b.cmd_index}, {b.resource} "
+                       f"{b.unit})",
+                       f"start {t} matches neither the command issue "
+                       f"({start_of[b.cmd_index]}) nor the timeline "
+                       f"predecessor's finish ({pfin}) — shifted or "
+                       "incomplete stream")
+            if mode == "dep":
+                # explain `t` as command `cur`'s ready time: the latest-
+                # retiring hazard edge (ties toward the later command)
+                cands = [j for j in deps[cur] if finish_of[j] == t]
+                if not cands:
+                    broken(f"cmd[{cur}]",
+                           f"ready time {t} matches no {policy} hazard "
+                           f"edge's retire (deps: "
+                           f"{[(j, finish_of[j]) for j in deps[cur]]})")
+                state = ("cmd", max(cands))
+
+    segments = list(reversed(rev))
+    # the reconciliation contract: the chain tiles [0, makespan] exactly
+    total = sum(s.duration for s in segments)
+    contiguous = all(a.end == b.start
+                     for a, b in zip(segments, segments[1:]))
+    if total != makespan or not contiguous \
+            or (segments and (segments[0].start != 0
+                              or segments[-1].end != makespan)):
+        report.add("critpath-broken-chain", "chain",
+                   f"walked chain sums to {total} over "
+                   f"[{segments[0].start if segments else 0}, "
+                   f"{segments[-1].end if segments else 0}] — expected "
+                   f"a contiguous tiling of [0, {makespan}]")
+        report.raise_if_failed()
+
+    return CriticalPathReport(makespan=makespan, policy=policy, arch=arch,
+                              segments=segments,
+                              busy_by_resource=busy_res,
+                              busy_by_layer=busy_layer,
+                              check=report, meta=dict(meta or {}))
+
+
+class ChainSummaryCollector(SummaryCollector):
+    """Bounded, foldable chain summary: everything
+    :class:`~repro.obs.trace.SummaryCollector` keeps, plus where the
+    critical chain ENDS — the makespan-defining command and, per resource
+    class, the latest burst finish with its layer.  A fold cannot carry
+    the exact segment chain (that needs the full replay-order stream), so
+    this is the documented approximation that rides
+    ``Experiment.sweep(workers=N)`` pools: ``merge`` keeps the latest
+    tail across forks, making the summary a per-sweep "what binds the
+    slowest point" digest."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        # (finish, index, layer, kind) of the latest-retiring command
+        self.tail: tuple[int, int, str, str] | None = None
+        # resource -> (latest burst finish, layer) — the chain's tail
+        # candidates per resource class
+        self.resource_tail: dict[str, tuple[int, str]] = {}
+
+    def on_burst(self, event: BurstEvent) -> None:
+        super().on_burst(event)
+        finish = event.start + event.duration
+        prev = self.resource_tail.get(event.resource)
+        if prev is None or finish >= prev[0]:
+            self.resource_tail[event.resource] = (finish, event.layer)
+
+    def on_command(self, event: CommandEvent) -> None:
+        super().on_command(event)
+        key = (event.finish, event.index, event.layer, event.kind)
+        if self.tail is None or key[:2] > self.tail[:2]:
+            self.tail = key
+
+    def merge(self, other: "SummaryCollector") -> None:
+        super().merge(other)
+        if isinstance(other, ChainSummaryCollector):
+            if other.tail is not None and (
+                    self.tail is None or other.tail[:2] > self.tail[:2]):
+                self.tail = other.tail
+            for res, (finish, layer) in other.resource_tail.items():
+                mine = self.resource_tail.get(res)
+                if mine is None or finish >= mine[0]:
+                    self.resource_tail[res] = (finish, layer)
+
+    def summary(self) -> dict:
+        """JSON-friendly digest of the folded state."""
+        out: dict[str, Any] = {
+            "makespan": self.makespan,
+            "bursts": self.bursts,
+            "commands": self.commands,
+            "resource_tails": {res: {"finish": f, "layer": layer}
+                               for res, (f, layer)
+                               in sorted(self.resource_tail.items())},
+        }
+        if self.tail is not None:
+            finish, index, layer, kind = self.tail
+            out["makespan_command"] = {"index": index, "layer": layer,
+                                       "kind": kind, "finish": finish}
+        return out

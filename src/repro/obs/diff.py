@@ -1,0 +1,291 @@
+"""Structural trace & counter diffing: what changed between two replays.
+
+Two replays of "the same" network rarely line up positionally — a
+different fusion plan re-partitions the trace, a degraded arch remaps
+banks, a policy reorders bursts — so this differ aligns by PROVENANCE
+instead: every burst is charged to an ``(aligned layer, command kind,
+bank)`` bucket, where the aligned layer is the model-layer name with the
+fusion-group tag stripped (:func:`align_layer`), so ``conv1`` in a
+``[0:5]`` group lines up with ``conv1`` in a ``[0:8]`` group.  Comparing
+the two bucket maps yields **added** work (buckets only the second replay
+has), **removed** work, and **shifted** work (same bucket, different
+cycles / burst count / bytes — e.g. a row-reuse change turning conflicts
+into hits), plus per-resource busy deltas and the makespan delta.
+
+This is the mechanical answer to "why is the searched plan cheaper than
+greedy" (the diff names the layers whose bus buckets shrank) and "where
+do 4 dead banks hurt" (the shifted buckets name the banks that absorbed
+remapped traffic).  A replay diffed against itself is :attr:`empty` —
+the identity the test-suite pins — and because the differ only needs
+event streams, it works on anything :mod:`repro.obs.perfetto` can
+re-import, including saved artifacts.
+
+Scheduling-only changes (``serial`` vs ``overlap``) move *when* work
+runs, not *what* runs: their diff has no entries but a nonzero makespan
+delta — read the makespan line, not the table.  Counter snapshots
+(:mod:`repro.obs.counters`) diff through :func:`diff_counters`, same
+added/removed/changed vocabulary over flat counter names.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import TYPE_CHECKING, Iterable, Mapping, NamedTuple, Sequence
+
+from repro.obs.bottleneck import base_layer
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.obs.trace import BurstEvent, CommandEvent
+
+
+def align_layer(label: str) -> str:
+    """The plan-independent alignment name for a command label: collapse
+    phases onto their layer (:func:`~repro.obs.bottleneck.base_layer`),
+    then drop the fusion-group tag — ``resnet18[0:5]:conv1:w`` and
+    ``resnet18[0:8]:conv1`` both align to ``conv1``.  Group-level phases
+    (``…:halo``) keep their phase name, aligning halo traffic across
+    partitions."""
+    label = base_layer(label)
+    parts: list[str] = []
+    depth = 0
+    cur: list[str] = []
+    for ch in label:
+        if ch == ":" and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+            continue
+        if ch == "[":
+            depth += 1
+        elif ch == "]":
+            depth = max(depth - 1, 0)
+        cur.append(ch)
+    parts.append("".join(cur))
+    return parts[-1] if len(parts) > 1 else label
+
+
+class DiffEntry(NamedTuple):
+    """One aligned bucket whose work differs between the two replays."""
+
+    status: str         # "added" | "removed" | "shifted"
+    layer: str          # aligned layer name (align_layer)
+    kind: str           # CMD value
+    bank: int           # -1: not bank-attributed
+    cycles_a: int
+    cycles_b: int
+    bursts_a: int
+    bursts_b: int
+    nbytes_a: int
+    nbytes_b: int
+
+    @property
+    def delta(self) -> int:
+        """Busy-cycle change, positive when the second replay does more."""
+        return self.cycles_b - self.cycles_a
+
+
+@dataclasses.dataclass
+class TraceDiff:
+    """The structural comparison of two replays."""
+
+    label_a: str
+    label_b: str
+    makespan_a: int
+    makespan_b: int
+    entries: list[DiffEntry]            # |delta|-descending
+    resource_a: dict[str, int]          # per-resource busy cycles, side A
+    resource_b: dict[str, int]
+
+    @property
+    def makespan_delta(self) -> int:
+        return self.makespan_b - self.makespan_a
+
+    @property
+    def empty(self) -> bool:
+        """True when the replays are indistinguishable to the differ: no
+        bucket changed AND the makespans agree (a pure re-schedule keeps
+        buckets identical but moves the makespan — not empty)."""
+        return not self.entries and self.makespan_delta == 0
+
+    def by_resource(self) -> dict[str, int]:
+        """Per-resource busy-cycle delta (B − A)."""
+        keys = sorted(set(self.resource_a) | set(self.resource_b))
+        return {k: self.resource_b.get(k, 0) - self.resource_a.get(k, 0)
+                for k in keys}
+
+    def by_layer(self) -> dict[str, int]:
+        """Per-aligned-layer cycle delta, largest |delta| first."""
+        agg: dict[str, int] = {}
+        for e in self.entries:
+            agg[e.layer] = agg.get(e.layer, 0) + e.delta
+        return dict(sorted(agg.items(), key=lambda kv: -abs(kv[1])))
+
+    def format_table(self, top: int = 12) -> str:
+        head = (f"{self.label_a} -> {self.label_b}: makespan "
+                f"{self.makespan_a} -> {self.makespan_b} "
+                f"({self.makespan_delta:+d} cycles)")
+        lines = [head]
+        res = {k: v for k, v in self.by_resource().items() if v}
+        if res:
+            lines.append("resource deltas: " + "  ".join(
+                f"{k} {v:+d}" for k, v in sorted(res.items())))
+        if not self.entries:
+            lines.append("no added/removed/shifted work"
+                         + ("" if self.makespan_delta else
+                            " — replays are structurally identical"))
+            return "\n".join(lines)
+        header = (f"{'status':>8s} {'layer':24s} {'kind':14s} "
+                  f"{'bank':>4s} {'cycles':>9s} {'->':>9s} "
+                  f"{'delta':>8s} {'KiB':>9s} {'->':>9s}")
+        lines += [header, "-" * len(header)]
+        for e in self.entries[:top]:
+            lines.append(
+                f"{e.status:>8s} {e.layer[:24]:24s} {e.kind:14s} "
+                f"{e.bank:>4d} {e.cycles_a:>9d} {e.cycles_b:>9d} "
+                f"{e.delta:>+8d} {e.nbytes_a / 1024:>9.1f} "
+                f"{e.nbytes_b / 1024:>9.1f}")
+        if len(self.entries) > top:
+            rest = sum(e.delta for e in self.entries[top:])
+            lines.append(f"... and {len(self.entries) - top} more "
+                         f"buckets ({rest:+d} cycles)")
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        """JSON-friendly body (the ``.plandiff.json`` artifact)."""
+        return {
+            "label_a": self.label_a,
+            "label_b": self.label_b,
+            "makespan_a": self.makespan_a,
+            "makespan_b": self.makespan_b,
+            "makespan_delta": self.makespan_delta,
+            "empty": self.empty,
+            "by_resource": self.by_resource(),
+            "by_layer": self.by_layer(),
+            "entries": [e._asdict() | {"delta": e.delta}
+                        for e in self.entries],
+        }
+
+    def write_json(self, path: "str | Path",
+                   extra: dict | None = None) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        doc = self.to_dict()
+        if extra:
+            doc.update(extra)
+        path.write_text(json.dumps(doc, indent=2) + "\n")
+        return path
+
+
+def _streams(side) -> tuple[Sequence["BurstEvent"],
+                            Sequence["CommandEvent"]]:
+    if isinstance(side, tuple):
+        bursts, commands = side
+        return list(bursts), list(commands)
+    return list(side.bursts), list(side.commands)
+
+
+def _buckets(bursts: Iterable["BurstEvent"]
+             ) -> tuple[dict[tuple[str, str, int], list[int]],
+                        dict[str, int]]:
+    """(aligned layer, kind, bank) → [cycles, bursts, nbytes], plus the
+    per-resource busy totals."""
+    agg: dict[tuple[str, str, int], list[int]] = {}
+    res: dict[str, int] = {}
+    for b in bursts:
+        key = (align_layer(b.layer), b.kind, b.bank)
+        slot = agg.setdefault(key, [0, 0, 0])
+        slot[0] += b.duration
+        slot[1] += 1
+        slot[2] += b.nbytes
+        res[b.resource] = res.get(b.resource, 0) + b.duration
+    return agg, res
+
+
+def diff_timelines(a, b, *, label_a: str = "a",
+                   label_b: str = "b") -> TraceDiff:
+    """Structurally diff two collected replays (collectors or explicit
+    ``(bursts, commands)`` stream pairs — e.g. a live collector against a
+    re-imported Perfetto artifact)."""
+    bursts_a, commands_a = _streams(a)
+    bursts_b, commands_b = _streams(b)
+    agg_a, res_a = _buckets(bursts_a)
+    agg_b, res_b = _buckets(bursts_b)
+
+    entries: list[DiffEntry] = []
+    for key in set(agg_a) | set(agg_b):
+        in_a, in_b = agg_a.get(key), agg_b.get(key)
+        if in_a == in_b:
+            continue
+        layer, kind, bank = key
+        ca, na, ba = in_a or (0, 0, 0)
+        cb, nb, bb = in_b or (0, 0, 0)
+        status = "shifted" if in_a and in_b else \
+            ("added" if in_b else "removed")
+        entries.append(DiffEntry(status=status, layer=layer, kind=kind,
+                                 bank=bank, cycles_a=ca, cycles_b=cb,
+                                 bursts_a=na, bursts_b=nb,
+                                 nbytes_a=ba, nbytes_b=bb))
+    entries.sort(key=lambda e: (-abs(e.delta), e.layer, e.kind, e.bank))
+
+    return TraceDiff(
+        label_a=label_a, label_b=label_b,
+        makespan_a=max((c.finish for c in commands_a), default=0),
+        makespan_b=max((c.finish for c in commands_b), default=0),
+        entries=entries, resource_a=res_a, resource_b=res_b)
+
+
+@dataclasses.dataclass
+class CounterDiff:
+    """Flat counter-snapshot comparison (same vocabulary as TraceDiff:
+    added / removed names and changed values)."""
+
+    label_a: str
+    label_b: str
+    added: dict[str, "int | float"]      # only in B
+    removed: dict[str, "int | float"]    # only in A
+    changed: dict[str, tuple["int | float", "int | float"]]  # (A, B)
+
+    @property
+    def empty(self) -> bool:
+        return not (self.added or self.removed or self.changed)
+
+    def format_table(self, top: int = 20) -> str:
+        if self.empty:
+            return (f"{self.label_a} -> {self.label_b}: counters "
+                    "identical")
+        lines = [f"{self.label_a} -> {self.label_b}:"]
+        ranked = sorted(self.changed.items(),
+                        key=lambda kv: -abs(kv[1][1] - kv[1][0]))
+        for name, (va, vb) in ranked[:top]:
+            lines.append(f"  {name}: {va} -> {vb} ({vb - va:+g})")
+        if len(ranked) > top:
+            lines.append(f"  ... and {len(ranked) - top} more changed")
+        for name in sorted(self.added):
+            lines.append(f"  + {name} = {self.added[name]}")
+        for name in sorted(self.removed):
+            lines.append(f"  - {name} (was {self.removed[name]})")
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        return {
+            "label_a": self.label_a,
+            "label_b": self.label_b,
+            "empty": self.empty,
+            "added": dict(sorted(self.added.items())),
+            "removed": dict(sorted(self.removed.items())),
+            "changed": {k: list(v) for k, v in
+                        sorted(self.changed.items())},
+        }
+
+
+def diff_counters(a: Mapping, b: Mapping, *, label_a: str = "a",
+                  label_b: str = "b") -> CounterDiff:
+    """Diff two counter snapshots (:class:`~repro.obs.counters.
+    CounterRegistry` instances, their ``snapshot()`` dicts, or any flat
+    mappings)."""
+    added = {k: b[k] for k in b if k not in a}
+    removed = {k: a[k] for k in a if k not in b}
+    changed = {k: (a[k], b[k]) for k in a if k in b and a[k] != b[k]}
+    return CounterDiff(label_a=label_a, label_b=label_b, added=added,
+                       removed=removed, changed=changed)

@@ -1,0 +1,236 @@
+"""Tests for the critical-path walker (:mod:`repro.obs.critpath`).
+
+The load-bearing contract: the backward walk over one collected replay
+produces a chain of segments that tiles ``[0, makespan]`` EXACTLY — the
+durations sum to the makespan, every attribution view (resource / layer /
+edge / component) re-partitions the same total, and BOTH engines' event
+streams yield the identical chain across the full policy × row-reuse
+grid.  What-if estimates are true lower bounds on the re-replayed
+modified scenario (the schedule is a longest path over a
+timing-independent DAG, so shrinking chain segments can only leave the
+real makespan at or above the estimate).  Incomplete streams fail with
+coded findings, never a silently wrong path; the bounded
+:class:`ChainSummaryCollector` digest folds across ``sweep(workers=N)``
+pools.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.check import CheckError
+from repro.experiment import Experiment
+from repro.faults.spec import FaultSpec
+from repro.obs import (ChainSummaryCollector, TimelineCollector,
+                       critical_path)
+from repro.pim.ppa import HEADLINE_CONFIGS, SYSTEMS, build_workload, trace_for
+from repro.sim.engine import simulate
+
+POLICIES = ("serial", "overlap", "row-aware")
+WORKLOAD = "ResNet18_First8Layers"
+
+
+def _system_trace(system="Fused16", workload=WORKLOAD):
+    gbuf, lbuf = HEADLINE_CONFIGS[system]
+    arch = SYSTEMS[system](gbuf_bytes=gbuf, lbuf_bytes=lbuf)
+    return trace_for(system, build_workload(workload), arch), arch
+
+
+def _walk(trace, arch, policy="row-aware", row_reuse=True, engine=simulate,
+          **kwargs):
+    coll = TimelineCollector()
+    result = engine(trace, arch, policy, row_reuse=row_reuse,
+                    collector=coll)
+    crit = critical_path(trace, arch, collector=coll, policy=policy,
+                         result=result, **kwargs)
+    return crit, result
+
+
+# ---------------------------------------------------------------------------
+# chain identity and exact reconciliation (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("row_reuse", (True, False))
+def test_chain_identical_across_engines(policy, row_reuse):
+    """Both engines' streams walk to the IDENTICAL chain at every grid
+    point, and the chain sums exactly to the (bit-identical) makespan."""
+    pytest.importorskip("numpy")
+    from repro.sim.engine_vec import simulate_columnar
+
+    trace, arch = _system_trace()
+    ref, r1 = _walk(trace, arch, policy, row_reuse)
+    col, r2 = _walk(trace, arch, policy, row_reuse,
+                    engine=simulate_columnar)
+    assert ref.segments == col.segments
+    assert ref.chain_cycles == ref.makespan == r1.makespan == r2.makespan
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_chain_tiles_the_makespan_exactly(policy):
+    """Contiguity + exact sum, with the repro.check stream verifier
+    cross-checking the walker's inputs (zero findings)."""
+    trace, arch = _system_trace()
+    crit, result = _walk(trace, arch, policy, cross_check=True)
+    segs = crit.segments
+    assert segs and segs[0].start == 0 and segs[-1].end == crit.makespan
+    assert all(a.end == b.start for a, b in zip(segs, segs[1:]))
+    assert sum(s.duration for s in segs) == crit.makespan == result.makespan
+    assert crit.check.ok
+
+
+def test_attribution_views_repartition_the_makespan():
+    """by_resource / by_layer / by_edge / components each re-partition
+    the same chain — every view sums back to the makespan."""
+    trace, arch = _system_trace()
+    crit, _ = _walk(trace, arch)
+    for view in (crit.by_resource(), crit.by_layer(), crit.by_edge(),
+                 crit.components()):
+        assert sum(view.values()) == crit.makespan
+    # slack = busy − chain time per resource: never negative (the chain
+    # cannot run a resource longer than it was busy); the single-unit
+    # shared bus additionally fits inside the makespan
+    slack = crit.slack_by_resource()
+    assert all(s >= 0 for s in slack.values()), slack
+    assert slack.get("bus", 0) <= crit.makespan
+
+
+# ---------------------------------------------------------------------------
+# what-if estimates are lower bounds on the re-replayed scenario
+# ---------------------------------------------------------------------------
+
+def test_what_if_estimates_lower_bound_replayed_makespans():
+    trace, arch = _system_trace()
+    crit, _ = _walk(trace, arch)
+
+    est_bus = crit.what_if(bus_scale=2)
+    fast = dataclasses.replace(
+        arch, bus_bytes_per_cycle=2 * arch.bus_bytes_per_cycle)
+    assert est_bus <= simulate(trace, fast, "row-aware",
+                               row_reuse=True).makespan
+
+    est_row = crit.what_if(free_row_penalty=True)
+    norow = dataclasses.replace(arch, row_overhead_cycles=0,
+                                row_precharge_cycles=0)
+    assert est_row <= simulate(trace, norow, "row-aware",
+                               row_reuse=True).makespan
+
+    est_issue = crit.what_if(free_issue=True)
+    noissue = dataclasses.replace(arch, cmd_issue_cycles=0)
+    assert est_issue <= simulate(trace, noissue, "row-aware",
+                                 row_reuse=True).makespan
+
+    # every table entry shrinks the chain (or leaves it alone) — never up
+    table = crit.what_if_table()
+    assert table["baseline"] == crit.makespan
+    assert all(cycles <= crit.makespan for cycles in table.values())
+    assert table["bus_4x"] <= table["bus_2x"] <= crit.makespan
+
+
+# ---------------------------------------------------------------------------
+# coded failures on bad streams — never a silently wrong path
+# ---------------------------------------------------------------------------
+
+def test_incomplete_streams_raise_coded_checkerror():
+    trace, arch = _system_trace()
+    coll = TimelineCollector()
+    simulate(trace, arch, "serial", collector=coll)
+
+    with pytest.raises(CheckError) as exc:
+        critical_path(trace, arch, bursts=coll.bursts, commands=[])
+    assert "critpath-empty" in exc.value.report.codes()
+
+    with pytest.raises(CheckError) as exc:
+        critical_path(trace, arch, bursts=coll.bursts,
+                      commands=coll.commands[:-1], policy="serial")
+    assert "critpath-incomplete" in exc.value.report.codes()
+
+
+def test_stream_result_disagreement_raises_coded_checkerror():
+    trace, arch = _system_trace()
+    coll = TimelineCollector()
+    r_overlap = simulate(trace, arch, "overlap", collector=coll)
+    r_serial = simulate(trace, arch, "serial")
+    assert r_serial.makespan != r_overlap.makespan  # hoisting helps here
+    with pytest.raises(CheckError) as exc:
+        critical_path(trace, arch, collector=coll, policy="overlap",
+                      result=r_serial)
+    assert "critpath-makespan" in exc.value.report.codes()
+
+
+# ---------------------------------------------------------------------------
+# bounded chain digest: folds across sweep(workers=N)
+# ---------------------------------------------------------------------------
+
+def test_chain_summary_collector_tracks_the_walkers_seed():
+    trace, arch = _system_trace()
+    full, summ = TimelineCollector(), ChainSummaryCollector()
+    result = simulate(trace, arch, "row-aware", collector=full)
+    simulate(trace, arch, "row-aware", collector=summ)
+    assert summ.makespan == result.makespan
+    finish, index, layer, kind = summ.tail
+    assert finish == result.makespan
+    # same seed the walker picks: latest retire, ties toward later index
+    assert index == max(range(len(full.commands)),
+                        key=lambda j: (full.commands[j].finish, j))
+    digest = summ.summary()
+    assert digest["makespan_command"]["index"] == index
+    assert digest["resource_tails"]
+
+    # a forked split-stream pair merges back to the single-pass digest
+    a, b = summ.fork(), summ.fork()
+    mid_b, mid_c = len(full.bursts) // 2, len(full.commands) // 2
+    for e in full.bursts[:mid_b]:
+        a.on_burst(e)
+    for e in full.bursts[mid_b:]:
+        b.on_burst(e)
+    for e in full.commands[:mid_c]:
+        a.on_command(e)
+    for e in full.commands[mid_c:]:
+        b.on_command(e)
+    a.merge(b)
+    assert a.summary() == digest
+
+
+def test_chain_summary_rides_parallel_sweeps():
+    exp = Experiment()
+    exp.collector = ChainSummaryCollector()
+    results = exp.sweep(workloads=WORKLOAD,
+                        systems=("Fused16", "Fused4"),
+                        backend="burst-sim", policy="row-aware",
+                        workers=2)
+    assert exp.stats["parallel_chunks"] > 0  # stayed on the pool path
+    digest = exp.collector.summary()
+    assert digest["makespan"] == max(r.cycles for r in results)
+    assert digest["resource_tails"]
+
+
+# ---------------------------------------------------------------------------
+# Experiment front-door
+# ---------------------------------------------------------------------------
+
+def test_experiment_critical_path_reconciles_with_run():
+    exp = Experiment()
+    run = exp.run(workload=WORKLOAD, system="Fused16",
+                  backend="burst-sim", policy="row-aware")
+    crit = exp.critical_path(workload=WORKLOAD, system="Fused16",
+                             policy="row-aware")
+    assert crit.chain_cycles == crit.makespan == run.cycles
+    assert crit.meta["workload"] == WORKLOAD
+    assert crit.meta["system"] == "Fused16"
+    assert crit.meta["policy"] == "row-aware"
+
+
+def test_experiment_critical_path_walks_the_degraded_replay():
+    """For a dead-bank point the walker must see the REMAPPED trace —
+    the chain reconciles with the degraded run, not the healthy one."""
+    exp = Experiment()
+    faults = FaultSpec(dead_banks=(0, 1))
+    degraded = exp.run(workload=WORKLOAD, system="Fused16",
+                       backend="burst-sim", policy="row-aware",
+                       verify=True, faults=faults)
+    crit = exp.critical_path(workload=WORKLOAD, system="Fused16",
+                             policy="row-aware", faults=faults,
+                             cross_check=True)
+    assert crit.chain_cycles == crit.makespan == degraded.cycles
+    assert crit.check.ok

@@ -1,0 +1,85 @@
+"""Property tests (hypothesis) for the critical-path walker.
+
+The walker's contract is structural, not workload-specific: for ANY
+trace the engine can replay, the backward walk over the collected event
+stream must produce a contiguous chain whose durations sum EXACTLY to
+the makespan — under every issue policy, both row-reuse modes, and all
+three system shapes.  Random interleavings of prefetchable fills with
+transfers/computes (the same strategy space as
+``tests/test_sim_properties.py``) exercise the hoisting edge cases a
+fixed CNN lowering never hits: zero-byte commands, back-to-back
+prefetches, single-command traces.
+
+Skips cleanly when hypothesis is not installed (see requirements-dev.txt).
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.commands import CMD, Command  # noqa: E402
+from repro.obs import TimelineCollector, critical_path  # noqa: E402
+from repro.pim.ppa import SYSTEMS  # noqa: E402
+from repro.sim.engine import simulate  # noqa: E402
+from repro.sim.scheduler import POLICIES  # noqa: E402
+
+KB = 1024
+
+
+def _prefetch(nbytes: int) -> Command:
+    return Command(CMD.PIM_BK2GBUF, "w", bytes_total=nbytes,
+                   prefetchable=True, note="weight fill")
+
+
+def _gather(nbytes: int) -> Command:
+    return Command(CMD.PIM_BK2GBUF, "act", bytes_total=nbytes)
+
+
+def _writeback(nbytes: int) -> Command:
+    return Command(CMD.PIM_GBUF2BK, "out", bytes_total=nbytes)
+
+
+def _lbuf(nbytes: int) -> Command:
+    return Command(CMD.PIM_BK2LBUF, "tile", bytes_total=nbytes,
+                   concurrent_cores=4)
+
+
+def _cmp(nbytes: int) -> Command:
+    return Command(CMD.PIMCORE_CMP, "conv", flag="CONV_BN", macs=64,
+                   bank_stream_bytes=nbytes, concurrent_cores=4,
+                   restream_bytes=nbytes // 2)
+
+
+def _gbcore(_: int) -> Command:
+    return Command(CMD.GBCORE_CMP, "pool", flag="POOL", alu_ops=32)
+
+
+_KINDS = (_prefetch, _gather, _writeback, _lbuf, _cmp, _gbcore)
+
+commands = st.builds(lambda mk, nbytes: mk(nbytes),
+                     st.sampled_from(_KINDS),
+                     st.sampled_from([0, 64, 2 * KB, 3 * KB, 9 * KB]))
+traces = st.lists(commands, min_size=1, max_size=24)
+
+
+@settings(max_examples=60, deadline=None)
+@given(trace=traces, policy=st.sampled_from(sorted(POLICIES)),
+       system=st.sampled_from(("AiM-like", "Fused16", "Fused4")),
+       row_reuse=st.booleans())
+def test_chain_sum_equals_makespan_on_random_traces(trace, policy, system,
+                                                    row_reuse):
+    arch = SYSTEMS[system](gbuf_bytes=2 * KB, lbuf_bytes=256)
+    coll = TimelineCollector()
+    result = simulate(trace, arch, policy, row_reuse=row_reuse,
+                      collector=coll)
+    crit = critical_path(trace, arch, collector=coll, policy=policy,
+                         result=result, cross_check=True)
+    segs = crit.segments
+    assert sum(s.duration for s in segs) == crit.makespan == result.makespan
+    if crit.makespan:
+        assert segs[0].start == 0 and segs[-1].end == crit.makespan
+        assert all(a.end == b.start for a, b in zip(segs, segs[1:]))
+    # the what-if table can only shrink the chain
+    assert all(v <= crit.makespan for v in crit.what_if_table().values())

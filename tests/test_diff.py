@@ -1,0 +1,145 @@
+"""Tests for structural trace & counter diffing (:mod:`repro.obs.diff`).
+
+The identities the differ pins: a replay diffed against itself is
+``empty``; a Perfetto export/import round trip is invisible to the
+differ (it works on anything :mod:`repro.obs.perfetto` re-imports); a
+pure re-schedule (same buckets, moved makespan) has NO entries but is
+NOT empty; and a real structural change (row-reuse toggle) surfaces as
+shifted ``(aligned layer, kind, bank)`` buckets with per-resource
+deltas.  ``align_layer`` strips fusion-group tags so the same model
+layer lines up across different fusion partitions — the mechanism that
+lets the greedy-vs-searched plan diff name layers instead of groups.
+"""
+
+import pytest
+
+from repro.experiment import EvalSpec, Experiment
+from repro.obs import (TimelineCollector, align_layer, diff_counters,
+                       diff_timelines)
+from repro.obs.perfetto import events_from_trace_json, trace_event_json
+from repro.pim.ppa import HEADLINE_CONFIGS, SYSTEMS, build_workload, trace_for
+from repro.sim.engine import simulate
+
+WORKLOAD = "ResNet18_First8Layers"
+
+
+def _system_trace(system="Fused16", workload=WORKLOAD):
+    gbuf, lbuf = HEADLINE_CONFIGS[system]
+    arch = SYSTEMS[system](gbuf_bytes=gbuf, lbuf_bytes=lbuf)
+    return trace_for(system, build_workload(workload), arch), arch
+
+
+def _collected(policy="row-aware", row_reuse=True):
+    trace, arch = _system_trace()
+    coll = TimelineCollector()
+    result = simulate(trace, arch, policy, row_reuse=row_reuse,
+                      collector=coll)
+    return coll, result
+
+
+# ---------------------------------------------------------------------------
+# align_layer: the provenance key
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("label,want", [
+    ("resnet18[0:5]:conv1:w", "conv1"),     # phase stripped, group dropped
+    ("resnet18[0:8]:conv1", "conv1"),       # different partition, same key
+    ("resnet18[0:5]:halo", "halo"),         # group phases keep their name
+    ("conv1", "conv1"),                     # bare labels pass through
+])
+def test_align_layer(label, want):
+    assert align_layer(label) == want
+
+
+def test_align_layer_matches_across_partitions():
+    assert align_layer("resnet18[0:5]:conv1:w") \
+        == align_layer("resnet18[0:8]:conv1")
+
+
+# ---------------------------------------------------------------------------
+# diff identities
+# ---------------------------------------------------------------------------
+
+def test_self_diff_is_empty():
+    coll, _ = _collected()
+    d = diff_timelines(coll, coll, label_a="x", label_b="x")
+    assert d.empty
+    assert not d.entries and d.makespan_delta == 0
+    assert all(v == 0 for v in d.by_resource().values())
+    assert "structurally identical" in d.format_table()
+
+
+def test_perfetto_round_trip_diff_is_empty():
+    """The differ works on re-imported artifacts: export the stream to
+    Chrome trace_event JSON, re-import, diff against the live collector."""
+    coll, _ = _collected()
+    doc = trace_event_json(coll, label="round-trip")
+    bursts, commands = events_from_trace_json(doc)
+    d = diff_timelines(coll, (bursts, commands))
+    assert d.empty
+
+
+def test_pure_reschedule_has_no_entries_but_is_not_empty():
+    """Same buckets, moved makespan — scheduling-only changes must not
+    read as 'identical' (the makespan line carries the difference)."""
+    coll, _ = _collected()
+    shifted = [c._replace(start=c.start + 7, finish=c.finish + 7)
+               for c in coll.commands]
+    d = diff_timelines(coll, (list(coll.bursts), shifted))
+    assert not d.entries
+    assert d.makespan_delta == 7
+    assert not d.empty
+
+
+def test_row_reuse_toggle_surfaces_as_shifted_buckets():
+    on, r_on = _collected(row_reuse=True)
+    off, r_off = _collected(row_reuse=False)
+    d = diff_timelines(on, off, label_a="reuse", label_b="no-reuse")
+    assert not d.empty
+    assert d.makespan_a == r_on.makespan and d.makespan_b == r_off.makespan
+    assert d.makespan_delta == r_off.makespan - r_on.makespan > 0
+    # the work is the same commands on the same banks — only durations
+    # move (row penalties), so the buckets shift rather than add/remove
+    assert d.entries and all(e.status == "shifted" for e in d.entries)
+    assert sum(d.by_resource().values()) \
+        == sum(e.delta for e in d.entries) > 0
+    # entries rank by |delta| and serialize with their deltas
+    deltas = [abs(e.delta) for e in d.entries]
+    assert deltas == sorted(deltas, reverse=True)
+    doc = d.to_dict()
+    assert doc["empty"] is False
+    assert doc["entries"][0]["delta"] == d.entries[0].delta
+
+
+# ---------------------------------------------------------------------------
+# counter diffs
+# ---------------------------------------------------------------------------
+
+def test_counter_diff_vocabulary():
+    a = {"sim.row_hits": 10, "sim.row_conflicts": 4, "cache.hits": 2}
+    b = {"sim.row_hits": 25, "sim.row_conflicts": 4, "sweep.points": 8}
+    d = diff_counters(a, b, label_a="before", label_b="after")
+    assert not d.empty
+    assert d.added == {"sweep.points": 8}
+    assert d.removed == {"cache.hits": 2}
+    assert d.changed == {"sim.row_hits": (10, 25)}
+    assert "sim.row_hits: 10 -> 25 (+15)" in d.format_table()
+    assert diff_counters(a, a).empty
+
+
+# ---------------------------------------------------------------------------
+# Experiment front-door
+# ---------------------------------------------------------------------------
+
+def test_experiment_diff_labels_name_the_differing_fields():
+    exp = Experiment()
+    common = dict(workload=WORKLOAD, system="Fused16",
+                  backend="burst-sim", policy="row-aware")
+    d = exp.diff(EvalSpec(row_reuse=True, **common),
+                 EvalSpec(row_reuse=False, **common))
+    assert d.label_a == "row_reuse=True"
+    assert d.label_b == "row_reuse=False"
+    assert not d.empty
+    # the diff's makespans are the runs' cycles — same replay semantics
+    assert d.makespan_a == exp.run(row_reuse=True, **common).cycles
+    assert d.makespan_b == exp.run(row_reuse=False, **common).cycles
